@@ -1,0 +1,21 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+
+def timeit(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    """Return (microseconds per call, last result)."""
+    out = fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+def emit(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

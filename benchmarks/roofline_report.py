@@ -1,0 +1,108 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json and prints, per (arch x shape x mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and a one-line improvement note.  Also writes the markdown table used in
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Optional
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, RooflineTerms
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+NOTES = {
+    ("train", "memory"): "shard activations over 'model' (sequence parallel) "
+                         "+ tighter remat policy",
+    ("train", "compute"): "near roofline for compute; raise per-chip batch or "
+                          "overlap collectives",
+    ("train", "collective"): "reduce-scatter grads instead of all-reduce; "
+                             "overlap FSDP all-gathers with compute",
+    ("prefill", "memory"): "flash-attention kernel (fused QK^T+softmax+PV) "
+                           "removes score-matrix HBM traffic",
+    ("prefill", "compute"): "compute-bound as expected for prefill",
+    ("prefill", "collective"): "sequence-parallel attention (ring) to cut "
+                               "activation all-gathers",
+    ("decode", "memory"): "decode is weight/KV-bandwidth-bound by nature; "
+                          "quantize KV cache or batch wider",
+    ("decode", "collective"): "keep KV cache fully resident per shard; avoid "
+                              "cache resharding between steps",
+    ("decode", "compute"): "unusual: check for redundant cache reshuffles",
+}
+
+
+def load_records(mesh: Optional[str] = None) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "skipped" in r:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if "__" in os.path.basename(path) and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def to_terms(r: dict) -> RooflineTerms:
+    return RooflineTerms(
+        flops=r["flops_per_device"],
+        hbm_bytes=r["hbm_bytes_per_device"],
+        collective_bytes=r["collective_bytes_per_device"],
+        model_flops_total=r["model_flops_total"],
+        chips=r["chips"],
+    )
+
+
+def kind_of(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def markdown_table(recs: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+        "dominant | model/HLO flops | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = to_terms(r)
+        note = NOTES.get((kind_of(r["shape"]), t.dominant), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{t.t_compute*1e3:.2f} | {t.t_memory*1e3:.2f} | "
+            f"{t.t_collective*1e3:.2f} | **{t.dominant}** | "
+            f"{t.useful_ratio:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def run(write_md: bool = True) -> List[dict]:
+    recs = load_records(mesh="16x16")
+    if not recs:
+        emit("roofline/none", 0.0, "no dry-run artifacts found")
+        return []
+    worst = None
+    for r in recs:
+        t = to_terms(r)
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"dom={t.dominant};t_comp_ms={t.t_compute*1e3:.2f};"
+             f"t_mem_ms={t.t_memory*1e3:.2f};t_coll_ms={t.t_collective*1e3:.2f};"
+             f"useful={t.useful_ratio:.2f}")
+        score = t.step_time / max(t.t_compute, 1e-12)
+        if worst is None or score > worst[0]:
+            worst = (score, r["arch"], r["shape"])
+    emit("roofline/worst_fraction", 0.0,
+         f"{worst[1]}x{worst[2]};imbalance={worst[0]:.1f}")
+    if write_md:
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/roofline_16x16.md", "w") as f:
+            f.write(markdown_table(recs) + "\n")
+    return recs

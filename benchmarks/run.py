@@ -1,0 +1,46 @@
+"""Benchmark harness -- one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 roofline kernels]
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sel = set(sys.argv[1:])
+
+    def want(name: str) -> bool:
+        return not sel or name in sel
+
+    print("name,us_per_call,derived")
+    if want("fig1"):
+        from . import fig1_stepsizes
+        fig1_stepsizes.run()
+    if want("fig2"):
+        from . import fig2_piag
+        fig2_piag.run()
+    if want("fig3"):
+        from . import fig3_delays
+        fig3_delays.run()
+    if want("fig4"):
+        from . import fig4_bcd
+        fig4_bcd.run()
+    if want("kernels"):
+        from . import kernel_bench
+        kernel_bench.run()
+    if want("ext"):
+        from . import ext_lipschitz
+        ext_lipschitz.run()
+    if want("wallclock"):
+        from . import ext_wallclock
+        ext_wallclock.run()
+    if want("roofline"):
+        from . import roofline_report
+        roofline_report.run()
+
+
+if __name__ == "__main__":
+    main()

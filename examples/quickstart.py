@@ -1,0 +1,54 @@
+"""Quickstart: delay-adaptive PIAG on l1-regularized logistic regression.
+
+Reproduces the paper's core result in ~30 seconds on CPU: on the SAME
+asynchronous event trace, the delay-adaptive step-sizes (Eqs. 13-14) converge
+substantially faster than the best known fixed step-size, because they spend
+the full step-size budget gamma' whenever the system happens to be fast.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (Adaptive1, Adaptive2, L1, SunDengFixed, make_logreg,
+                        run_piag_logreg, simulate_parameter_server)
+
+
+def main() -> None:
+    # synthetic rcv1-like problem (offline container), 10 workers as in §4.1
+    prob = make_logreg(n_samples=2000, dim=400, n_workers=10,
+                       sparse_like=True, lam1=1e-5, lam2=1e-4, seed=0)
+    print(f"logistic regression: {prob.A.shape[0]} samples, dim {prob.dim}, "
+          f"L={prob.L:.3f}")
+
+    # one shared event trace from heterogeneous workers with stragglers
+    trace = simulate_parameter_server(10, 3000, seed=1)
+    print(f"simulated {trace.n_events} write events, max delay "
+          f"{trace.max_delay()} (measured on-line, never assumed)")
+
+    gamma_prime = 0.99 / prob.L
+    prox = L1(lam=prob.lam1)
+    policies = {
+        "Adaptive 1 (Eq. 13)": Adaptive1(gamma_prime=gamma_prime, alpha=0.9),
+        "Adaptive 2 (Eq. 14)": Adaptive2(gamma_prime=gamma_prime),
+        "Fixed (Sun/Deng)": SunDengFixed(gamma_prime=gamma_prime,
+                                         tau_bound=trace.max_delay()),
+    }
+
+    results = {}
+    for name, pol in policies.items():
+        res = run_piag_logreg(prob, trace, pol, prox)
+        results[name] = np.asarray(res.objective)
+        print(f"{name:22s} P(x_0)={results[name][0]:.4f} -> "
+              f"P(x_K)={results[name][-1]:.4f}  "
+              f"sum(gamma)={np.sum(res.gammas):.1f}")
+
+    target = results["Fixed (Sun/Deng)"][-1]
+    for name in list(policies)[:2]:
+        hit = int(np.argmax(results[name] <= target))
+        print(f"{name} reaches the fixed policy's final objective after "
+              f"{hit}/{trace.n_events} events "
+              f"({hit / trace.n_events:.0%} of the budget)")
+
+
+if __name__ == "__main__":
+    main()

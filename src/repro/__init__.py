@@ -1,0 +1,17 @@
+"""repro: Delay-Adaptive Step-sizes for Asynchronous Learning (Wu et al.,
+ICML 2022) as a production-grade multi-pod JAX framework.
+
+Subpackages:
+  core        the paper: step-size principle (8), policies, PIAG, Async-BCD,
+              delay tracking, event engine, threaded runtimes, theory checks
+  models      dense / MoE / SSM / hybrid / audio / VLM substrate
+  optim       optimizers + DelayAdaptiveOptimizer composition
+  data        deterministic synthetic pipelines
+  checkpoint  npz pytree checkpointing
+  kernels     Pallas TPU kernels + jnp oracles
+  serving     continuous-batching scheduler
+  configs     assigned architectures + input shapes
+  launch      mesh / sharding planner / dry-run / roofline / trainers
+"""
+
+__version__ = "1.0.0"

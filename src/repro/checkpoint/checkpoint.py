@@ -1,0 +1,70 @@
+"""Minimal npz pytree checkpointing (no orbax in this environment).
+
+Saves a flattened pytree (params + optimizer + step-size state) with its
+treedef recorded as a JSON keypath list, plus arbitrary JSON metadata.
+Atomic via write-to-temp + rename.  Works for any pytree of arrays/scalars.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_key_str(k) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiubc":  # ml_dtypes (bf16, f8, ...) -> f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_checkpoint(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __metadata__=json.dumps(metadata or {}), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__metadata__"]))
+        flat = {k: z[k] for k in z.files if k != "__metadata__"}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [SEP.join(_key_str(k) for k in p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    leaves = []
+    for key, ref in zip(paths, leaves_like):
+        arr = flat[key]
+        if hasattr(ref, "dtype"):
+            arr = arr.astype(ref.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_config(arch_id)`` for every assigned arch."""
+from importlib import import_module
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "yi-34b": "repro.configs.yi_34b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "nemotron-4-15b": "repro.configs.nemotron4_15b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen2.5-32b": "repro.configs.qwen2p5_32b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}")
+    cfg = import_module(_MODULES[arch_id]).get_config()
+    cfg.validate()
+    return cfg
+
+
+from .shapes import SHAPES, InputShape, applicable, input_specs  # noqa: E402
+
+__all__ = ["ARCH_IDS", "get_config", "SHAPES", "InputShape", "applicable",
+           "input_specs"]

@@ -1,0 +1,101 @@
+"""The four assigned input shapes + abstract input specs for the dry-run.
+
+  train_4k       seq=  4,096  global_batch=256  (training)
+  prefill_32k    seq= 32,768  global_batch= 32  (inference-prefill)
+  decode_32k     seq= 32,768  global_batch=128  (inference-decode: ONE new
+                                                  token vs a seq-long cache)
+  long_500k      seq=524,288  global_batch=  1  (long-context decode;
+                                                  sub-quadratic attention
+                                                  required -> sliding-window
+                                                  ring cache / SSM state)
+
+``input_specs`` returns ShapeDtypeStructs only -- weak-type-correct,
+shardable, no device allocation -- for the step each shape lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import make_cache
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str  # train | prefill | decode | decode_long
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode_long"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether (arch, shape) runs, and the reason when skipped."""
+    if shape.kind in ("decode", "decode_long") and not cfg.has_decode:
+        return False, "encoder-only: no decode step (DESIGN.md §6)"
+    return True, ""
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """Attention window used for the decode shapes.
+
+    long_500k requires sub-quadratic attention: SSM archs carry no cache at
+    all; attention archs run the sliding-window variant (ring cache of
+    ``long_context_window``).  decode_32k keeps native behaviour."""
+    if shape.kind == "decode_long" and cfg.family != "ssm":
+        return (cfg.sliding_window if cfg.sliding_window
+                else cfg.long_context_window)
+    return cfg.sliding_window
+
+
+def cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.kind == "decode_long" and cfg.family != "ssm":
+        w = decode_window(cfg, shape)
+        return int(w)
+    return shape.seq
+
+
+def uses_ring(cfg: ModelConfig, shape: InputShape) -> bool:
+    return shape.kind == "decode_long" and cfg.family != "ssm"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, object]:
+    """Abstract inputs for the step the shape lowers."""
+    B, S = shape.global_batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, object] = {}
+        if cfg.embed_inputs:
+            batch["embeds"] = _sds((B, S, cfg.d_model), cfg.cdtype)
+        else:
+            batch["tokens"] = _sds((B, S), i32)
+        if cfg.rope == "mrope":
+            batch["positions"] = _sds((3, B, S), i32)
+        if shape.kind == "train":
+            batch["targets"] = _sds((B, S), i32)
+        return {"batch": batch}
+
+    # decode shapes: ONE new token against a cache
+    ring = uses_ring(cfg, shape)
+    clen = cache_len(cfg, shape)
+    cache = jax.eval_shape(lambda: make_cache(cfg, B, clen, ring=ring))
+    return {
+        "cache": cache,
+        "token": _sds((B, 1), i32),
+        "pos": _sds((), i32),
+    }

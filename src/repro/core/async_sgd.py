@@ -1,0 +1,106 @@
+"""Delay-adaptive Asynchronous (Prox-)SGD -- the paper's §5 extension, used
+as the pod-scale trainer's update rule.
+
+PIAG's gradient table costs n x |params| memory, which is infeasible for the
+multi-billion-parameter assigned architectures (see DESIGN.md §3).  The
+table-free variant applies each arriving (delayed) gradient directly:
+
+    gamma_k   chosen delay-adaptively from tau_k   (core.stepsize)
+    x_{k+1} = prox_{gamma_k R}(x_k - gamma_k d_k)
+
+where ``d_k`` is the (optionally momentum-filtered, weight-decayed) update
+direction built from the stale gradient.  The step-size principle (8) is
+identical; only the gradient estimator changes.  The same state is what
+``launch/train.py`` lowers for the multi-pod dry-run, so the compiled HLO
+contains the paper's delay-tracking + adaptive-gamma scalar program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .prox import ProxOp, Zero
+from .stepsize import StepsizePolicy, StepsizeState
+
+Pytree = Any
+
+__all__ = ["AsyncOptState", "AsyncSGD", "tree_scale_add"]
+
+
+def tree_scale_add(x: Pytree, y: Pytree, alpha) -> Pytree:
+    return jax.tree_util.tree_map(lambda a, b: a + alpha * b, x, y)
+
+
+class AsyncOptState(NamedTuple):
+    step: jnp.ndarray           # master write-event counter k (int32)
+    ss: StepsizeState           # delay-adaptive step-size state
+    momentum: Optional[Pytree]  # momentum buffer (None if beta == 0)
+    worker_stamp: jnp.ndarray   # (n_workers,) iterate version each worker read
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncSGD:
+    """Delay-adaptive async SGD/momentum with composite prox step.
+
+    ``lr_scale`` rescales the emitted gamma (the theory's gamma' already
+    encodes 1/L; for deep nets L is unknown so gamma' is a tuned base LR and
+    the *relative* delay adaptation is what the paper contributes).
+    """
+
+    policy: StepsizePolicy
+    prox: ProxOp = Zero()
+    beta: float = 0.0            # momentum
+    weight_decay: float = 0.0    # decoupled weight decay
+    lr_scale: float = 1.0
+    n_workers: int = 1
+    horizon: int = 4096
+
+    def init(self, params: Pytree) -> AsyncOptState:
+        mom = None
+        if self.beta > 0:
+            mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AsyncOptState(
+            step=jnp.zeros((), jnp.int32),
+            ss=self.policy.init(self.horizon),
+            momentum=mom,
+            worker_stamp=jnp.zeros((self.n_workers,), jnp.int32),
+        )
+
+    def observe(self, state: AsyncOptState, worker: jnp.ndarray) -> Tuple[jnp.ndarray, AsyncOptState]:
+        """Algorithm-1-style delay bookkeeping: the arriving gradient from
+        ``worker`` was computed at version worker_stamp[worker]; the worker
+        then picks up the new iterate (version k+1)."""
+        tau = state.step - state.worker_stamp[worker]
+        stamps = state.worker_stamp.at[worker].set(state.step + 1)
+        return tau, state._replace(worker_stamp=stamps)
+
+    def apply(self, params: Pytree, grads: Pytree, state: AsyncOptState,
+              tau: jnp.ndarray) -> Tuple[Pytree, AsyncOptState, jnp.ndarray]:
+        """One master write event: delay-adaptive gamma, momentum, prox."""
+        gamma, ss = self.policy.step(state.ss, tau)
+        lr = self.lr_scale * gamma
+        if self.beta > 0:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: self.beta * m + g, state.momentum, grads)
+            direction = mom
+        else:
+            mom = state.momentum
+            direction = grads
+        if self.weight_decay > 0:
+            direction = jax.tree_util.tree_map(
+                lambda d, p: d + self.weight_decay * p, direction, params)
+        shifted = jax.tree_util.tree_map(lambda p, d: p - lr * d, params, direction)
+        new_params = self.prox.prox(shifted, lr)
+        new_state = AsyncOptState(step=state.step + 1, ss=ss, momentum=mom,
+                                  worker_stamp=state.worker_stamp)
+        return new_params, new_state, gamma
+
+    def update(self, params: Pytree, grads: Pytree, state: AsyncOptState,
+               worker: jnp.ndarray) -> Tuple[Pytree, AsyncOptState, jnp.ndarray, jnp.ndarray]:
+        """observe + apply in one call (what the trainer jits)."""
+        tau, state = self.observe(state, worker)
+        params, state, gamma = self.apply(params, grads, state, tau)
+        return params, state, gamma, tau

@@ -1,0 +1,174 @@
+"""Event-driven asynchrony simulator.
+
+JAX/XLA is a single-controller SPMD runtime: a compiled program step is
+synchronous by construction.  To study the paper's *asynchronous* algorithms
+at pod scale we therefore separate mechanism from policy:
+
+* this module simulates the *event structure* of an asynchronous system --
+  which worker's gradient arrives at each master write event, and how stale
+  it is -- from per-worker service-time models (stragglers, heterogeneous
+  speeds, network jitter);
+* the solvers (core.piag / core.bcd / core.async_sgd) consume the resulting
+  integer event trace inside a fully-jitted ``lax.scan``, computing real
+  gradients and real delay-adaptive step-sizes.
+
+Because the paper measures delays in write events (not wall time), a solver
+driven by a simulated event trace is *exactly* the paper's algorithm for that
+realization of worker timings.  ``core.runtime`` provides genuinely-threaded
+execution for the paper-scale experiments; this module provides determinism
+and scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["WorkerModel", "EventTrace", "simulate_parameter_server", "simulate_shared_memory"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerModel:
+    """Lognormal service time with occasional straggler events.
+
+    mean:        mean compute time (arbitrary units).
+    sigma:       lognormal shape (jitter).
+    p_straggle:  probability a task is hit by a straggler event.
+    straggle_x:  multiplicative slowdown of straggler tasks.
+    """
+
+    mean: float = 1.0
+    sigma: float = 0.25
+    p_straggle: float = 0.0
+    straggle_x: float = 10.0
+
+    def sample(self, rng: np.random.Generator) -> float:
+        # lognormal with E[t] = mean
+        mu = np.log(self.mean) - 0.5 * self.sigma**2
+        t = float(rng.lognormal(mu, self.sigma))
+        if self.p_straggle > 0 and rng.random() < self.p_straggle:
+            t *= self.straggle_x
+        return t
+
+
+def heterogeneous_workers(n: int, spread: float = 2.0, seed: int = 0,
+                          p_straggle: float = 0.02, straggle_x: float = 8.0) -> list:
+    """n workers with mean speeds log-spaced over [1, spread] (the paper's
+    Figure 3 shows per-worker max delays varying ~2.4x)."""
+    rng = np.random.default_rng(seed)
+    means = np.geomspace(1.0, spread, n)
+    rng.shuffle(means)
+    return [WorkerModel(mean=float(m), p_straggle=p_straggle, straggle_x=straggle_x)
+            for m in means]
+
+
+class EventTrace(NamedTuple):
+    """One master write event per row.
+
+    worker:   (K,) int32 -- which worker's gradient is consumed at event k.
+    read_at:  (K,) int32 -- iterate version that worker had read.
+    tau:      (K,) int32 -- staleness of *that* worker's gradient, k - read_at.
+    tau_max:  (K,) int32 -- max staleness across the whole gradient table at k
+                            (the tau_k that the PIAG analysis uses).
+    t_wall:   (K,) float64 -- simulated wall-clock time of the event.
+    """
+
+    worker: np.ndarray
+    read_at: np.ndarray
+    tau: np.ndarray
+    tau_max: np.ndarray
+    t_wall: np.ndarray
+
+    @property
+    def n_events(self) -> int:
+        return int(self.worker.shape[0])
+
+    def max_delay(self) -> int:
+        return int(self.tau_max.max(initial=0))
+
+
+def simulate_parameter_server(
+    n_workers: int,
+    n_events: int,
+    workers: Optional[Sequence[WorkerModel]] = None,
+    seed: int = 0,
+) -> EventTrace:
+    """Simulate Algorithm 1's event structure with |R| = 1.
+
+    Each worker computes on the newest iterate it was handed; when it returns,
+    the master performs one write event (k += 1) and hands the worker the new
+    iterate.  Staleness of worker i's table entry at event k is k - s[i],
+    where s[i] is the version it last read -- the paper's delay definition.
+    """
+    if workers is None:
+        workers = heterogeneous_workers(n_workers, seed=seed)
+    assert len(workers) == n_workers
+    rng = np.random.default_rng(seed + 1)
+
+    # (completion_time, tiebreak, worker, version_read)
+    heap = []
+    for i, w in enumerate(workers):
+        heapq.heappush(heap, (w.sample(rng), i, i, 0))
+    s = np.zeros((n_workers,), np.int64)  # version each table entry was computed on
+
+    worker = np.zeros((n_events,), np.int32)
+    read_at = np.zeros((n_events,), np.int32)
+    tau = np.zeros((n_events,), np.int32)
+    tau_max = np.zeros((n_events,), np.int32)
+    t_wall = np.zeros((n_events,), np.float64)
+
+    tie = n_workers
+    for k in range(n_events):
+        t, _, i, v = heapq.heappop(heap)
+        s[i] = v
+        worker[k] = i
+        read_at[k] = v
+        tau[k] = k - v
+        tau_max[k] = k - int(s.min())
+        t_wall[k] = t
+        # master writes x_{k+1} (version k+1) and hands it to worker i
+        heapq.heappush(heap, (t + workers[i].sample(rng), tie, i, k + 1))
+        tie += 1
+    return EventTrace(worker, read_at, tau, tau_max, t_wall)
+
+
+def simulate_shared_memory(
+    n_workers: int,
+    n_events: int,
+    n_blocks: int,
+    workers: Optional[Sequence[WorkerModel]] = None,
+    seed: int = 0,
+) -> "EventTrace":
+    """Simulate Algorithm 2's event structure.
+
+    Workers repeatedly: read the shared iterate (recording the counter s),
+    compute a block gradient, then perform one atomic write event.  The block
+    index is sampled uniformly by the solver (kept out of the trace so the
+    trace is model-independent); tau_k = k - s_{i_k}.
+    """
+    if workers is None:
+        workers = heterogeneous_workers(n_workers, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+
+    heap = []
+    for i, w in enumerate(workers):
+        heapq.heappush(heap, (w.sample(rng), i, i, 0))
+
+    worker = np.zeros((n_events,), np.int32)
+    read_at = np.zeros((n_events,), np.int32)
+    tau = np.zeros((n_events,), np.int32)
+    t_wall = np.zeros((n_events,), np.float64)
+
+    tie = n_workers
+    for k in range(n_events):
+        t, _, i, s_read = heapq.heappop(heap)
+        worker[k] = i
+        read_at[k] = s_read
+        tau[k] = k - s_read
+        t_wall[k] = t
+        # worker i re-reads immediately after its write (version k+1)
+        heapq.heappush(heap, (t + workers[i].sample(rng), tie, i, k + 1))
+        tie += 1
+    return EventTrace(worker, read_at, tau, tau.copy(), t_wall)

@@ -1,0 +1,172 @@
+"""PIAG (Proximal Incremental Aggregated Gradient) with delay tracking.
+
+Implements the paper's Algorithm 1 / Eqs. (3)-(4):
+
+    g_k     = (1/n) sum_i grad f_i(x_{k - tau_k^(i)})
+    x_{k+1} = prox_{gamma_k R}(x_k - gamma_k g_k)
+
+as a fully-jitted ``lax.scan`` over a write-event trace (core.engine).  The
+master state carries the aggregated gradient table g^(i), the iterate
+snapshot each worker is computing on, and the delay-adaptive step-size state;
+delays are the trace's write-event staleness, exactly Algorithm 1's
+``tau_k^(i) = k - s^(i)`` bookkeeping.
+
+The solver is generic over pytree iterates and any per-worker loss
+``worker_loss(x, worker_data...)``; ``run_piag_logreg`` specializes it to the
+paper's §4 workload.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .engine import EventTrace
+from .prox import ProxOp
+from .stepsize import StepsizePolicy, StepsizeState
+
+__all__ = ["PIAGResult", "run_piag", "run_piag_logreg"]
+
+
+class PIAGResult(NamedTuple):
+    x: jnp.ndarray            # final iterate (pytree)
+    objective: jnp.ndarray    # (K,) P(x_{k+1}) after each write event
+    gammas: jnp.ndarray       # (K,) emitted step-sizes
+    taus: jnp.ndarray         # (K,) tau_k = max_i tau_k^(i) fed to the policy
+    opt_residual: jnp.ndarray  # (K,) ||x_{k+1} - x_k|| / gamma_k (prox-grad map)
+
+
+def run_piag(
+    worker_loss: Callable,      # (x, *worker_data_slice) -> scalar, f_i
+    x0,                         # pytree initial iterate
+    worker_data,                # pytree, each leaf (n_workers, ...)
+    trace: EventTrace,
+    policy: StepsizePolicy,
+    prox: ProxOp,
+    objective: Callable | None = None,  # P(x); defaults to mean worker loss + R
+    horizon: int = 4096,
+    use_tau_max: bool = True,
+) -> PIAGResult:
+    """Run PIAG over a write-event trace; everything under one jit."""
+    n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
+    grad_i = jax.grad(worker_loss)
+
+    def data_at(w):
+        return jax.tree_util.tree_map(lambda leaf: leaf[w], worker_data)
+
+    if objective is None:
+        def objective(x):
+            losses = jax.vmap(lambda i: worker_loss(x, *jax.tree_util.tree_leaves(data_at(i))))
+            # note: assumes worker_data leaves order == worker_loss arg order
+            idx = jnp.arange(n)
+            return jnp.mean(losses(idx)) + prox.value(x)
+
+    # Algorithm 1 line 3: g^(i) <- grad f_i(x_0)
+    def init_grad(w):
+        return grad_i(x0, *jax.tree_util.tree_leaves(data_at(w)))
+
+    g_table = jax.vmap(init_grad)(jnp.arange(n))
+    x_read0 = jax.tree_util.tree_map(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
+
+    events = (
+        jnp.asarray(trace.worker, jnp.int32),
+        jnp.asarray(trace.tau_max if use_tau_max else trace.tau, jnp.int32),
+    )
+
+    def step(carry, event):
+        x, gtab, x_read, ss = carry
+        w, tau = event
+        # worker w returns grad f_w(x_read[w])  (Algorithm 1 line 12)
+        xw = jax.tree_util.tree_map(lambda leaf: leaf[w], x_read)
+        gw = grad_i(xw, *jax.tree_util.tree_leaves(data_at(w)))
+        gtab = jax.tree_util.tree_map(lambda buf, gnew: buf.at[w].set(gnew), gtab, gw)
+        # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
+        g = jax.tree_util.tree_map(lambda buf: jnp.mean(buf, axis=0), gtab)
+        gamma, ss = policy.step(ss, tau)
+        x_new = prox.prox(
+            jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
+        # line 20: hand x_{k+1} to the returning worker
+        x_read = jax.tree_util.tree_map(
+            lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+        dx = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+            jax.tree_util.tree_leaves(x_new), jax.tree_util.tree_leaves(x))))
+        res = jnp.where(gamma > 0, dx / jnp.maximum(gamma, 1e-30), 0.0)
+        out = (objective(x_new), gamma, tau, res)
+        return (x_new, gtab, x_read, ss), out
+
+    carry0 = (x0, g_table, x_read0, policy.init(horizon))
+
+    @jax.jit
+    def run(carry0, events):
+        return jax.lax.scan(step, carry0, events)
+
+    (x_fin, *_), (obj, gam, taus, res) = run(carry0, events)
+    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus, opt_residual=res)
+
+
+def run_piag_lipschitz(problem, trace, prox, h: float = 0.9,
+                       alpha: float = 0.9, gamma0: float = 1.0,
+                       horizon: int = 4096) -> PIAGResult:
+    """BEYOND-PAPER: PIAG needing neither the delay bound nor L.
+
+    Uses core.stepsize.AdaptiveLipschitz: per write event, the returning
+    worker's (old grad, new grad, old iterate, new iterate) quadruple yields
+    a secant curvature sample ||dg||/||dx||; the running max estimates L and
+    sets the Eq.-(8) budget gamma' = h / L_est on-line (the paper's §5
+    future work, made concrete)."""
+    from .stepsize import AdaptiveLipschitz
+
+    Aw, bw = problem.worker_slices()
+    n = Aw.shape[0]
+    grad_i = jax.grad(lambda x, A, b: problem.worker_loss(x, A, b))
+    pol = AdaptiveLipschitz(gamma_prime=gamma0, h=h, alpha=alpha)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+
+    g_table = jax.vmap(lambda i: grad_i(x0, Aw[i], bw[i]))(jnp.arange(n))
+    x_read0 = jnp.broadcast_to(x0, (n,) + x0.shape)
+    events = (jnp.asarray(trace.worker, jnp.int32),
+              jnp.asarray(trace.tau_max, jnp.int32))
+
+    def step(carry, event):
+        x, gtab, x_read, x_prev, lip = carry
+        w, tau = event
+        xw = x_read[w]
+        gw = grad_i(xw, Aw[w], bw[w])
+        # secant curvature sample from worker w's consecutive gradients
+        dg = jnp.linalg.norm(gw - gtab[w])
+        dx = jnp.linalg.norm(xw - x_prev[w])
+        lip = pol.observe_curvature(lip, dg, dx)
+        gtab = gtab.at[w].set(gw)
+        x_prev = x_prev.at[w].set(xw)
+        g = jnp.mean(gtab, axis=0)
+        gamma, lip = pol.step(lip, tau)
+        x_new = prox.prox(x - gamma * g, gamma)
+        x_read = x_read.at[w].set(x_new)
+        return (x_new, gtab, x_read, x_prev, lip), (
+            problem.P(x_new), gamma, tau, lip.L_est)
+
+    @jax.jit
+    def run(carry0, events):
+        return jax.lax.scan(step, carry0, events)
+
+    carry0 = (x0, g_table, x_read0, x_read0, pol.init(horizon))
+    (x_fin, *_), (obj, gam, taus, L_est) = run(carry0, events)
+    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
+                      opt_residual=L_est)
+
+
+def run_piag_logreg(problem, trace, policy, prox, horizon: int = 4096) -> PIAGResult:
+    """PIAG on the paper's l1-regularized logistic regression (§4.1)."""
+    Aw, bw = problem.worker_slices()
+
+    def worker_loss(x, A, b):
+        return problem.worker_loss(x, A, b)
+
+    def objective(x):
+        return problem.P(x)
+
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    return run_piag(worker_loss, x0, (Aw, bw), trace, policy, prox,
+                    objective=objective, horizon=horizon)

@@ -1,0 +1,154 @@
+"""Benchmark problems: regularized logistic regression (the paper's §4
+workload, with rcv1-like sparse and MNIST-like dense synthetic generators)
+and quadratics with known curvature (for exactness tests / Example 1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def power_iteration_sq(A: np.ndarray, iters: int = 200, seed: int = 0) -> float:
+    """lambda_max(A^T A) via power iteration (no scipy dependency needed)."""
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(A.shape[1],))
+    v /= np.linalg.norm(v)
+    lam = 0.0
+    for _ in range(iters):
+        w = A.T @ (A @ v)
+        lam = float(np.linalg.norm(w))
+        if lam == 0.0:
+            return 0.0
+        v = w / lam
+    return lam
+
+
+@dataclasses.dataclass(frozen=True)
+class LogRegProblem:
+    """f(x) = (1/N) sum_i log(1 + exp(-b_i a_i^T x)) + (lam2/2)||x||^2,
+    R(x) = lam1 ||x||_1  -- the paper's experimental setup."""
+
+    A: jnp.ndarray          # (N, d)
+    b: jnp.ndarray          # (N,) in {-1, +1}
+    lam1: float
+    lam2: float
+    L: float                # sqrt((1/n) sum L_i^2) over the worker split
+    Lhat: float             # block-coordinate smoothness (Assumption 1)
+    n_workers: int
+
+    @property
+    def dim(self) -> int:
+        return int(self.A.shape[1])
+
+    # -- smooth part -------------------------------------------------------
+    def f(self, x: jnp.ndarray) -> jnp.ndarray:
+        z = self.b * (self.A @ x)
+        return jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * self.lam2 * jnp.sum(x * x)
+
+    def grad_f(self, x: jnp.ndarray) -> jnp.ndarray:
+        z = self.b * (self.A @ x)
+        s = -self.b * jax.nn.sigmoid(-z)  # d/dz logaddexp(0,-z) * b
+        return self.A.T @ s / self.A.shape[0] + self.lam2 * x
+
+    # -- per-worker pieces: f = (1/n) sum_i f_i ----------------------------
+    def worker_slices(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Split samples into n contiguous equal shards -> (n, N/n, d), (n, N/n)."""
+        n = self.n_workers
+        N = (self.A.shape[0] // n) * n
+        return (self.A[:N].reshape(n, -1, self.A.shape[1]),
+                self.b[:N].reshape(n, -1))
+
+    def worker_loss(self, x: jnp.ndarray, Aw: jnp.ndarray, bw: jnp.ndarray) -> jnp.ndarray:
+        """f_i: full-objective-scale loss on shard i (so that (1/n) sum f_i = f)."""
+        z = bw * (Aw @ x)
+        return jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * self.lam2 * jnp.sum(x * x)
+
+    # -- composite objective ----------------------------------------------
+    def P(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.f(x) + self.lam1 * jnp.sum(jnp.abs(x))
+
+    def block_smoothness(self, m: int) -> float:
+        """Assumption 1's block-wise constant Lhat for an m-block partition:
+        max_J lambda_max(A_{:,J}^T A_{:,J}) / (4N) + lam2.
+
+        The coordinate-wise ``self.Lhat`` under-estimates this whenever
+        columns within a block are correlated (dense MNIST-like data) --
+        using it as 1/gamma' makes Async-BCD oscillate."""
+        A = np.asarray(self.A)
+        N, d = A.shape
+        db = -(-d // m)
+        worst = 0.0
+        for j in range(m):
+            blk = A[:, j * db:(j + 1) * db]
+            if blk.shape[1] == 0:
+                continue
+            worst = max(worst, power_iteration_sq(blk, seed=j))
+        return float(worst / (4.0 * N) + self.lam2)
+
+
+def make_logreg(
+    n_samples: int = 2000,
+    dim: int = 200,
+    n_workers: int = 10,
+    sparse_like: bool = True,
+    lam1: float = 1e-5,
+    lam2: float = 1e-4,
+    seed: int = 0,
+) -> LogRegProblem:
+    """Synthetic classification data.
+
+    ``sparse_like=True`` mimics rcv1 (high-dim, ~1% dense, normalized rows);
+    ``False`` mimics MNIST (dense, bounded features).  Offline container ->
+    synthetic stand-ins with matched statistics; lam defaults follow §4.
+    """
+    rng = np.random.default_rng(seed)
+    x_star = rng.normal(size=(dim,)) / np.sqrt(dim)
+    if sparse_like:
+        density = 0.05
+        mask = rng.random((n_samples, dim)) < density
+        A = rng.normal(size=(n_samples, dim)) * mask
+        norms = np.linalg.norm(A, axis=1, keepdims=True)
+        A = A / np.maximum(norms, 1e-12)  # rcv1 rows are l2-normalized
+    else:
+        A = np.abs(rng.normal(size=(n_samples, dim))) * (rng.random((n_samples, dim)) < 0.25)
+        A = A / max(np.abs(A).max(), 1e-12)
+    logits = A @ x_star + 0.3 * rng.normal(size=(n_samples,))
+    b = np.where(logits >= 0, 1.0, -1.0)
+
+    # Worker-wise smoothness: f_i is the mean loss over shard i, so
+    # L_i <= lambda_max(A_i^T A_i)/(4 N_i) + lam2.
+    n = n_workers
+    N = (n_samples // n) * n
+    Ls = []
+    for i in range(n):
+        Ai = A[:N].reshape(n, -1, dim)[i]
+        Ls.append(power_iteration_sq(Ai) / (4.0 * Ai.shape[0]) + lam2)
+    L = float(np.sqrt(np.mean(np.square(Ls))))
+    # Block smoothness (Assumption 1): Lhat <= max_j ||A_{:,j}||^2/(4N) + lam2
+    col_sq = (A * A).sum(axis=0)
+    Lhat = float(col_sq.max() / (4.0 * n_samples) + lam2)
+
+    return LogRegProblem(
+        A=jnp.asarray(A, jnp.float32), b=jnp.asarray(b, jnp.float32),
+        lam1=lam1, lam2=lam2, L=L, Lhat=Lhat, n_workers=n_workers,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Quadratic:
+    """f(x) = 0.5 ||x||^2 scaled -- Example 1's problem (n = d = 1 scalar)."""
+
+    curvature: float = 1.0
+
+    def f(self, x):
+        return 0.5 * self.curvature * jnp.sum(x * x)
+
+    def grad_f(self, x):
+        return self.curvature * x
+
+    @property
+    def L(self):
+        return self.curvature

@@ -1,0 +1,147 @@
+"""Proximal operators for the composite objective P(x) = f(x) + R(x).
+
+Each operator is a ``ProxOp`` with ``value(x) = R(x)`` and
+``prox(x, gamma) = argmin_y R(y) + ||y - x||^2 / (2 gamma)``.  All are exact
+closed forms, jit-compatible, and work on arbitrary pytrees (applied leafwise
+where separability permits; group-l2 treats each leaf as one group).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _tree_map(fn, x):
+    return jax.tree_util.tree_map(fn, x)
+
+
+def _tree_sum(fn, x):
+    return sum(jnp.sum(fn(leaf)) for leaf in jax.tree_util.tree_leaves(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxOp:
+    def value(self, x: Pytree) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def prox(self, x: Pytree, gamma: jnp.ndarray) -> Pytree:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Zero(ProxOp):
+    """R = 0 (smooth problems)."""
+
+    def value(self, x):
+        return jnp.zeros((), jnp.float32)
+
+    def prox(self, x, gamma):
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class L1(ProxOp):
+    """R(x) = lam * ||x||_1; prox = soft threshold."""
+
+    lam: float = 1e-4
+
+    def value(self, x):
+        return self.lam * _tree_sum(jnp.abs, x)
+
+    def prox(self, x, gamma):
+        t = gamma * self.lam
+        return _tree_map(lambda v: jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0), x)
+
+
+@dataclasses.dataclass(frozen=True)
+class L2Squared(ProxOp):
+    """R(x) = (lam/2)||x||^2; prox = shrink by 1/(1 + gamma lam)."""
+
+    lam: float = 1e-4
+
+    def value(self, x):
+        return 0.5 * self.lam * _tree_sum(jnp.square, x)
+
+    def prox(self, x, gamma):
+        return _tree_map(lambda v: v / (1.0 + gamma * self.lam), x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticNet(ProxOp):
+    """R(x) = lam1 ||x||_1 + (lam2/2)||x||^2."""
+
+    lam1: float = 1e-4
+    lam2: float = 1e-4
+
+    def value(self, x):
+        return self.lam1 * _tree_sum(jnp.abs, x) + 0.5 * self.lam2 * _tree_sum(jnp.square, x)
+
+    def prox(self, x, gamma):
+        t = gamma * self.lam1
+        s = 1.0 + gamma * self.lam2
+        return _tree_map(lambda v: jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0) / s, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Box(ProxOp):
+    """Indicator of the box [lo, hi]^d; prox = projection (clip)."""
+
+    lo: float = -1.0
+    hi: float = 1.0
+
+    def value(self, x):
+        viol = sum(
+            jnp.sum(jnp.maximum(self.lo - leaf, 0.0) + jnp.maximum(leaf - self.hi, 0.0))
+            for leaf in jax.tree_util.tree_leaves(x)
+        )
+        return jnp.where(viol > 0, jnp.inf, 0.0).astype(jnp.float32)
+
+    def prox(self, x, gamma):
+        del gamma  # projection is step-size independent
+        return _tree_map(lambda v: jnp.clip(v, self.lo, self.hi), x)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupL2(ProxOp):
+    """R(x) = lam * sum_g ||x_g||_2 with each pytree leaf a group (block
+    soft-threshold) -- the separable-R structure Async-BCD requires."""
+
+    lam: float = 1e-4
+
+    def value(self, x):
+        return self.lam * sum(
+            jnp.linalg.norm(leaf) for leaf in jax.tree_util.tree_leaves(x)
+        )
+
+    def prox(self, x, gamma):
+        t = gamma * self.lam
+
+        def blk(v):
+            n = jnp.linalg.norm(v)
+            scale = jnp.maximum(1.0 - t / jnp.maximum(n, 1e-30), 0.0)
+            return scale * v
+
+        return _tree_map(blk, x)
+
+
+PROX_OPS = {
+    "none": Zero,
+    "l1": L1,
+    "l2": L2Squared,
+    "elastic_net": ElasticNet,
+    "box": Box,
+    "group_l2": GroupL2,
+}
+
+
+def make_prox(name: str, **kwargs) -> ProxOp:
+    try:
+        cls = PROX_OPS[name]
+    except KeyError as e:
+        raise ValueError(f"unknown prox {name!r}; options: {sorted(PROX_OPS)}") from e
+    return cls(**kwargs)

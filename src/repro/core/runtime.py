@@ -1,0 +1,204 @@
+"""Genuinely-asynchronous runtimes (threads), mirroring the paper's §4 setup.
+
+Two runtimes:
+
+* ``PIAGServer``       -- Algorithm 1 verbatim: a master thread owns the
+  iterate and the gradient table; n worker threads receive (x_k, k) over
+  per-worker queues, compute their shard gradient (a jitted JAX call that
+  releases the GIL), and send (grad, k) back.  The master processes one
+  return at a time (|R| = 1, as in §4.1), tracks write-event delays with
+  ``DelayTracker``, picks the delay-adaptive step-size, and applies the prox
+  update.
+* ``SharedMemoryBCD``  -- Algorithm 2: workers share a numpy iterate.  Reads
+  are deliberately NOT locked (inconsistent reads, Eq. 6); steps 5-9 (delay,
+  step-size, block prox update, write, counter bump) run inside one lock,
+  exactly the critical section the paper assumes.
+
+These produce the paper's Figure 2-4 style traces with *real* asynchrony on
+this container's cores.  Determinism is not guaranteed (that is the point);
+the event-driven engine (core.engine) is the deterministic twin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .delay import DelayTracker
+from .prox import ProxOp
+from .stepsize import StepsizePolicy
+
+__all__ = ["PIAGServer", "SharedMemoryBCD", "RunLog"]
+
+
+@dataclasses.dataclass
+class RunLog:
+    objective: List[float] = dataclasses.field(default_factory=list)
+    gammas: List[float] = dataclasses.field(default_factory=list)
+    taus: List[int] = dataclasses.field(default_factory=list)
+    taus_per_worker: List[np.ndarray] = dataclasses.field(default_factory=list)
+    wall: List[float] = dataclasses.field(default_factory=list)
+
+    def as_arrays(self):
+        return (np.array(self.objective), np.array(self.gammas),
+                np.array(self.taus), np.array(self.wall))
+
+
+class PIAGServer:
+    """Threaded parameter server running PIAG with delay-adaptive step-sizes."""
+
+    def __init__(self, problem, policy: StepsizePolicy, prox: ProxOp,
+                 n_workers: Optional[int] = None, record_every: int = 1,
+                 worker_sleep: Optional[Callable[[int], float]] = None):
+        self.problem = problem
+        self.policy = policy
+        self.prox = prox
+        self.n = n_workers or problem.n_workers
+        self.record_every = record_every
+        self.worker_sleep = worker_sleep  # optional artificial heterogeneity
+        Aw, bw = problem.worker_slices()
+        self._Aw = [np.asarray(Aw[i]) for i in range(self.n)]
+        self._bw = [np.asarray(bw[i]) for i in range(self.n)]
+        self._grad_i = jax.jit(jax.grad(problem.worker_loss))
+        self._P = jax.jit(problem.P)
+        # step-size state lives on host: tiny scalars, master-only access
+        self._ss = policy.init()
+        self._ss_step = jax.jit(policy.step)
+
+    def run(self, n_events: int, x0: Optional[np.ndarray] = None) -> RunLog:
+        d = self.problem.dim
+        x = jnp.zeros((d,), jnp.float32) if x0 is None else jnp.asarray(x0)
+        in_q = [queue.Queue() for _ in range(self.n)]   # master -> worker i
+        out_q = queue.Queue()                           # workers -> master
+        stop = threading.Event()
+        tracker = DelayTracker()
+
+        def worker(i: int):
+            while not stop.is_set():
+                try:
+                    xk, k = in_q[i].get(timeout=0.1)
+                except queue.Empty:
+                    continue
+                if self.worker_sleep is not None:
+                    time.sleep(self.worker_sleep(i))
+                g = self._grad_i(xk, self._Aw[i], self._bw[i])
+                g.block_until_ready()   # compute outside the master's loop
+                out_q.put((i, g, k))
+
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(self.n)]
+        for t in threads:
+            t.start()
+
+        # Algorithm 1 init: g^(i) = grad f_i(x_0)
+        g_table = [self._grad_i(x, self._Aw[i], self._bw[i]) for i in range(self.n)]
+        g_sum = sum(g_table[1:], g_table[0])
+        for i in range(self.n):
+            tracker.stamp(i, 0)
+            in_q[i].put((x, 0))
+
+        log = RunLog()
+        t0 = time.perf_counter()
+        ss = self._ss
+        for k in range(n_events):
+            i, g_new, s_read = out_q.get()
+            # lines 11-13: replace worker i's table entry, stamp s^(i)
+            g_sum = g_sum - g_table[i] + g_new
+            g_table[i] = g_new
+            tracker.k = k
+            tracker.stamp(i, s_read)
+            # line 15: tau_k^(i) = k - s^(i); policy consumes max_i tau_k^(i)
+            delays = tracker.delays()
+            tau = max(delays.values())
+            gamma, ss = self._ss_step(ss, jnp.int32(tau))
+            gamma_f = float(gamma)
+            # line 17: x_{k+1} = prox_{gamma R}(x_k - gamma g_k)
+            x = self.prox.prox(x - gamma * (g_sum / self.n), gamma)
+            # line 20: send x_{k+1} (version k+1) back to the idle worker
+            tracker.stamp(i, k + 1)
+            in_q[i].put((x, k + 1))
+            if k % self.record_every == 0:
+                log.objective.append(float(self._P(x)))
+                log.gammas.append(gamma_f)
+                log.taus.append(int(tau))
+                log.taus_per_worker.append(np.array(sorted(delays.values())))
+                log.wall.append(time.perf_counter() - t0)
+        stop.set()
+        for t in threads:
+            t.join(timeout=1.0)
+        self.x_final = np.asarray(x)
+        return log
+
+
+class SharedMemoryBCD:
+    """Threaded shared-memory Async-BCD with inconsistent reads."""
+
+    def __init__(self, problem, policy: StepsizePolicy, prox: ProxOp,
+                 n_workers: int = 8, m_blocks: int = 20, record_every: int = 1,
+                 seed: int = 0):
+        self.problem = problem
+        self.policy = policy
+        self.prox = prox
+        self.n = n_workers
+        self.m = m_blocks
+        self.record_every = record_every
+        self.seed = seed
+        d = problem.dim
+        self.db = -(-d // m_blocks)
+        self._grad = jax.jit(problem.grad_f)
+        self._P = jax.jit(problem.P)
+        self._ss_step = jax.jit(policy.step)
+
+    def run(self, n_events: int, x0: Optional[np.ndarray] = None) -> RunLog:
+        d = self.problem.dim
+        # shared iterate: plain numpy => unlocked reads are inconsistent (Eq. 6)
+        x = np.zeros((d,), np.float32) if x0 is None else np.array(x0, np.float32)
+        lock = threading.Lock()
+        counter = {"k": 0}
+        ss_box = {"ss": self.policy.init()}
+        log = RunLog()
+        t0 = time.perf_counter()
+        stop = threading.Event()
+
+        def worker(i: int):
+            rng = np.random.default_rng(self.seed + i)
+            while not stop.is_set():
+                s_read = counter["k"]            # Algorithm 2 line 10 (stamp)
+                xhat = x.copy()                  # unlocked read -> inconsistent
+                j = int(rng.integers(0, self.m))  # line 3
+                g = np.asarray(self._grad(jnp.asarray(xhat)))  # line 4
+                lo, hi = j * self.db, min((j + 1) * self.db, d)
+                gj = g[lo:hi]
+                with lock:                        # lines 5-9 critical section
+                    k = counter["k"]
+                    if k >= n_events:
+                        return
+                    tau = k - s_read              # line 5
+                    gamma, ss_box["ss"] = self._ss_step(ss_box["ss"], jnp.int32(tau))
+                    gamma_f = float(gamma)        # line 6
+                    xj = x[lo:hi] - gamma_f * gj
+                    x[lo:hi] = np.asarray(self.prox.prox(jnp.asarray(xj), gamma_f))
+                    counter["k"] = k + 1          # line 9 (write event)
+                    if k % self.record_every == 0:
+                        log.gammas.append(gamma_f)
+                        log.taus.append(int(tau))
+                        log.wall.append(time.perf_counter() - t0)
+                        log.objective.append(float(self._P(jnp.asarray(x))))
+
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(self.n)]
+        for t in threads:
+            t.start()
+        while counter["k"] < n_events:
+            time.sleep(0.01)
+        stop.set()
+        for t in threads:
+            t.join(timeout=2.0)
+        self.x_final = x.copy()
+        return log

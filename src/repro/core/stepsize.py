@@ -1,0 +1,278 @@
+"""Delay-adaptive step-size policies (Wu et al., 2022).
+
+Implements the general step-size principle (Eq. 8)
+
+    0 <= gamma_k <= max(0, gamma' - sum_{t=k-tau_k}^{k-1} gamma_t)
+
+and the concrete policies from the paper:
+
+* ``FixedStepSize``      -- gamma_k = gamma' / (tau_bound + 1)  (state of the art
+                            fixed policy used as the paper's baseline; needs the
+                            *worst-case* delay bound).
+* ``SunDengFixed``       -- gamma_k = h / (L (tau_bound + 1/2))  [Sun'19, Deng'20].
+* ``DavisFixed``         -- gamma_k = h / (Lhat + 2 L tau / sqrt(m)) [Davis'16],
+                            the Async-BCD baseline.
+* ``NaiveAdaptive``      -- gamma_k = c / (tau_k + b)  (Eq. 7) which *diverges*
+                            (Example 1); kept to reproduce the failure mode.
+* ``Adaptive1``          -- gamma_k = alpha * max(gamma' - window_sum, 0)  (Eq. 13).
+* ``Adaptive2``          -- gamma_k = gamma'/(tau_k+1) when it fits the remaining
+                            window budget, else 0  (Eq. 14).
+
+All policies are pure-functional and jit/scan-compatible.  The window sum
+``sum_{t=k-tau_k}^{k-1} gamma_t`` is computed in O(1) from a circular buffer of
+cumulative sums: ``buf[(j-1) % H]`` stores ``S_j = sum_{t<j} gamma_t`` so that
+``window_sum(k, tau) = S_k - S_{k-tau}``.  ``H`` caps the largest observable
+delay; delays beyond the horizon are clipped (and flagged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_HORIZON = 4096
+
+
+class StepsizeState(NamedTuple):
+    """Carry for a step-size policy inside ``lax.scan``/``jit``.
+
+    Attributes:
+      k:        current iteration counter (int32 scalar).
+      total:    S_k = sum of all step-sizes emitted so far (float32 scalar).
+      cumbuf:   circular buffer of cumulative sums; ``cumbuf[(j-1) % H] = S_j``.
+      clipped:  number of times a delay exceeded the horizon (diagnostic).
+    """
+
+    k: jnp.ndarray
+    total: jnp.ndarray
+    cumbuf: jnp.ndarray
+    clipped: jnp.ndarray
+
+    @property
+    def horizon(self) -> int:
+        return self.cumbuf.shape[0]
+
+
+def init_state(horizon: int = DEFAULT_HORIZON) -> StepsizeState:
+    return StepsizeState(
+        k=jnp.zeros((), jnp.int32),
+        total=jnp.zeros((), jnp.float32),
+        cumbuf=jnp.zeros((horizon,), jnp.float32),
+        clipped=jnp.zeros((), jnp.int32),
+    )
+
+
+def window_sum(state: StepsizeState, tau: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (sum_{t=k-tau}^{k-1} gamma_t, was_clipped).
+
+    ``tau`` is clipped to ``[0, min(k, H)]``; clipping beyond the horizon only
+    ever *under-estimates* the window sum, which would be unsafe, so we also
+    return a flag the caller accumulates (in practice H is chosen >= any
+    system delay; the dry-run configs use H=4096).
+    """
+    H = state.horizon
+    k = state.k
+    tau = jnp.asarray(tau, jnp.int32)
+    tau_c = jnp.clip(tau, 0, jnp.minimum(k, H))
+    was_clipped = (tau > jnp.minimum(k, H)).astype(jnp.int32)
+    j = k - tau_c  # we need S_j
+    s_j = jnp.where(j <= 0, 0.0, state.cumbuf[(j - 1) % H])
+    return state.total - s_j, was_clipped
+
+
+def _push(state: StepsizeState, gamma: jnp.ndarray, was_clipped: jnp.ndarray) -> StepsizeState:
+    H = state.horizon
+    new_total = state.total + gamma
+    cumbuf = state.cumbuf.at[state.k % H].set(new_total)
+    return StepsizeState(
+        k=state.k + 1,
+        total=new_total,
+        cumbuf=cumbuf,
+        clipped=state.clipped + was_clipped,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class StepsizePolicy:
+    """Base class.  ``gamma_prime`` is gamma' = h/L (or h/Lhat for BCD)."""
+
+    gamma_prime: float
+
+    def init(self, horizon: int = DEFAULT_HORIZON) -> StepsizeState:
+        return init_state(horizon)
+
+    def _gamma(self, state: StepsizeState, tau: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def step(self, state: StepsizeState, tau: jnp.ndarray) -> Tuple[jnp.ndarray, StepsizeState]:
+        """Consume the observed delay ``tau_k`` and emit ``gamma_k``."""
+        gamma, was_clipped = self._gamma(state, tau)
+        gamma = jnp.asarray(gamma, jnp.float32)
+        return gamma, _push(state, gamma, was_clipped)
+
+    # Convenience for numpy-land experiments / benchmarks.
+    def run(self, taus) -> jnp.ndarray:
+        """Emit the full step-size sequence for a delay trace (jit-scanned)."""
+        taus = jnp.asarray(taus, jnp.int32)
+
+        def body(state, tau):
+            g, state = self.step(state, tau)
+            return state, g
+
+        horizon = int(min(DEFAULT_HORIZON, max(int(taus.shape[0]), 1)))
+        _, gammas = jax.lax.scan(body, self.init(horizon), taus)
+        return gammas
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedStepSize(StepsizePolicy):
+    """gamma_k = gamma' / (tau_bound + 1).  Requires the worst-case bound."""
+
+    tau_bound: int = 0
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)  # keep the buffer diagnostics uniform
+        return jnp.full((), self.gamma_prime / (self.tau_bound + 1), jnp.float32), clip
+
+
+@dataclasses.dataclass(frozen=True)
+class SunDengFixed(StepsizePolicy):
+    """gamma_k = h/(L (tau + 1/2)) per [Sun et al. '19; Deng et al. '20].
+
+    Construct with gamma_prime = h/L; the policy divides by (tau_bound + 1/2).
+    """
+
+    tau_bound: int = 0
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)
+        return jnp.full((), self.gamma_prime / (self.tau_bound + 0.5), jnp.float32), clip
+
+
+@dataclasses.dataclass(frozen=True)
+class DavisFixed(StepsizePolicy):
+    """Async-BCD baseline gamma_k = h / (Lhat + 2 L tau / sqrt(m)) [Davis'16].
+
+    ``gamma_prime`` must be h/Lhat; ``ratio`` is (2 L / (Lhat sqrt(m))).
+    """
+
+    tau_bound: int = 0
+    ratio: float = 2.0
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)
+        g = self.gamma_prime / (1.0 + self.ratio * self.tau_bound)
+        return jnp.full((), g, jnp.float32), clip
+
+
+@dataclasses.dataclass(frozen=True)
+class NaiveAdaptive(StepsizePolicy):
+    """The *failing* natural extension gamma_k = c/(tau_k + b)  (Eq. 7)."""
+
+    b: float = 1.0
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)
+        return self.gamma_prime / (jnp.asarray(tau, jnp.float32) + self.b), clip
+
+
+@dataclasses.dataclass(frozen=True)
+class Adaptive1(StepsizePolicy):
+    """Eq. (13): gamma_k = alpha * max(gamma' - window_sum, 0)."""
+
+    alpha: float = 0.9
+
+    def _gamma(self, state, tau):
+        ws, clip = window_sum(state, tau)
+        return self.alpha * jnp.maximum(self.gamma_prime - ws, 0.0), clip
+
+
+@dataclasses.dataclass(frozen=True)
+class Adaptive2(StepsizePolicy):
+    """Eq. (14): gamma'/(tau_k+1) gated by the remaining window budget."""
+
+    def _gamma(self, state, tau):
+        ws, clip = window_sum(state, tau)
+        cand = self.gamma_prime / (jnp.asarray(tau, jnp.float32) + 1.0)
+        budget = self.gamma_prime - ws
+        return jnp.where(cand <= budget, cand, 0.0), clip
+
+
+class LipschitzState(NamedTuple):
+    """StepsizeState extended with an on-line curvature estimate."""
+
+    ss: StepsizeState
+    L_est: jnp.ndarray       # running max of ||g_k - g_{k-1}|| / ||x_k - x_{k-1}||
+    have_prev: jnp.ndarray   # bool
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveLipschitz(StepsizePolicy):
+    """BEYOND-PAPER (the paper's §5 future work): estimate the smoothness
+    constant on-line and combine it with the delay-adaptive principle.
+
+    gamma' is replaced by h / L_est where L_est is a running (decayed) max of
+    secant curvature estimates ||g_k - g_{k-1}|| / ||x_k - x_{k-1}|| supplied
+    by the caller via ``observe_curvature``; the window budget of Eq. (8) is
+    enforced against the CURRENT h/L_est, so the policy needs neither the
+    delay bound NOR the Lipschitz constant.  ``gamma_prime`` acts as the
+    initial (optimistic) budget; ``h`` is the safety factor.
+    """
+
+    h: float = 0.9
+    alpha: float = 0.9
+    decay: float = 1.0       # 1.0 = hard max; <1 forgets old curvature
+
+    def init(self, horizon: int = DEFAULT_HORIZON) -> LipschitzState:  # type: ignore[override]
+        return LipschitzState(
+            ss=init_state(horizon),
+            L_est=jnp.asarray(self.h / max(self.gamma_prime, 1e-30), jnp.float32),
+            have_prev=jnp.zeros((), jnp.bool_),
+        )
+
+    def observe_curvature(self, state: LipschitzState, dg_norm, dx_norm
+                          ) -> LipschitzState:
+        """Feed ||g_k - g_{k-1}|| and ||x_k - x_{k-1}|| (any worker pair)."""
+        sec = jnp.where(dx_norm > 1e-30, dg_norm / jnp.maximum(dx_norm, 1e-30),
+                        0.0)
+        L_new = jnp.maximum(state.L_est * self.decay, sec)
+        return state._replace(L_est=jnp.maximum(L_new, 1e-30),
+                              have_prev=jnp.ones((), jnp.bool_))
+
+    def step(self, state: LipschitzState, tau):  # type: ignore[override]
+        gp = self.h / state.L_est
+        ws, clip = window_sum(state.ss, tau)
+        gamma = self.alpha * jnp.maximum(gp - ws, 0.0)
+        gamma = jnp.asarray(gamma, jnp.float32)
+        return gamma, state._replace(ss=_push(state.ss, gamma, clip))
+
+    def run(self, taus) -> jnp.ndarray:  # curvature-free trace (L fixed at init)
+        taus = jnp.asarray(taus, jnp.int32)
+
+        def body(state, tau):
+            g, state = self.step(state, tau)
+            return state, g
+
+        _, gammas = jax.lax.scan(body, self.init(int(taus.shape[0])), taus)
+        return gammas
+
+
+POLICIES = {
+    "fixed": FixedStepSize,
+    "sun_deng": SunDengFixed,
+    "davis": DavisFixed,
+    "naive": NaiveAdaptive,
+    "adaptive1": Adaptive1,
+    "adaptive2": Adaptive2,
+    "adaptive_lipschitz": AdaptiveLipschitz,
+}
+
+
+def make_policy(name: str, gamma_prime: float, **kwargs) -> StepsizePolicy:
+    try:
+        cls = POLICIES[name]
+    except KeyError as e:
+        raise ValueError(f"unknown step-size policy {name!r}; options: {sorted(POLICIES)}") from e
+    return cls(gamma_prime=gamma_prime, **kwargs)

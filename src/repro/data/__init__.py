@@ -1,0 +1,3 @@
+from .synthetic import EmbedStream, TokenStream
+
+__all__ = ["EmbedStream", "TokenStream"]

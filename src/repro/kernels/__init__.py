@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py:
+  prox_step        -- fused delay-adaptive prox-gradient update (paper Eq. 4)
+  flash_attention  -- blocked online-softmax attention, GQA-native
+  ssd_scan         -- Mamba2 SSD intra-chunk compute
+  rmsnorm          -- fused single-pass RMSNorm
+"""
+from . import ops, ref
+from .ops import (flash_attention, prox_step, prox_step_tree,
+                  rmsnorm_fused, ssd_scan_pallas)
+
+__all__ = ["ops", "ref", "flash_attention", "prox_step", "prox_step_tree",
+           "rmsnorm_fused", "ssd_scan_pallas"]

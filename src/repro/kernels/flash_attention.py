@@ -1,0 +1,122 @@
+"""Blocked flash attention (online softmax) Pallas kernel.
+
+Grid (batch*kv_head, q_blocks, k_blocks); the k axis is the innermost
+(sequential) dimension, carrying the running max / normalizer / accumulator
+in VMEM scratch -- the canonical flash schedule.  GQA is handled without
+repeating KV: the wrapper folds the per-group query heads into extra query
+*rows* (all heads of a group share the same K/V), so q arrives as
+(B*KV, G*Sq, d) and the kernel never sees head replication.
+
+Masking is position-based (absolute positions as int32 inputs): supports
+causal, bidirectional and sliding-window in one kernel; slots with position
+-1 (ring-cache holes, padding) are masked out.  Fully-masked query rows
+return zeros.
+
+Block sizes default to (128, 512): q/k/v tiles of 128x128 feed the MXU, and
+the f32 accumulator (block_q x d) stays well inside the ~16 MiB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, causal: bool,
+            window: Optional[int], nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0].astype(jnp.float32)          # (bk, d)
+    qp = qpos_ref[...]                        # (bq,)
+    kp = kpos_ref[...]                        # (bk,)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    valid = (kp[None, :] >= 0) & (qp[:, None] >= 0)
+    if causal:
+        valid &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        valid &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                       # (bq, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.where(m_prev[:, 0] > NEG_INF / 2,
+                      jnp.exp(m_prev[:, 0] - m_new), 0.0)
+    l_new = alpha * l_scr[:, 0] + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new[:, None]
+    l_scr[...] = l_new[:, None]
+    acc_scr[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(q, k, v, qpos, kpos, *, causal: bool = True,
+                         window: Optional[int] = None, scale: float = 1.0,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q (BH, Sq, d), k/v (BH, Sk, d), qpos (Sq,), kpos (Sk,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    pq, pk = nq * bq - Sq, nk * bk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pq), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pk), constant_values=-1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda b, iq, ik: (iq,)),
+            pl.BlockSpec((bk,), lambda b, iq, ik: (ik,)),
+            pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * bq, d), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,98 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+* ``flash_attention``     -- model-facing GQA attention (folds query groups
+                             into rows; no KV replication).
+* ``ssd_scan_pallas``     -- full chunked SSD using the intra-chunk kernel +
+                             host cross-chunk combine.
+* ``prox_step`` / ``prox_step_tree`` re-exported from kernels.prox_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .prox_step import prox_step, prox_step_tree  # re-export
+from .rmsnorm import rmsnorm as rmsnorm_fused  # re-export
+from .ssd_scan import ssd_intra_chunk
+
+__all__ = ["flash_attention", "ssd_scan_pallas", "prox_step",
+           "prox_step_tree", "rmsnorm_fused"]
+
+
+def flash_attention(q, k, v, qpos, kpos, *, causal: bool = True,
+                    window: Optional[int] = None, scale: float = 1.0,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Model-facing wrapper.  q (B,Sq,H,d), k/v (B,Sk,KV,d) -> (B,Sq,H,dv).
+
+    GQA: the G = H/KV heads of a group share K/V, so their queries are folded
+    into extra query rows of the (B*KV)-indexed kernel batch.
+    """
+    B, Sq, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # (B, Sq, KV, G, d) -> (B, KV, G, Sq, d) -> (B*KV, G*Sq, d)
+    qf = q.reshape(B, Sq, KV, G, d).transpose(0, 2, 3, 1, 4).reshape(B * KV, G * Sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, -1, d)
+    qpos_f = jnp.tile(qpos, (G,))
+    out = flash_attention_bhsd(qf, kf, vf, qpos_f, kpos, causal=causal,
+                               window=window, scale=scale, interpret=interpret)
+    out = out.reshape(B, KV, G, Sq, d).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H, d)
+
+
+def ssd_scan_pallas(x, dt, A, B, C, chunk: int, h0=None,
+                    interpret: Optional[bool] = None):
+    """Drop-in replacement for models.ssm.ssd_chunked using the kernel.
+
+    Shapes follow ssd_chunked: x (Bt,S,H,P), dt (Bt,S,H), A (H,),
+    B/C (Bt,S,G,N).  Returns (y (Bt,S,H,P), h_final (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    dA = dt.astype(f32) * A.astype(f32)                       # (Bt, S', H)
+    BC_ = Bt * nc
+    xq = x.reshape(BC_, Q, H, P)
+    dtq = dt.reshape(BC_, Q, H).astype(f32)
+    dAq = dA.reshape(BC_, Q, H)
+    Bq = B.reshape(BC_, Q, G, N).astype(f32)
+    Cq = C.reshape(BC_, Q, G, N).astype(f32)
+
+    y_intra, st_in = ssd_intra_chunk(xq, dtq, dAq, Bq, Cq, interpret=interpret)
+    y_intra = y_intra.reshape(Bt, nc, Q, H, P)
+    st_in = st_in.reshape(Bt, nc, H, N, P).transpose(0, 1, 2, 4, 3)  # (Bt,nc,H,P,N)
+
+    cums = jnp.cumsum(dAq.reshape(Bt, nc, Q, H), axis=2)
+    seg_end = cums[:, :, -1, :]                                # (Bt,nc,H)
+
+    def scan_chunks(h, inp):
+        se, s_in = inp
+        h_new = jnp.exp(se)[:, :, None, None] * h + s_in
+        return h_new, h
+
+    h_init = jnp.zeros((Bt, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_fin, h_enter = jax.lax.scan(
+        scan_chunks, h_init,
+        (jnp.moveaxis(seg_end, 1, 0), jnp.moveaxis(st_in, 1, 0)))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                      # (Bt,nc,H,P,N)
+
+    rep = H // G
+    Cfull = jnp.repeat(C.reshape(Bt, nc, Q, G, N), rep, axis=3).astype(f32)
+    y_inter = jnp.einsum("bcthn,bchpn->bcthp",
+                         Cfull * jnp.exp(cums)[..., None], h_enter)
+    y = (y_intra + y_inter).reshape(Bt, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_fin

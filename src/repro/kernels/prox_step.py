@@ -1,0 +1,76 @@
+"""Fused proximal update kernel: x <- prox_{gamma R}(x - gamma g).
+
+This is the paper's inner loop (Eq. 4 / Eq. 5).  Unfused, XLA emits
+subtract -> scale -> sign/abs/max (4+ HBM round trips for a memory-bound op);
+the kernel does one read of (x, g) and one write of x' per element.
+
+TPU mapping: the flattened parameter vector is viewed as (rows, 1024) with
+rows tiled in blocks of 8 sublanes x 128 lanes (the VPU-native tile);
+``gamma`` (the *delay-adaptive* step-size, a per-event scalar) rides in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024          # columns of the 2-D view (8 x 128 native tiles)
+BLOCK_ROWS = 256      # rows per grid step -> 1 MiB f32 per operand block
+
+
+def _kernel(gamma_ref, x_ref, g_ref, o_ref, *, kind: str, lam: float):
+    gamma = gamma_ref[0, 0]
+    y = x_ref[...] - gamma * g_ref[...]
+    if kind == "none":
+        pass
+    elif kind == "l1":
+        t = gamma * lam
+        y = jnp.sign(y) * jnp.maximum(jnp.abs(y) - t, 0.0)
+    elif kind == "l2":
+        y = y / (1.0 + gamma * lam)
+    elif kind == "box":
+        y = jnp.clip(y, -lam, lam)
+    else:
+        raise ValueError(kind)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "lam", "interpret"))
+def prox_step(x: jnp.ndarray, g: jnp.ndarray, gamma: jnp.ndarray,
+              kind: str = "l1", lam: float = 1e-4,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused prox-gradient update on an arbitrary-shaped array."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    cols = LANES if n >= LANES else 128
+    rows = -(-n // cols)
+    rows_pad = -(-rows // BLOCK_ROWS) * BLOCK_ROWS if rows > BLOCK_ROWS else rows
+    pad = rows_pad * cols - n
+    x2 = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_pad, cols)
+    g2 = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows_pad, cols)
+    br = min(BLOCK_ROWS, rows_pad)
+    grid = (rows_pad // br,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, kind=kind, lam=lam),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # gamma scalar
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, cols), dtype),
+        interpret=interpret,
+    )(jnp.asarray(gamma, jnp.float32).reshape(1, 1), x2, g2)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def prox_step_tree(params, grads, gamma, kind: str = "l1", lam: float = 1e-4):
+    """Apply the fused update leafwise over a pytree."""
+    return jax.tree_util.tree_map(
+        lambda p, g: prox_step(p, g, gamma, kind=kind, lam=lam), params, grads)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prox_step_ref(x: jnp.ndarray, g: jnp.ndarray, gamma: jnp.ndarray,
+                  kind: str = "l1", lam: float = 1e-4) -> jnp.ndarray:
+    """x <- prox_{gamma R}(x - gamma g), elementwise closed forms."""
+    y = x - gamma * g
+    if kind == "none":
+        return y
+    if kind == "l1":
+        t = gamma * lam
+        return jnp.sign(y) * jnp.maximum(jnp.abs(y) - t, 0.0)
+    if kind == "l2":
+        return y / (1.0 + gamma * lam)
+    if kind == "box":
+        return jnp.clip(y, -lam, lam)
+    raise ValueError(kind)
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, *, causal: bool,
+                        window: Optional[int], scale: float) -> jnp.ndarray:
+    """q (BH, Sq, d), k/v (BH, Sk, d), qpos (Sq,), kpos (Sk,) -> (BH, Sq, d).
+
+    Invalid positions are -1; fully-masked query rows return zeros (matching
+    the kernel's l == 0 convention)."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = kpos[None, :] >= 0
+    if causal:
+        valid &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        valid &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(valid[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)
+    return out.astype(v.dtype)
+
+
+def ssd_intra_ref(x, dt, dA, B, C):
+    """Intra-chunk SSD (one chunk).  x (Q,P), dt/dA (Q,), B/C (Q,N) ->
+    (y (Q,P), state (N,P)).  All float32."""
+    Q = x.shape[0]
+    cums = jnp.cumsum(dA)
+    decay = cums[:, None] - cums[None, :]
+    L = jnp.exp(jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), decay, -1e30))
+    W = (C @ B.T) * L * dt[None, :]
+    y = W @ x
+    w2 = jnp.exp(cums[-1] - cums) * dt
+    state = (B * w2[:, None]).T @ x
+    return y, state
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """Oracle for kernels.rmsnorm (matches models.layers.rmsnorm)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) *
+            scale.astype(jnp.float32)).astype(x.dtype)

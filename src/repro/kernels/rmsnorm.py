@@ -1,0 +1,55 @@
+"""Fused RMSNorm Pallas kernel.
+
+Unfused, XLA emits square -> mean -> rsqrt -> mul -> mul with the (rows, D)
+activation crossing HBM multiple times; the kernel computes the row
+statistics and the scaled output in one VMEM-resident pass.  Rows are tiled
+in blocks of ``BLOCK_ROWS``; D stays whole per block (norm axis must be
+resident), which holds for every assigned config (D <= 8192 -> <= 8 MiB f32
+per 256-row block operand).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # (br, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """x (..., D), scale (D,) -> RMSNorm(x) * scale, fused single pass."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    D = shape[-1]
+    rows = x.size // D
+    x2 = x.reshape(rows, D)
+    br = min(BLOCK_ROWS, rows)
+    nr = -(-rows // br)
+    pad = nr * br - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr * br, D), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,313 @@
+"""While-loop-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs / bytes / collective traffic by
+~n_layers x (verified in tests/test_hlo_cost.py).  The optimized HLO however
+annotates ``backend_config={"known_trip_count":{"n":...}}``, which lets us
+recover exact per-step totals:
+
+    cost(program) = sum_instr cost(instr) * prod(trip counts of enclosing whiles)
+
+* FLOPs: 2 * prod(result dims) * prod(contracting dims) for every ``dot``
+  (including dots inside fusions); other ops contribute ~0 FLOPs at matmul
+  scale.
+* HBM bytes: result + operand bytes per *top-level* op (fusion internals do
+  not round-trip HBM -- the post-fusion graph is the HBM-traffic proxy).
+  Pure data-movement ops (tuple plumbing, parameters, constants, bitcasts)
+  are skipped.
+* Collective bytes: result bytes (operand bytes for reduce-scatter) of every
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+  times enclosing trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_SINGLE_RE = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w.\-]+)")
+_CALL_MULTI_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # args + attributes
+
+
+def parse_hlo(text: str):
+    """-> (computations: name -> [Instr], entry_name, shapes: name -> shape)."""
+    comps: Dict[str, List[Instr]] = {}
+    shapes: Dict[str, str] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, op, rest = m.groups()
+            comps[cur].append(Instr(name, shape, op, rest))
+            shapes[name] = shape
+    return comps, entry, shapes
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    # result dims x contracting dims (from lhs)
+    rdims = _shape_dims(instr.shape)
+    if not rdims:
+        return 0.0
+    rprod = 1
+    for d in rdims[0][1]:
+        rprod *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    # first operand name
+    ops_m = re.findall(r"%([\w.\-]+)", instr.rest)
+    cprod = 1
+    if ops_m and cdims:
+        lhs_shape = shapes.get(ops_m[0], "")
+        ldims = _shape_dims(lhs_shape)
+        if ldims:
+            for c in cdims:
+                if c < len(ldims[0][1]):
+                    cprod *= ldims[0][1][c]
+    return 2.0 * rprod * cprod
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.coll_bytes += o.coll_bytes
+        for k in COLLECTIVES:
+            self.coll_breakdown[k] += o.coll_breakdown[k]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.coll_bytes * f,
+                    {k: v * f for k, v in self.coll_breakdown.items()})
+
+
+def _fusion_flops(comp_name, comps, shapes, memo) -> float:
+    """FLOPs of dots inside a fusion/called computation (counted once)."""
+    if comp_name in memo:
+        return memo[comp_name]
+    total = 0.0
+    for ins in comps.get(comp_name, []):
+        if ins.op == "dot":
+            total += _dot_flops(ins, shapes)
+        elif ins.op in ("fusion", "call", "map"):
+            for ref in _called(ins):
+                total += _fusion_flops(ref, comps, shapes, memo)
+    memo[comp_name] = total
+    return total
+
+
+def _called(ins: Instr) -> List[str]:
+    out = [m.group(1) for m in _CALL_SINGLE_RE.finditer(ins.rest)]
+    for m in _CALL_MULTI_RE.finditer(ins.rest):
+        out.extend(nm.strip().lstrip("%") for nm in m.group(1).split(","))
+    return out
+
+
+def _operand_bytes(ins: Instr, shapes: Dict[str, str]) -> int:
+    total = 0
+    for nm in re.findall(r"%([\w.\-]+)", ins.rest.split(")", 1)[0] + ")"):
+        if nm in shapes:
+            total += _shape_bytes(shapes[nm])
+    return total
+
+
+def _max_operand_bytes(ins: Instr, shapes: Dict[str, str]) -> int:
+    best = 0
+    for nm in re.findall(r"%([\w.\-]+)", ins.rest.split(")", 1)[0] + ")"):
+        if nm in shapes:
+            best = max(best, _shape_bytes(shapes[nm]))
+    return best
+
+
+def _instr_bytes(ins: Instr, shapes: Dict[str, str]) -> float:
+    """HBM traffic estimate for one top-level op (or fusion).
+
+    dynamic-update-slice executes in place (XLA aliases the accumulator):
+    traffic = slice write + small reads, NOT the full buffer round-trip.
+    dynamic-slice reads only the slice: traffic = 2 x result.
+    """
+    name = ins.name
+    rb = _shape_bytes(ins.shape)
+    ob = _operand_bytes(ins, shapes)
+    if ins.op == "dynamic-update-slice" or "dynamic-update-slice" in name:
+        mx = _max_operand_bytes(ins, shapes)
+        return float(max(rb + ob - 2 * mx, rb - mx, 0))
+    if ins.op == "dynamic-slice" or (
+            "dynamic-slice" in name and "update" not in name):
+        return float(2 * rb)
+    return float(rb + ob)
+
+
+def _comp_cost(comp_name: str, comps, shapes, memo, fus_memo) -> Cost:
+    if comp_name in memo:
+        return memo[comp_name]
+    cost = Cost()
+    for ins in comps.get(comp_name, []):
+        if ins.op == "while":
+            m = _TRIP_RE.search(ins.rest)
+            trip = int(m.group(1)) if m else 1
+            inner = Cost()
+            for ref in _called(ins):  # body + condition
+                inner += _comp_cost(ref, comps, shapes, memo, fus_memo)
+            cost += inner.scaled(trip)
+        elif ins.op == "conditional":
+            branches = [_comp_cost(r, comps, shapes, memo, fus_memo)
+                        for r in _called(ins)]
+            if branches:  # conservative: the max-cost branch
+                big = max(branches, key=lambda c: c.flops + c.bytes)
+                cost += big
+        elif ins.op in ("call", "async-start", "custom-call"):
+            for ref in _called(ins):
+                cost += _comp_cost(ref, comps, shapes, memo, fus_memo)
+            if ins.op not in SKIP_BYTES_OPS:
+                cost.bytes += _shape_bytes(ins.shape)
+        elif ins.op == "fusion":
+            cost.flops += _fusion_flops(_called(ins)[0], comps, shapes,
+                                        fus_memo) if _called(ins) else 0.0
+            cost.bytes += _instr_bytes(ins, shapes)
+        elif ins.op == "dot":
+            cost.flops += _dot_flops(ins, shapes)
+            cost.bytes += _instr_bytes(ins, shapes)
+        elif any(ins.op == c or ins.op == c + "-start" or
+                 ins.op.startswith(c + ".") for c in COLLECTIVES):
+            base = next(c for c in COLLECTIVES
+                        if ins.op == c or ins.op == c + "-start" or
+                        ins.op.startswith(c + "."))
+            if base == "reduce-scatter":
+                nb = max(_operand_bytes(ins, shapes), _shape_bytes(ins.shape))
+            else:
+                nb = _shape_bytes(ins.shape)
+            cost.coll_bytes += nb
+            cost.coll_breakdown[base] += nb
+            cost.bytes += _shape_bytes(ins.shape)
+        elif ins.op in SKIP_BYTES_OPS or ins.op.endswith("-done"):
+            pass
+        else:
+            cost.bytes += _instr_bytes(ins, shapes)
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps, entry, shapes = parse_hlo(text)
+    if entry is None:
+        return Cost()
+    return _comp_cost(entry, comps, shapes, {}, {})
+
+
+def top_contributors(text: str, metric: str = "bytes", k: int = 25):
+    """Attribute cost to individual instructions (x enclosing trip counts).
+
+    metric: "bytes" | "flops" | "coll".  Returns [(cost, comp, instr line)].
+    Used by the §Perf hillclimbs to find what actually dominates a term.
+    """
+    comps, entry, shapes = parse_hlo(text)
+    if entry is None:
+        return []
+    out = []
+    fus_memo: Dict[str, float] = {}
+
+    def visit(comp_name: str, mult: float, seen):
+        if comp_name in seen:
+            return
+        for ins in comps.get(comp_name, []):
+            if ins.op == "while":
+                m = _TRIP_RE.search(ins.rest)
+                trip = int(m.group(1)) if m else 1
+                for ref in _called(ins):
+                    visit(ref, mult * trip, seen)
+            elif ins.op == "conditional":
+                for ref in _called(ins):
+                    visit(ref, mult, seen)
+            elif ins.op in ("call", "async-start", "custom-call"):
+                for ref in _called(ins):
+                    visit(ref, mult, seen)
+            else:
+                if metric == "flops":
+                    v = _dot_flops(ins, shapes) if ins.op == "dot" else (
+                        _fusion_flops(_called(ins)[0], comps, shapes, fus_memo)
+                        if ins.op == "fusion" and _called(ins) else 0.0)
+                elif metric == "coll":
+                    v = 0.0
+                    for c in COLLECTIVES:
+                        if ins.op == c or ins.op == c + "-start" or \
+                                ins.op.startswith(c + "."):
+                            v = float(_shape_bytes(ins.shape))
+                            break
+                else:
+                    if ins.op in SKIP_BYTES_OPS or ins.op.endswith("-done"):
+                        v = 0.0
+                    else:
+                        v = _instr_bytes(ins, shapes)
+                if v > 0:
+                    out.append((v * mult, comp_name, ins.op, ins.name,
+                                ins.shape[:80]))
+
+    visit(entry, 1.0, set())
+    out.sort(reverse=True)
+    return out[:k]

@@ -1,0 +1,39 @@
+"""Measured per-(family, shape) optimization recipes (EXPERIMENTS.md §Perf).
+
+The §Perf hillclimbs showed the knob bundle is NOT a safe global default:
+``shard_acts`` regresses embedding-input models (VLM/audio) whose batch
+sharding XLA already propagates well, and ``small_out`` slightly regresses
+decode.  This table encodes the measured guidance; ``recommended_knobs``
+returns kwargs for ``launch.dryrun.build_lowered`` / the trainer.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import SHAPES, get_config
+
+# keyed by (token_inputs, shape.kind)
+_RECIPES: Dict[tuple, dict] = {
+    # token-input models (dense / moe / ssm / hybrid)
+    (True, "train"): dict(remat_chunk=True, shard_acts=True, seq_shard=True,
+                          ce_chunk=512),
+    (True, "prefill"): dict(shard_acts=True),
+    (True, "decode"): dict(cp_cache=True),
+    (True, "decode_long"): dict(cp_cache=True),
+    # embedding-input models (audio / vlm): activation constraints fight
+    # XLA's layout -- remat only (H5)
+    (False, "train"): dict(remat_chunk=True),
+    (False, "prefill"): dict(),
+    (False, "decode"): dict(cp_cache=True),
+    (False, "decode_long"): dict(cp_cache=True),
+}
+
+
+def recommended_knobs(arch: str, shape_name: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = dict(_RECIPES[(not cfg.embed_inputs, shape.kind)])
+    # chunked CE only pays off for big vocabularies
+    if knobs.get("ce_chunk") and cfg.vocab < 100_000:
+        knobs.pop("ce_chunk")
+    return knobs

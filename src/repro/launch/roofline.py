@@ -1,0 +1,165 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197e12 FLOP/s
+    HBM bandwidth       819e9  B/s
+    ICI link bandwidth  ~50e9  B/s per link
+
+Terms (seconds, per chip, one step):
+    compute    = HLO_FLOPs    / peak
+    memory     = HLO_bytes    / hbm_bw
+    collective = coll_bytes   / link_bw
+where HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` of the
+*per-device* SPMD program and coll_bytes sums the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the post-partitioning optimized HLO (``compiled.as_text()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# result shapes like: bf16[2048,5120]{1,0} or (f32[8,128], s32[4])
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Result size equals the full operand footprint for all-gather (output is
+    the gathered tensor) and all-reduce/all-to-all; for reduce-scatter the
+    *operand* is the large side -- we use max(result, operand) per line to be
+    conservative."""
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "name = <result-shape> op-name(args...)"; skip -done halves of async
+        # pairs (the -start carries the shape) and fusion-internal mentions.
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        result_shape, opname = m.group(1), m.group(2)
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname == op + "-start" or opname.startswith(op + "."):
+                if op == "reduce-scatter":
+                    # operand is the large side
+                    args = s[s.find("("):]
+                    nbytes = max(_shape_bytes(args), _shape_bytes(result_shape))
+                else:
+                    nbytes = _shape_bytes(result_shape)
+                out[op] += nbytes
+                counts[op] += 1
+                break
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    collective_bytes: float      # per-device collective bytes
+    model_flops_total: float     # analytic 6ND / 2ND (whole step, all chips)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (per-device HLO FLOPs x chips)."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Simple max-of-terms bound (no overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops_total": self.model_flops_total,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flop_ratio": self.useful_ratio,
+            "step_time_bound_s": self.step_time,
+        }
+
+
+def count_params(cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    import jax
+    import numpy as np
+    from repro.models import param_specs
+
+    specs = param_specs(cfg)
+    total = 0.0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+        n = float(np.prod(leaf.shape))
+        total += n
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if cfg.n_experts and "moe" in names and any(
+                str(nm).startswith("w") and "shared" not in str(nm) for nm in names):
+            active += n * (cfg.top_k / cfg.n_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for
+    inference, D = tokens processed this step."""
+    _, n_active = count_params(cfg)
+    tokens = shape.global_batch * (shape.seq if shape.kind in ("train", "prefill") else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,97 @@
+"""Step functions lowered by the dry-run and executed by the trainer.
+
+``train_step`` embeds the paper's mechanism end-to-end in one compiled
+program: gradient computation for the arriving worker's shard, write-event
+delay bookkeeping (Algorithm 1's ``tau = k - s[worker]``), the delay-adaptive
+step-size (principle (8) via core.stepsize) and the (optionally proximal)
+parameter update.  On the production mesh the "workers" are the data-parallel
+groups; the scalar delay program costs nothing but appears in the lowered HLO
+(the dry-run therefore certifies the full mechanism, not just the model)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import ProxOp, Zero
+from repro.core.stepsize import Adaptive1, StepsizePolicy
+from repro.models import decode_step, forward, loss_fn, prefill
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import (AdamW, DelayAdaptiveOptimizer,
+                                    DelayAdaptiveState, Momentum, Sgd)
+
+__all__ = ["TrainState", "Trainer", "make_trainer", "make_prefill_step",
+           "make_serve_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: DelayAdaptiveState
+
+
+@dataclasses.dataclass(frozen=True)
+class Trainer:
+    cfg: ModelConfig
+    optimizer: DelayAdaptiveOptimizer
+
+    def init(self, key) -> TrainState:
+        from repro.models import init_params
+        params = init_params(self.cfg, key)
+        return TrainState(params=params, opt=self.optimizer.init(params))
+
+    def state_specs(self) -> TrainState:
+        from repro.models import param_specs
+        p = param_specs(self.cfg)
+        opt = jax.eval_shape(self.optimizer.init, p)
+        return TrainState(params=p, opt=opt)
+
+    def train_step(self, state: TrainState, batch: Dict[str, jnp.ndarray],
+                   worker: jnp.ndarray) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, self.cfg, batch), has_aux=True)(state.params)
+        params, opt, gamma, tau = self.optimizer.update(
+            state.params, grads, state.opt, worker)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, gamma=gamma, tau=tau)
+        return TrainState(params=params, opt=opt), metrics
+
+
+def make_trainer(cfg: ModelConfig, policy: Optional[StepsizePolicy] = None,
+                 base: str = "adamw", prox: ProxOp = Zero(),
+                 n_workers: int = 1, lr: float = 1e-3,
+                 grad_clip: Optional[float] = 1.0,
+                 weight_decay: float = 0.0) -> Trainer:
+    """Default production trainer: delay-adaptive AdamW.
+
+    gamma' (the step-size budget of principle (8)) plays the base-LR role;
+    the emitted gamma_k scales the AdamW update by the observed staleness."""
+    policy = policy or Adaptive1(gamma_prime=lr, alpha=0.9)
+    bases = {"adamw": AdamW(weight_decay=weight_decay),
+             "momentum": Momentum(), "sgd": Sgd()}
+    opt = DelayAdaptiveOptimizer(
+        policy=policy, base=bases[base],
+        prox=prox, grad_clip=grad_clip, n_workers=n_workers, horizon=1024)
+    return Trainer(cfg=cfg, optimizer=opt)
+
+
+def make_prefill_step(cfg: ModelConfig, window: Optional[int] = None,
+                      ring: bool = False) -> Callable:
+    if cfg.has_decode:
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch, window=window, ring=ring)
+        return prefill_step
+
+    def encode_step(params, batch):  # encoder-only: logits, no cache
+        logits, _ = forward(params, cfg, batch)
+        return logits
+    return encode_step
+
+
+def make_serve_step(cfg: ModelConfig, window: Optional[int] = None,
+                    ring: bool = False) -> Callable:
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos, window=window,
+                           ring=ring)
+    return serve_step

@@ -1,0 +1,7 @@
+"""Model substrate: configs, layers, attention, MoE, SSM, transformer."""
+from .config import ModelConfig
+from .transformer import (decode_step, forward, init_params, loss_fn,
+                          make_cache, param_specs, prefill)
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_params", "loss_fn",
+           "make_cache", "param_specs", "prefill"]

@@ -1,0 +1,307 @@
+"""Attention: GQA/MHA, MLA (DeepSeek-V2), sliding-window, M-RoPE-compatible;
+train / prefill / decode paths with plain and ring (sliding-window) KV caches.
+
+The default implementation is *query-chunked*: the (Sq, Sk) score matrix is
+materialized only one q-chunk at a time inside a ``lax.scan``, so peak
+activation memory is O(q_chunk * Sk) instead of O(Sq * Sk).  Softmax over the
+full key axis is exact per chunk (no online rescaling needed; the Pallas
+flash kernel in repro.kernels tiles the key axis too and does use online
+softmax).  ``attention_impl``: "chunked" (default), "naive" (materialize all
+scores; oracle), "pallas" (TPU kernel, validated in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import act_constraint, apply_rope, norm_params, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+
+
+def attn_params(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    std = D ** -0.5
+    if cfg.use_mla:
+        ks = jax.random.split(key, 6)
+        H = cfg.n_heads
+        qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
+        p = {
+            "w_dkv": (jax.random.normal(ks[1], (D, cfg.kv_lora_rank + cfg.rope_head_dim)) * std).astype(cfg.pdtype),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.pdtype),
+            "w_uk": (jax.random.normal(ks[2], (cfg.kv_lora_rank, H * cfg.nope_head_dim))
+                     * cfg.kv_lora_rank ** -0.5).astype(cfg.pdtype),
+            "w_uv": (jax.random.normal(ks[3], (cfg.kv_lora_rank, H * cfg.v_head_dim))
+                     * cfg.kv_lora_rank ** -0.5).astype(cfg.pdtype),
+            "wo": (jax.random.normal(ks[4], (H * cfg.v_head_dim, D))
+                   * (H * cfg.v_head_dim) ** -0.5).astype(cfg.pdtype),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = (jax.random.normal(ks[0], (D, cfg.q_lora_rank)) * std).astype(cfg.pdtype)
+            p["q_norm"] = jnp.ones((cfg.q_lora_rank,), cfg.pdtype)
+            p["wq_b"] = (jax.random.normal(ks[5], (cfg.q_lora_rank, H * qk_dim))
+                         * cfg.q_lora_rank ** -0.5).astype(cfg.pdtype)
+        else:
+            p["wq"] = (jax.random.normal(ks[0], (D, H * qk_dim)) * std).astype(cfg.pdtype)
+        return p
+    ks = jax.random.split(key, 4)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, H * hd)) * std).astype(cfg.pdtype),
+        "wk": (jax.random.normal(ks[1], (D, KV * hd)) * std).astype(cfg.pdtype),
+        "wv": (jax.random.normal(ks[2], (D, KV * hd)) * std).astype(cfg.pdtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, D)) * (H * hd) ** -0.5).astype(cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.pdtype)
+    return p
+
+
+# ----------------------------------------------------------------- attend
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """(Sq, Sk) additive mask from absolute positions (invalid kpos = -1)."""
+    valid = kpos[None, :] >= 0
+    if causal:
+        valid &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        valid &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend(q, k, v, qpos, kpos, *, causal: bool, window: Optional[int],
+           scale: float, q_chunk: int, impl: str = "chunked",
+           remat_chunk: bool = False) -> jnp.ndarray:
+    """q (B,Sq,H,dq), k (B,Sk,KV,dq), v (B,Sk,KV,dv) -> (B,Sq,H,dv).
+
+    GQA grouping is einsum-native (no repeated-KV materialization)."""
+    B, Sq, H, dq = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dq)
+
+    if impl == "pallas" and Sq > 1:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, qpos, kpos, causal=causal,
+                                    window=window, scale=scale)
+
+    def chunk_attend(qc, qpc):
+        # bf16-native operands with f32 accumulation (MXU-style): keeps any
+        # sharding-induced gathers of q/k in bf16 (§Perf H1 iter 4)
+        s = jnp.einsum("bqcgd,bscd->bcgqs", qc * jnp.asarray(scale, qc.dtype),
+                       k, preferred_element_type=jnp.float32)
+        s = s + _mask(qpc, kpos, causal, window)[None, None, None]
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bcgqs,bscd->bqcgd", w.astype(v.dtype), v)
+
+    if remat_chunk:
+        # backward recomputes the (q_chunk x Sk) scores instead of stacking
+        # f32 score chunks across the scan (EXPERIMENTS.md §Perf H1)
+        chunk_attend = jax.checkpoint(chunk_attend)
+
+    if impl == "naive" or Sq <= q_chunk:
+        out = chunk_attend(qg, qpos)
+        return out.reshape(B, Sq, H, -1)
+
+    nc = -(-Sq // q_chunk)
+    pad = nc * q_chunk - Sq
+    qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(qpos, (0, pad), constant_values=-1)
+    qg_c = qg_p.reshape(B, nc, q_chunk, KV, G, dq).swapaxes(0, 1)
+    qpos_c = qpos_p.reshape(nc, q_chunk)
+
+    def body(_, xs):
+        qc, qpc = xs
+        return None, chunk_attend(qc, qpc)
+
+    _, outs = jax.lax.scan(body, None, (qg_c, qpos_c))
+    out = outs.swapaxes(0, 1).reshape(B, nc * q_chunk, KV, G, -1)[:, :Sq]
+    return out.reshape(B, Sq, H, -1)
+
+
+# ------------------------------------------------------------- GQA block
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, ring: bool) -> dict:
+    """Per-layer KV cache (stacked over layers by the caller)."""
+    dt = cfg.cdtype
+    if cfg.use_mla:
+        c = {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dt),
+        }
+    else:
+        c = {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    if ring:
+        c["positions"] = jnp.full((max_len,), -1, jnp.int32)
+    return c
+
+
+def _cache_write(cache: dict, updates: dict, pos, ring: bool):
+    """Write one token's entries at absolute position ``pos`` (scalar)."""
+    S = next(iter(cache.values())).shape[1]
+    slot = (pos % S) if ring else pos
+    out = dict(cache)
+    for name, u in updates.items():
+        out[name] = jax.lax.dynamic_update_slice_in_dim(cache[name], u, slot, axis=1)
+    if ring:
+        out["positions"] = cache["positions"].at[slot].set(pos)
+    return out
+
+
+def _kpos_of(cache: dict, pos, ring: bool):
+    S = next(iter(cache.values())).shape[1]
+    if ring:
+        return cache["positions"]
+    # plain cache: slots [0, pos] are valid
+    idx = jnp.arange(S, dtype=jnp.int32)
+    return jnp.where(idx <= pos, idx, -1)
+
+
+def gqa_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, rope_cs,
+                  positions, mode: str, cache: Optional[dict] = None,
+                  pos=None, window: Optional[int] = None,
+                  ring: bool = False) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Standard multi-head / grouped-query attention with RoPE and caching.
+
+    mode: "train" (no cache) | "prefill" (fill cache) | "decode" (Sq == 1).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    scale = hd ** -0.5
+
+    if mode == "decode":
+        cache = _cache_write(cache, {"k": k, "v": v}, pos, ring)
+        kpos = _kpos_of(cache, pos, ring)
+        qpos = jnp.full((1,), pos, jnp.int32)
+        out = attend(q, cache["k"], cache["v"], qpos, kpos, causal=cfg.causal,
+                     window=window, scale=scale, q_chunk=cfg.q_chunk,
+                     impl="chunked")
+    else:
+        # masking uses *sequence order*, independent of the (possibly
+        # multimodal) RoPE position streams
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        out = attend(q, k, v, qpos, qpos, causal=cfg.causal, window=window,
+                     scale=scale, q_chunk=cfg.q_chunk, impl=cfg.attention_impl,
+                     remat_chunk=cfg.remat_chunk)
+        if mode == "prefill":
+            cache = {"k": k, "v": v}
+            if ring:
+                # keep only the last `window` entries in a ring layout
+                cache = {"k": k[:, -window:] if window and S > window else k,
+                         "v": v[:, -window:] if window and S > window else v}
+                W = cache["k"].shape[1]
+                start = jnp.maximum(S - W, 0)
+                cache["positions"] = jnp.arange(W, dtype=jnp.int32) + start
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"].astype(dt))
+    return y, cache
+
+
+# ------------------------------------------------------------- MLA block
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, rope_cs,
+                  positions, mode: str, cache: Optional[dict] = None,
+                  pos=None, window: Optional[int] = None,
+                  ring: bool = False) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Train/prefill: expand the compressed KV once (like a normal MHA).
+    Decode: *absorbed* form -- scores and values computed directly in the
+    kv_lora latent space, so the per-token cost is O(S * r) not O(S * H * d).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    dt = cfg.cdtype
+    scale = (dn + dr) ** -0.5
+
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+        qa = rmsnorm(qa, p["q_norm"])
+        q = jnp.einsum("bsr,rh->bsh", qa, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    ckv_full = act_constraint(ckv_full, cfg)  # keep batch-sharded (§Perf H2)
+    ckv, k_rope = ckv_full[..., :r], ckv_full[..., r:]
+    ckv = rmsnorm(ckv, p["kv_norm"])
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if mode == "decode":
+        cache = _cache_write(cache, {"ckv": ckv, "krope": k_rope}, pos, ring)
+        kpos = _kpos_of(cache, pos, ring)
+        Sk = cache["ckv"].shape[1]
+        # absorbed scores: q_nope W_uk^T . ckv   (+ rope part)
+        w_uk = p["w_uk"].astype(dt).reshape(r, H, dn)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)         # (B,1,H,r)
+        s = jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32),
+                       cache["ckv"].astype(jnp.float32))
+        s += jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                        cache["krope"].astype(jnp.float32))
+        qpos_arr = jnp.full((1,), pos, jnp.int32)
+        s = s * scale + _mask(qpos_arr, kpos, cfg.causal, window)[None, None]
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(dt), cache["ckv"])  # (B,1,H,r)
+        w_uv = p["w_uv"].astype(dt).reshape(r, H, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)            # (B,1,H,dv)
+    else:
+        # expand once; standard MHA (KV == H)
+        k_nope = jnp.einsum("bsr,rh->bsh", ckv, p["w_uk"].astype(dt)).reshape(B, S, H, dn)
+        vvec = jnp.einsum("bsr,rh->bsh", ckv, p["w_uv"].astype(dt)).reshape(B, S, H, dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qpos = jnp.arange(S, dtype=jnp.int32)
+        out = attend(q_full, k_full, vvec, qpos, qpos, causal=cfg.causal,
+                     window=window, scale=scale, q_chunk=cfg.q_chunk,
+                     impl=cfg.attention_impl, remat_chunk=cfg.remat_chunk)
+        if mode == "prefill":
+            if ring and window and S > window:
+                cache = {"ckv": ckv[:, -window:], "krope": k_rope[:, -window:],
+                         "positions": jnp.arange(window, dtype=jnp.int32) + (S - window)}
+            else:
+                cache = {"ckv": ckv, "krope": k_rope}
+                if ring:
+                    cache["positions"] = jnp.arange(S, dtype=jnp.int32)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * dv), p["wo"].astype(dt))
+    return y, cache
+
+
+def attention_block(p, x, cfg: ModelConfig, rope_cs, positions, mode: str,
+                    cache=None, pos=None, window=None, ring=False):
+    fn = mla_attention if cfg.use_mla else gqa_attention
+    return fn(p, x, cfg, rope_cs, positions, mode, cache=cache, pos=pos,
+              window=window, ring=ring)

@@ -1,0 +1,205 @@
+"""Shared neural building blocks: norms, activations, MLPs, embeddings,
+rotary embeddings (standard RoPE, partial rotary, and Qwen2-VL M-RoPE)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+def act_constraint(x: jnp.ndarray, cfg: ModelConfig,
+                   seq_dim: int = 1) -> jnp.ndarray:
+    """Pin activation sharding (EXPERIMENTS.md §Perf): batch -> act_dp_axes,
+    and optionally sequence -> "model" (megatron-style sequence parallelism
+    for the norm/elementwise segments).  No-op unless cfg.shard_activations
+    (which requires an ambient mesh, i.e. the dry-run / pod trainer)."""
+    if not cfg.shard_activations:
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp = (cfg.act_dp_axes if len(cfg.act_dp_axes) > 1
+          else cfg.act_dp_axes[0])
+    spec = [None] * x.ndim
+    if x.shape[0] > 1:
+        spec[0] = dp
+    if cfg.seq_shard and x.ndim >= 3 and x.shape[seq_dim] > 1:
+        spec[seq_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def apply_norm(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_params(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+# ------------------------------------------------------------ activations
+
+
+def activation(name: str):
+    if name == "silu_glu":
+        raise ValueError("GLU handled inside mlp()")
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "silu":
+        return jax.nn.silu
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------------- MLP
+
+
+def mlp_params(key, cfg: ModelConfig, d_in: Optional[int] = None,
+               d_ff: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = d ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d, f)) * std).astype(cfg.pdtype),
+        "w2": (jax.random.normal(k2, (f, d)) * (f ** -0.5)).astype(cfg.pdtype),
+    }
+    if cfg.act == "silu_glu":
+        p["w3"] = (jax.random.normal(k3, (d, f)) * std).astype(cfg.pdtype)
+    if cfg.mlp_bias:
+        p["b1"] = jnp.zeros((f,), cfg.pdtype)
+        p["b2"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.cdtype
+    h = jnp.einsum("...d,df->...f", x, p["w1"].astype(dt))
+    if cfg.mlp_bias and "b1" in p:
+        h = h + p["b1"].astype(dt)
+    if cfg.act == "silu_glu":
+        g = jnp.einsum("...d,df->...f", x, p["w3"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:
+        h = activation(cfg.act)(h)
+    y = jnp.einsum("...f,fd->...d", h, p["w2"].astype(dt))
+    if cfg.mlp_bias and "b2" in p:
+        y = y + p["b2"].astype(dt)
+    return y
+
+
+# ------------------------------------------------------------- embeddings
+
+
+def embed_params(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {}
+    # audio (hubert) consumes frame embeddings only; VLMs still need the text
+    # token table for decode
+    if not cfg.embed_inputs or cfg.family == "vlm":
+        p["tok"] = (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(cfg.pdtype)
+    if not cfg.tie_embeddings or cfg.embed_inputs:
+        p["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab))
+                        * cfg.d_model ** -0.5).astype(cfg.pdtype)
+    return p
+
+
+def embed(p: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return p["tok"].astype(cfg.cdtype)[tokens]
+
+
+def unembed(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings and "unembed" not in p:
+        w = p["tok"].astype(cfg.cdtype).T
+    else:
+        w = p["unembed"].astype(cfg.cdtype)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+# ------------------------------------------------------------------ RoPE
+
+
+def rope_angles(positions: jnp.ndarray, dim_half: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin (..., dim_half) in float32."""
+    inv = theta ** (-jnp.arange(0, dim_half, dtype=jnp.float32) / dim_half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads.
+
+    Rotates pairs (x[..., :hd/2], x[..., hd/2:]) -- the 'rotate_half' layout
+    used by llama-family checkpoints.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mrope_angles(positions: jnp.ndarray, sections: Tuple[int, ...],
+                 theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL M-RoPE.  positions (3, B, S) for (temporal, h, w); sections
+    split head_dim//2.  Returns cos/sin (B, S, head_dim//2): each frequency
+    band uses the position stream of its section."""
+    dim_half = sum(sections)
+    inv = theta ** (-jnp.arange(0, dim_half, dtype=jnp.float32) / dim_half)
+    # angles per position stream: (3, B, S, dim_half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    # frequency band i uses the position stream of its section
+    parts, off = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., off:off + sec])
+        off += sec
+    ang_sel = jnp.concatenate(parts, axis=-1)  # (B, S, dim_half)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+def make_positions(cfg: ModelConfig, batch: int, seq: int,
+                   offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """Default position ids.  For M-RoPE returns (3, B, S) with all three
+    streams equal (pure-text behaviour; the VLM frontend stub supplies real
+    (t, h, w) grids for image patches via input_specs)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def rope_cos_sin(cfg: ModelConfig, positions: jnp.ndarray,
+                 dim_half: Optional[int] = None) -> Optional[Tuple[jnp.ndarray, jnp.ndarray]]:
+    if cfg.rope == "none":
+        return None
+    rot_dim = dim_half or ((cfg.rope_head_dim if cfg.use_mla else cfg.head_dim) // 2)
+    if cfg.rope == "mrope":
+        return mrope_angles(positions, cfg.mrope_sections, cfg.rope_theta)
+    return rope_angles(positions, rot_dim, cfg.rope_theta)

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts layer: top-k router with auxiliary load-balance loss,
+shared (always-on) experts + routed experts.
+
+Dispatch is dense-einsum based ("no token dropping"): for each token the
+top-k expert outputs are computed by gathering expert weights per token is
+avoided; instead we compute a (tokens, experts) combine matrix and contract.
+For pod-scale meshes the experts (or their hidden dim, when the expert count
+does not divide the mesh axis) are sharded over the "model" axis, which turns
+the combine contraction into the expert-parallel all-to-all pattern under
+GSPMD.  A capacity-bucketed gather dispatch is provided as the optimized
+variant (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_ff
+    ks = jax.random.split(key, 7)
+    std = D ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E)) * std).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (E, D, F)) * std).astype(cfg.pdtype),
+        "w3": (jax.random.normal(ks[2], (E, D, F)) * std).astype(cfg.pdtype),
+        "w2": (jax.random.normal(ks[3], (E, F, D)) * F ** -0.5).astype(cfg.pdtype),
+    }
+    if cfg.shared_ff:
+        Fs = cfg.shared_ff
+        p["shared_w1"] = (jax.random.normal(ks[4], (D, Fs)) * std).astype(cfg.pdtype)
+        p["shared_w3"] = (jax.random.normal(ks[5], (D, Fs)) * std).astype(cfg.pdtype)
+        p["shared_w2"] = (jax.random.normal(ks[6], (Fs, D)) * Fs ** -0.5).astype(cfg.pdtype)
+    return p
+
+
+def router_topk(logits: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """logits (T, E) -> (combine (T, E) with top-k softmax weights, aux loss,
+    top-k indices).  Aux loss follows Switch/GShard: E * sum_e f_e * p_e."""
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)    # (T, k, E)
+    combine = jnp.einsum("tk,tke->te", top_w, onehot)
+    frac_tokens = jnp.mean(jnp.max(onehot, axis=1), axis=0)  # f_e
+    mean_prob = jnp.mean(probs, axis=0)                       # p_e
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return combine, aux, top_i
+
+
+def moe_block(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    dt = cfg.cdtype
+    t = x.reshape(B * S, D)
+    combine, aux, _ = router_topk(
+        jnp.einsum("td,de->te", t.astype(jnp.float32), p["router"]), cfg.top_k)
+    combine = combine.astype(dt)  # (T, E)
+
+    # dense dispatch: per-expert activations masked by the combine weights.
+    h1 = jnp.einsum("td,edf->tef", t, p["w1"].astype(dt))
+    h3 = jnp.einsum("td,edf->tef", t, p["w3"].astype(dt))
+    h = jax.nn.silu(h3) * h1
+    y = jnp.einsum("tef,efd,te->td", h, p["w2"].astype(dt), combine)
+
+    if cfg.shared_ff:
+        hs = jax.nn.silu(jnp.einsum("td,df->tf", t, p["shared_w3"].astype(dt))) * \
+             jnp.einsum("td,df->tf", t, p["shared_w1"].astype(dt))
+        y = y + jnp.einsum("tf,fd->td", hs, p["shared_w2"].astype(dt))
+    return y.reshape(B, S, D), aux
+
+
+def moe_block_capacity(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                       capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bucketed dispatch (gather/scatter): each expert processes at
+    most C = ceil(T * k / E * cf) tokens.  FLOPs scale with active experts
+    instead of all experts -- the beyond-paper optimized MoE path."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    dt = cfg.cdtype
+    t = x.reshape(B * S, D)
+    T = t.shape[0]
+    C = max(1, int(T * k / E * capacity_factor))
+
+    logits = jnp.einsum("td,de->te", t.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # position of each (token, slot) within its expert's bucket
+    flat_e = top_i.reshape(-1)                                # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1        # (T*k, E)
+    slot = jnp.max(pos_in_e, axis=-1)                          # (T*k,)
+    keep = slot < C
+    dest = jnp.where(keep, flat_e * C + slot, E * C)           # overflow bin
+
+    buckets = jnp.zeros((E * C + 1, D), dt).at[dest].set(
+        jnp.repeat(t, k, axis=0))
+    xb = buckets[:E * C].reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["w3"].astype(dt))) * \
+        jnp.einsum("ecd,edf->ecf", xb, p["w1"].astype(dt))
+    yb = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt)).reshape(E * C, D)
+    yb = jnp.concatenate([yb, jnp.zeros((1, D), dt)], axis=0)
+    y_slots = yb[dest] * (top_w.reshape(-1, 1).astype(dt))
+    y = jnp.sum(y_slots.reshape(T, k, D), axis=1)
+
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i, E, dtype=jnp.float32).max(axis=1), axis=0)
+    aux = E * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+
+    if cfg.shared_ff:
+        hs = jax.nn.silu(jnp.einsum("td,df->tf", t, p["shared_w3"].astype(dt))) * \
+             jnp.einsum("td,df->tf", t, p["shared_w1"].astype(dt))
+        y = y + jnp.einsum("tf,fd->td", hs, p["shared_w2"].astype(dt))
+    return y.reshape(B, S, D), aux

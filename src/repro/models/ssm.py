@@ -1,0 +1,205 @@
+"""Mamba2 (SSD -- state-space duality, arXiv:2405.21060) block.
+
+The selective state-space recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+    y_t = C_t^T h_t + D x_t
+
+is computed with the *chunked SSD* algorithm: within chunks of length Q the
+quadratic "attention-like" form is used; across chunks the per-chunk final
+states are carried by a scan.  This is the TPU-native adaptation: chunk sizes
+are chosen so the (Q, Q) intra-chunk matmuls land on the MXU and the
+cross-chunk scan is O(S/Q) sequential steps.  A Pallas kernel version of the
+intra-chunk compute lives in repro.kernels.ssd_scan.
+
+Layout follows the mamba2 reference: heads of size P = ssm_head_dim,
+n_groups B/C groups (we use 1), state size N = ssm_state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_n_groups
+    conv_ch = din + 2 * G * N
+    ks = jax.random.split(key, 5)
+    std = D ** -0.5
+    # in_proj emits [z (din), x (din), B (G*N), C (G*N), dt (H)]
+    d_proj = 2 * din + 2 * G * N + H
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (D, d_proj)) * std).astype(cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(jnp.float32),
+        "norm": jnp.ones((din,), cfg.pdtype),
+        "out_proj": (jax.random.normal(ks[2], (din, D)) * din ** -0.5).astype(cfg.pdtype),
+    }
+    return p
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    din, G, N, H = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    x = zxbcdt[..., din:2 * din]
+    B = zxbcdt[..., 2 * din:2 * din + G * N]
+    C = zxbcdt[..., 2 * din + G * N:2 * din + 2 * G * N]
+    dt = zxbcdt[..., 2 * din + 2 * G * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  x (B,S,C), w (K,C).  With ``state``
+    ((B,K-1,C), decode) prepends it and returns the new state."""
+    K = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)
+    else:
+        xin = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xin[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xin[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan (pure jnp oracle; the Pallas kernel mirrors this).
+
+    x  (Bt, S, H, P)   inputs per head
+    dt (Bt, S, H)      positive step sizes
+    A  (H,)            negative decay rates (A = -exp(A_log))
+    B  (Bt, S, G, N)   input projections (G groups broadcast over H)
+    C  (Bt, S, G, N)   output projections
+    h0 optional (Bt, H, P, N) initial state.
+    Returns (y (Bt,S,H,P), h_final (Bt,H,P,N)).
+    """
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert H % G == 0
+    rep = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    xq = x.reshape(Bt, nc, Q, H, P).astype(f32)
+    dtq = dt.reshape(Bt, nc, Q, H).astype(f32)
+    Bq = jnp.repeat(B.reshape(Bt, nc, Q, G, N), rep, axis=3).astype(f32)  # (Bt,nc,Q,H,N)
+    Cq = jnp.repeat(C.reshape(Bt, nc, Q, G, N), rep, axis=3).astype(f32)
+
+    dA = dtq * A.astype(f32)                    # (Bt,nc,Q,H) negative
+    cums = jnp.cumsum(dA, axis=2)               # within-chunk cumulative
+    seg_end = cums[:, :, -1, :]                  # (Bt,nc,H)
+
+    # intra-chunk (quadratic) term: y_intra[t] = sum_{s<=t} C_t.B_s x_s e^{cums_t - cums_s}
+    decay = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (Bt,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle overflows and
+    # where(tri, inf, 0) poisons the backward pass with inf * 0 = nan
+    Lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -1e30))
+    CB = jnp.einsum("bcthn,bcshn->bctsh", Cq, Bq)             # (Bt,nc,Q,Q,H)
+    W = CB * Lmat * dtq[:, :, None, :, :]                      # weight on x_s
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", W, xq)
+
+    # chunk-final states: h_c = e^{seg_end} h_{c-1} + sum_s e^{seg_end - cums_s} dt_s B_s x_s^T
+    state_in = jnp.einsum(
+        "bcsh,bcshn,bcshp->bchpn",
+        jnp.exp(seg_end[:, :, None, :] - cums) * dtq, Bq, xq)  # (Bt,nc,H,P,N)
+
+    def scan_chunks(h, inp):
+        se, s_in = inp                     # (Bt,H), (Bt,H,P,N)
+        h_new = jnp.exp(se)[:, :, None, None] * h + s_in
+        return h_new, h                    # emit state *entering* the chunk
+
+    h_init = jnp.zeros((Bt, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_fin, h_enter = jax.lax.scan(
+        scan_chunks,
+        h_init,
+        (jnp.moveaxis(seg_end, 1, 0), jnp.moveaxis(state_in, 1, 0)))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)   # (Bt,nc,H,P,N)
+
+    # inter-chunk term: y_inter[t] = C_t e^{cums_t} h_enter
+    y_inter = jnp.einsum("bcthn,bchpn->bcthp", Cq * jnp.exp(cums)[..., None], h_enter)
+
+    y = (y_intra + y_inter).reshape(Bt, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_recurrent_step(xt, dtt, A, Bt_, Ct, h):
+    """One decode step.  xt (B,H,P), dtt (B,H), Bt_/Ct (B,G,N), h (B,H,P,N)."""
+    G = Bt_.shape[1]
+    H = xt.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bt_, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Ct, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    h_new = dA[..., None, None] * h + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dtt.astype(jnp.float32), Bh, xt.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    return y.astype(xt.dtype), h_new
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state), cfg.cdtype),
+    }
+
+
+def mamba2_block(p: dict, xres: jnp.ndarray, cfg: ModelConfig, mode: str,
+                 state: Optional[dict] = None) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full Mamba2 mixer.  xres (B, S, D) -> (y (B, S, D), new_state)."""
+    Bt, S, D = xres.shape
+    dt_ = cfg.cdtype
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_n_groups
+    zxbcdt = jnp.einsum("bsd,dp->bsp", xres, p["in_proj"].astype(dt_))
+    z, xc, Bv, Cv, dt_raw = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    if mode == "decode":
+        conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                            p["conv_b"].astype(dt_), state["conv"])
+    else:
+        conv_out, conv_state = _causal_conv(conv_in, p["conv_w"].astype(dt_),
+                                            p["conv_b"].astype(dt_))
+    din = cfg.d_inner
+    xc = conv_out[..., :din]
+    Bv = conv_out[..., din:din + G * N].reshape(Bt, S, G, N)
+    Cv = conv_out[..., din + G * N:].reshape(Bt, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                          # (H,)
+    xh = xc.reshape(Bt, S, H, P)
+
+    if mode == "decode":
+        y1, h_new = ssd_recurrent_step(xh[:, 0], dt[:, 0], A, Bv[:, 0], Cv[:, 0],
+                                       state["h"])
+        y = y1[:, None]
+        new_state = {"h": h_new, "conv": conv_state}
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_fin = ssd_chunked(xh, dt, A, Bv, Cv, cfg.ssm_chunk, h0=h0)
+        new_state = {"h": h_fin, "conv": conv_state} if mode == "prefill" else None
+
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(Bt, S, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"].astype(dt_))
+    return out, new_state

@@ -1,0 +1,403 @@
+"""Model assembly: scan-over-layers transformer for all six families.
+
+* dense / moe / audio / vlm: pre-norm attention + MLP (or MoE) blocks.
+* ssm: Mamba2 mixer blocks (attention-free).
+* hybrid (zamba2-style): groups of ``attn_every`` Mamba2 layers, each group
+  preceded by ONE application of a *shared* attention+MLP block (one set of
+  weights reused by all groups, as in Zamba/Zamba2).
+
+Layers are stacked (leading L axis on every leaf) and executed with
+``lax.scan`` so the compiled HLO is O(1) in depth -- essential for lowering
+the 512-device production mesh in reasonable time.  ``cfg.remat`` wraps the
+layer body in ``jax.checkpoint`` for training.
+
+Three entry points (mirroring the assigned input shapes):
+  forward()      -- train_4k and encoder workloads (logits over all positions)
+  prefill()      -- prefill_32k: full-sequence forward that returns the cache
+  decode_step()  -- decode_32k / long_500k: one token against the cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_block, attn_params, init_cache
+from .config import ModelConfig
+from .layers import (apply_norm, embed, embed_params, make_positions, mlp,
+                     mlp_params, norm_params, rope_cos_sin, unembed)
+from .moe import moe_block, moe_block_capacity, moe_params
+from .ssm import init_ssm_state, mamba2_block, ssm_params
+
+Params = Dict[str, Any]
+
+from .layers import act_constraint  # noqa: E402  (shared with attention.py)
+
+
+# ----------------------------------------------------------------- params
+
+
+def _layer_params(key, cfg: ModelConfig) -> Params:
+    if cfg.family in ("ssm", "hybrid"):
+        k1, _ = jax.random.split(key)
+        return {"ln": norm_params(cfg), "mixer": ssm_params(k1, cfg)}
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": norm_params(cfg), "attn": attn_params(k1, cfg),
+         "ln2": norm_params(cfg)}
+    if cfg.n_experts:
+        p["moe"] = moe_params(k2, cfg)
+    else:
+        p["mlp"] = mlp_params(k2, cfg)
+    return p
+
+
+def _shared_block_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_params(cfg), "attn": attn_params(k1, cfg),
+            "ln2": norm_params(cfg),
+            "mlp": mlp_params(k2, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    cfg.validate()
+    k_emb, k_layers, k_shared, k_out = jax.random.split(key, 4)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_params(k, cfg))(keys)
+    p: Params = {
+        "embed": embed_params(k_emb, cfg),
+        "layers": layers,
+        "final_norm": norm_params(cfg),
+    }
+    if cfg.family == "hybrid":
+        p["shared"] = _shared_block_params(k_shared, cfg)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    """Abstract shapes (no allocation) -- used by the multi-pod dry-run."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ------------------------------------------------------------ layer bodies
+
+
+def _attn_mlp_layer(lp, x, cfg, rope_cs, positions, mode, cache, pos,
+                    window, ring):
+    x = act_constraint(x, cfg)
+    h, new_cache = attention_block(lp["attn"], apply_norm(lp["ln1"], x, cfg),
+                                   cfg, rope_cs, positions, mode, cache=cache,
+                                   pos=pos, window=window, ring=ring)
+    x = x + h
+    z = apply_norm(lp["ln2"], x, cfg)
+    if cfg.n_experts:
+        if cfg.moe_impl == "dense":
+            y, aux = moe_block(lp["moe"], z, cfg)
+        else:
+            y, aux = moe_block_capacity(lp["moe"], z, cfg, cfg.capacity_factor)
+    else:
+        y, aux = mlp(lp["mlp"], z, cfg), jnp.zeros((), jnp.float32)
+    return x + y, new_cache, aux
+
+
+def _mamba_layer(lp, x, cfg, mode, state):
+    x = act_constraint(x, cfg)
+    h, new_state = mamba2_block(lp["mixer"], apply_norm(lp["ln"], x, cfg),
+                                cfg, mode, state=state)
+    return x + h, new_state
+
+
+# ----------------------------------------------------------- trunk (scan)
+
+
+def _run_trunk(params: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+               mode: str, positions, cache=None, pos=None,
+               window: Optional[int] = None, ring: bool = False):
+    """Apply all layers.  Returns (x, new_cache, aux_loss)."""
+    rope_cs = rope_cos_sin(cfg, positions)
+    L = cfg.n_layers
+    use_remat = cfg.remat and mode == "train"
+
+    if cfg.family == "ssm":
+        zero = jnp.zeros((), jnp.float32)
+        if mode == "train":
+            def body_tr(carry, lp):
+                xc, _ = _mamba_layer(lp, carry, cfg, "train", None)
+                return xc, 0.0
+            if use_remat:
+                body_tr = jax.checkpoint(body_tr)
+            x, _ = jax.lax.scan(body_tr, x, params["layers"])
+            return x, None, zero
+        if mode == "prefill":
+            def body_pf(carry, lp):
+                xc, st = _mamba_layer(lp, carry, cfg, "prefill", None)
+                return xc, st
+            x, new_cache = jax.lax.scan(body_pf, x, params["layers"])
+            return x, new_cache, zero
+        def body_dec(carry, xs):
+            lp, st = xs
+            xc, new_st = _mamba_layer(lp, carry, cfg, "decode", st)
+            return xc, new_st
+        x, new_cache = jax.lax.scan(body_dec, x, (params["layers"], cache))
+        return x, new_cache, zero
+
+    if cfg.family == "hybrid":
+        return _run_hybrid(params, x, cfg, mode=mode, positions=positions,
+                           rope_cs=rope_cs, cache=cache, pos=pos,
+                           window=window, ring=ring)
+
+    # dense / moe / audio / vlm
+    def body(carry, xs):
+        xc, aux = carry
+        lp, c_in = xs
+        xc, c_out, aux_l = _attn_mlp_layer(lp, xc, cfg, rope_cs, positions,
+                                           mode, c_in, pos, window, ring)
+        return (xc, aux + aux_l), c_out
+
+    if use_remat:
+        body = jax.checkpoint(body)
+
+    if mode == "train":
+        def body_nc(carry, lp):
+            xc, aux = carry
+            xc, _, aux_l = _attn_mlp_layer(lp, xc, cfg, rope_cs, positions,
+                                           mode, None, pos, window, ring)
+            return (xc, aux + aux_l), 0.0
+        if use_remat:
+            body_nc = jax.checkpoint(body_nc)
+        (x, aux), _ = jax.lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        return x, None, aux
+
+    if mode == "prefill":
+        # cache is created inside the layer; scan emits it
+        def body_pf(carry, lp):
+            xc, aux = carry
+            xc, c_out, aux_l = _attn_mlp_layer(lp, xc, cfg, rope_cs, positions,
+                                               "prefill", None, pos, window, ring)
+            return (xc, aux + aux_l), c_out
+        (x, aux), new_cache = jax.lax.scan(
+            body_pf, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        return x, new_cache, aux
+
+    # decode
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], cache))
+    return x, new_cache, aux
+
+
+def _run_hybrid(params, x, cfg, *, mode, positions, rope_cs, cache, pos,
+                window, ring):
+    """Zamba2-style: outer scan over groups; each group = one shared
+    attention+MLP application + ``attn_every`` Mamba2 layers."""
+    E = cfg.attn_every
+    L = cfg.n_layers
+    assert L % E == 0, "hybrid requires n_layers % attn_every == 0"
+    G = L // E
+    shared = params["shared"]
+
+    group_layers = jax.tree_util.tree_map(
+        lambda leaf: leaf.reshape((G, E) + leaf.shape[1:]), params["layers"])
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        glp, gcache = xs
+        attn_cache_in = gcache["attn"] if gcache is not None else None
+        ssm_state_in = gcache["ssm"] if gcache is not None else None
+        # shared attention + MLP block (weights shared across groups)
+        h, attn_cache_out = attention_block(
+            shared["attn"], apply_norm(shared["ln1"], xc, cfg), cfg, rope_cs,
+            positions, mode, cache=attn_cache_in, pos=pos, window=window,
+            ring=ring)
+        xc = xc + h
+        xc = xc + mlp(shared["mlp"], apply_norm(shared["ln2"], xc, cfg), cfg)
+
+        # E mamba layers
+        if ssm_state_in is not None:
+            def ssm_body(c, l_xs):
+                lp, st = l_xs
+                c, new_st = _mamba_layer(lp, c, cfg, mode, st)
+                return c, new_st
+            xc, ssm_state_out = jax.lax.scan(ssm_body, xc, (glp, ssm_state_in))
+        else:
+            def ssm_body_ns(c, lp):
+                c, _ = _mamba_layer(lp, c, cfg, mode, None)
+                return c, 0.0
+            xc, _ = jax.lax.scan(ssm_body_ns, xc, glp)
+            ssm_state_out = None
+
+        out_cache = None
+        if mode in ("prefill", "decode"):
+            out_cache = {"attn": attn_cache_out, "ssm": ssm_state_out}
+        return (xc, aux), out_cache
+
+    if cfg.remat and mode == "train":
+        group_body = jax.checkpoint(group_body)
+
+    if mode == "train":
+        def gb(carry, glp):
+            (xc, aux), _ = group_body(carry, (glp, None))
+            return (xc, aux), 0.0
+        if cfg.remat:
+            gb = jax.checkpoint(gb)
+        (x, aux), _ = jax.lax.scan(gb, (x, jnp.zeros((), jnp.float32)),
+                                   group_layers)
+        return x, None, aux
+
+    if mode == "prefill":
+        def gb_pf2(carry, glp):
+            xc, aux = carry
+            # shared attn
+            h, attn_c = attention_block(
+                shared["attn"], apply_norm(shared["ln1"], xc, cfg), cfg,
+                rope_cs, positions, "prefill", cache=None, pos=pos,
+                window=window, ring=ring)
+            xc = xc + h
+            xc = xc + mlp(shared["mlp"], apply_norm(shared["ln2"], xc, cfg), cfg)
+            def ssm_body(c, lp):
+                c, st = _mamba_layer(lp, c, cfg, "prefill", None)
+                return c, st
+            xc, ssm_states = jax.lax.scan(ssm_body, xc, glp)
+            return (xc, aux), {"attn": attn_c, "ssm": ssm_states}
+        (x, aux), new_cache = jax.lax.scan(
+            gb_pf2, (x, jnp.zeros((), jnp.float32)), group_layers)
+        return x, new_cache, aux
+
+    # decode
+    (x, aux), new_cache = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), (group_layers, cache))
+    return x, new_cache, aux
+
+
+# -------------------------------------------------------------- frontends
+
+
+def _inputs_to_x(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.cdtype)
+    else:
+        x = embed(params["embed"], batch["tokens"], cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S)
+    return x, positions
+
+
+# ------------------------------------------------------------ entry points
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            window: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (training / encoding).  Returns (logits, aux)."""
+    x, positions = _inputs_to_x(params, cfg, batch)
+    window = window if window is not None else cfg.sliding_window
+    x, _, aux = _run_trunk(params, x, cfg, mode="train", positions=positions,
+                           window=window)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), aux
+
+
+def _ce_terms(logits: jnp.ndarray, labels: jnp.ndarray):
+    """(sum nll, sum mask) for logits (B, S, V), labels (B, S) (-1 = pad)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    return -jnp.sum(ll * mask), jnp.sum(mask)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            window: Optional[int] = None) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    labels = batch["targets"]
+    if cfg.ce_chunk and labels.shape[1] % cfg.ce_chunk == 0:
+        # chunked CE (§Perf): run the trunk once, then unembed + CE one
+        # sequence chunk at a time under jax.checkpoint so the (B, S, V)
+        # logits are never materialized (forward OR backward).
+        x, positions = _inputs_to_x(params, cfg, batch)
+        win = window if window is not None else cfg.sliding_window
+        x, _, aux = _run_trunk(params, x, cfg, mode="train",
+                               positions=positions, window=win)
+        x = apply_norm(params["final_norm"], x, cfg)
+        C = cfg.ce_chunk
+        B, S, D = x.shape
+        xc = x.reshape(B, S // C, C, D).swapaxes(0, 1)          # (nc,B,C,D)
+        lc = labels.reshape(B, S // C, C).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_ce(xck, lck):
+            logits = unembed(params["embed"], xck, cfg)
+            return _ce_terms(logits, lck)
+
+        def body(carry, xs):
+            nll, cnt = carry
+            n, c = chunk_ce(*xs)
+            return (nll + n, cnt + c), 0.0
+
+        (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (xc, lc))
+        ce = nll / jnp.maximum(cnt, 1.0)
+    else:
+        logits, aux = forward(params, cfg, batch, window=window)
+        nll, cnt = _ce_terms(logits, labels)
+        ce = nll / jnp.maximum(cnt, 1.0)
+    total = ce + cfg.router_aux_coef * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               ring: bool = False) -> Any:
+    """Stacked decode cache for all layers (family-dependent structure)."""
+    if cfg.family == "ssm":
+        st = init_ssm_state(cfg, batch)
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape),
+            st)
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        attn = init_cache(cfg, batch, max_len, ring)
+        attn = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (G,) + leaf.shape), attn)
+        st = init_ssm_state(cfg, batch)
+        ssm = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(
+                leaf, (G, cfg.attn_every) + leaf.shape), st)
+        return {"attn": attn, "ssm": ssm}
+    c = init_cache(cfg, batch, max_len, ring)
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape), c)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            window: Optional[int] = None, ring: bool = False):
+    """Full-sequence forward that also returns the cache and last logits."""
+    x, positions = _inputs_to_x(params, cfg, batch)
+    window = window if window is not None else cfg.sliding_window
+    x, cache, _ = _run_trunk(params, x, cfg, mode="prefill",
+                             positions=positions, window=window, ring=ring)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Any,
+                token: jnp.ndarray, pos: jnp.ndarray,
+                window: Optional[int] = None, ring: bool = False):
+    """One decode step.  token (B, 1) int32 (or (B,1,D) embeds); pos scalar."""
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    if token.ndim == 3:
+        x = token.astype(cfg.cdtype)
+        B = x.shape[0]
+    else:
+        x = embed(params["embed"], token, cfg)
+        B = token.shape[0]
+    positions = make_positions(cfg, B, 1, offset=pos)
+    window = window if window is not None else cfg.sliding_window
+    x, cache, _ = _run_trunk(params, x, cfg, mode="decode",
+                             positions=positions, cache=cache, pos=pos,
+                             window=window, ring=ring)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, cache

@@ -1,0 +1,177 @@
+"""Optimizers (from scratch -- no optax in this environment).
+
+``Sgd`` / ``Momentum`` / ``AdamW`` share a tiny (init, update) interface:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates, lr)
+
+The delay-adaptive learning rate from the paper is deliberately kept
+*outside* these rules: ``DelayAdaptiveOptimizer`` composes any base rule with
+a ``core.stepsize`` policy -- gamma_k multiplies the update and is chosen
+from the observed write-event staleness.  This is the "delay-adaptive
+step-sizes plug into any asynchronous learner" framing of the paper's §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import ProxOp, Zero
+from repro.core.stepsize import StepsizePolicy, StepsizeState
+
+Pytree = Any
+
+
+def tree_map(fn, *ts):
+    return jax.tree_util.tree_map(fn, *ts)
+
+
+def apply_updates(params: Pytree, updates: Pytree, lr) -> Pytree:
+    return tree_map(lambda p, u: (p - lr * u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return tree_map(lambda g: g * scale, grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    def init(self, params):
+        return ()
+
+    def update(self, grads, state, params=None):
+        return grads, state
+
+
+class MomentumState(NamedTuple):
+    mu: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Momentum:
+    beta: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params):
+        return MomentumState(mu=tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(self, grads, state, params=None):
+        mu = tree_map(lambda m, g: self.beta * m + g.astype(jnp.float32),
+                      state.mu, grads)
+        if self.nesterov:
+            upd = tree_map(lambda m, g: self.beta * m + g.astype(jnp.float32), mu, grads)
+        else:
+            upd = mu
+        return upd, MomentumState(mu=mu)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Pytree
+    nu: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(count=jnp.zeros((), jnp.int32),
+                         mu=tree_map(z, params), nu=tree_map(z, params))
+
+    def update(self, grads, state, params=None):
+        c = state.count + 1
+        mu = tree_map(lambda m, g: self.b1 * m + (1 - self.b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+        nu = tree_map(lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+        bc1 = 1 - self.b1 ** c.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** c.astype(jnp.float32)
+        upd = tree_map(lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + self.eps), mu, nu)
+        if self.weight_decay and params is not None:
+            upd = tree_map(lambda u, p: u + self.weight_decay * p.astype(jnp.float32),
+                           upd, params)
+        return upd, AdamState(count=c, mu=mu, nu=nu)
+
+
+OPTIMIZERS = {"sgd": Sgd, "momentum": Momentum, "adamw": AdamW}
+
+
+def make_optimizer(name: str, **kw):
+    return OPTIMIZERS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+#  Delay-adaptive composition (the paper's contribution, optimizer-agnostic)
+# ---------------------------------------------------------------------------
+
+
+class DelayAdaptiveState(NamedTuple):
+    step: jnp.ndarray          # master write-event counter
+    ss: StepsizeState          # step-size window state (principle (8))
+    inner: Any                 # base optimizer state
+    worker_stamp: jnp.ndarray  # (n_workers,) iterate version each worker read
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayAdaptiveOptimizer:
+    """Compose a base optimizer with a delay-adaptive step-size policy.
+
+    The policy's gamma' plays the role of the base learning rate; the emitted
+    gamma_k (a function of the true write-event delay tau_k) scales the
+    update, and an optional prox handles the composite term R.
+    """
+
+    policy: StepsizePolicy
+    base: Any = Sgd()
+    prox: ProxOp = Zero()
+    lr_scale: float = 1.0
+    grad_clip: Optional[float] = None
+    n_workers: int = 1
+    horizon: int = 4096
+
+    def init(self, params: Pytree) -> DelayAdaptiveState:
+        return DelayAdaptiveState(
+            step=jnp.zeros((), jnp.int32),
+            ss=self.policy.init(self.horizon),
+            inner=self.base.init(params),
+            worker_stamp=jnp.zeros((self.n_workers,), jnp.int32),
+        )
+
+    def observe(self, state: DelayAdaptiveState, worker) -> Tuple[jnp.ndarray, DelayAdaptiveState]:
+        """Write-event delay bookkeeping (Algorithm 1 lines 12/15)."""
+        tau = state.step - state.worker_stamp[worker]
+        stamps = state.worker_stamp.at[worker].set(state.step + 1)
+        return tau, state._replace(worker_stamp=stamps)
+
+    def step_fn(self, params: Pytree, grads: Pytree, state: DelayAdaptiveState,
+                tau) -> Tuple[Pytree, DelayAdaptiveState, jnp.ndarray]:
+        if self.grad_clip:
+            grads = clip_by_global_norm(grads, self.grad_clip)
+        upd, inner = self.base.update(grads, state.inner, params)
+        gamma, ss = self.policy.step(state.ss, tau)
+        lr = self.lr_scale * gamma
+        params = apply_updates(params, upd, lr)
+        params = self.prox.prox(params, lr)
+        return params, DelayAdaptiveState(step=state.step + 1, ss=ss,
+                                          inner=inner,
+                                          worker_stamp=state.worker_stamp), gamma
+
+    def update(self, params, grads, state, worker):
+        tau, state = self.observe(state, worker)
+        params, state, gamma = self.step_fn(params, grads, state, tau)
+        return params, state, gamma, tau

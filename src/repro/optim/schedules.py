@@ -1,0 +1,33 @@
+"""Learning-rate schedules.  These modulate gamma' (the step-size budget),
+NOT the delay adaptation -- the paper's gamma_k <= gamma' - window_sum
+principle composes with any schedule on gamma' as long as the window sums use
+the *emitted* gammas (which core.stepsize guarantees by construction)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.full((), value, jnp.float32)
+
+
+def linear_warmup(base: float, warmup_steps: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return base * frac
+    return fn
+
+
+def cosine_decay(base: float, total_steps: int, warmup_steps: int = 0,
+                 final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps else 1.0
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base * warm * cos
+    return fn
+
+
+SCHEDULES = {"constant": constant, "linear_warmup": linear_warmup,
+             "cosine": cosine_decay}

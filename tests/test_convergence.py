@@ -1,0 +1,97 @@
+"""Convergence-rate order checks (Corollary 1)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, Adaptive2, Zero, run_piag,
+                        simulate_parameter_server)
+
+
+def _quad_problem(n_workers=4, d=20, seed=0):
+    """f_i(x) = 0.5 (x - c_i)^T D (x - c_i): strongly convex (prox-PL),
+    known L = max(D), sigma = min(D), P* computable in closed form."""
+    rng = np.random.default_rng(seed)
+    D = jnp.asarray(np.linspace(0.5, 2.0, d), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(n_workers, d)), jnp.float32)
+
+    def worker_loss(x, c):
+        return 0.5 * jnp.sum(D * (x - c) ** 2)
+
+    c_bar = jnp.mean(C, axis=0)
+    p_star = float(jnp.mean(jax.vmap(lambda c: worker_loss(c_bar, c))(C)))
+    return worker_loss, C, D, c_bar, p_star
+
+
+def test_piag_linear_rate_under_pl():
+    """Theorem 2(3): under the PL condition the objective error decays
+    geometrically in sum(gamma) -- check the log-error trend is linear and
+    spans several orders of magnitude."""
+    worker_loss, C, D, c_bar, p_star = _quad_problem()
+    trace = simulate_parameter_server(4, 1200, seed=3)
+    L = float(jnp.max(D))
+    x0 = jnp.zeros((C.shape[1],), jnp.float32)
+
+    def objective(x):
+        return jnp.mean(jax.vmap(lambda c: worker_loss(x, c))(C))
+
+    res = run_piag(worker_loss, x0, (C,), trace,
+                   Adaptive1(gamma_prime=0.99 / L), Zero(),
+                   objective=objective)
+    err = np.asarray(res.objective) - p_star
+    assert err[-1] > -1e-5  # P* is a true lower bound
+    err = np.maximum(err, 1e-12)
+    assert err[-1] < 1e-6 * err[0]  # many orders of magnitude
+    # geometric decay: log-error vs cumulative step-size is ~affine until
+    # the float32 noise floor (convergence is exact in f32 on this problem)
+    csum = np.cumsum(np.asarray(res.gammas))
+    floor = np.argmax(err <= 1e-6 * err[0])  # first index at/below 1e-6x
+    floor = floor if floor > 0 else len(err) - 1
+    k = floor // 2
+    slope1 = (np.log(err[k]) - np.log(err[0])) / (csum[k] - csum[0])
+    slope2 = (np.log(err[floor]) - np.log(err[k])) / (csum[floor] - csum[k])
+    assert slope1 < 0 and slope2 < 0
+    assert 0.3 < slope2 / slope1 < 3.0  # same order => linear, not sublinear
+
+
+def test_piag_sublinear_rate_convex():
+    """Theorem 2(2): error <= C / sum(gamma) for convex problems -- check
+    err_k * csum_k stays bounded (O(1/k) order)."""
+    worker_loss, C, D, c_bar, p_star = _quad_problem(seed=1)
+    trace = simulate_parameter_server(4, 800, seed=4)
+    L = float(jnp.max(D))
+    x0 = jnp.zeros((C.shape[1],), jnp.float32)
+
+    def objective(x):
+        return jnp.mean(jax.vmap(lambda c: worker_loss(x, c))(C))
+
+    res = run_piag(worker_loss, x0, (C,), trace,
+                   Adaptive2(gamma_prime=0.99 / L), Zero(),
+                   objective=objective)
+    err = np.maximum(np.asarray(res.objective) - p_star, 1e-12)
+    csum = np.cumsum(np.asarray(res.gammas))
+    prod = err * csum
+    # the bound C = P(x0)-P* + ||x0-x*||^2/(2 a0): check boundedness vs t=10
+    assert prod[100:].max() <= prod[10] * 5.0
+
+
+def test_theorem2_nonconvex_bound_constant():
+    """Theorem 2(1): sum_k gamma_{k-1} ||grad f(x_k) + xi_k||^2
+    <= 2(h^2-h+1)(P(x_0)-P*)/(1-h).  Checked with the exact constant on a
+    PIAG run (prox-gradient mapping residual as the subgradient witness)."""
+    from repro.core import Adaptive1, L1, make_logreg, run_piag_logreg, \
+        simulate_parameter_server
+    h = 0.9
+    prob = make_logreg(600, 80, n_workers=5, seed=2)
+    trace = simulate_parameter_server(5, 1500, seed=6)
+    gp = h / prob.L
+    res = run_piag_logreg(prob, trace, Adaptive1(gamma_prime=gp),
+                          L1(lam=prob.lam1))
+    # ||grad f(x_k) + xi_k|| equals the recorded prox-gradient residual
+    lhs = float(np.sum(np.asarray(res.gammas) *
+                       np.asarray(res.opt_residual) ** 2))
+    p0 = float(prob.P(jnp.zeros((prob.dim,), jnp.float32)))
+    p_star_ub = float(np.min(np.asarray(res.objective)))  # P* <= min seen
+    rhs = 2 * (h * h - h + 1) * (p0 - p_star_ub) / (1 - h)
+    assert lhs <= rhs * 1.01, (lhs, rhs)

@@ -1,0 +1,63 @@
+"""Event-engine and data-pipeline properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (WorkerModel, heterogeneous_workers,
+                        simulate_parameter_server, simulate_shared_memory)
+from repro.data import EmbedStream, TokenStream
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+def test_parameter_server_trace_invariants(seed, n):
+    tr = simulate_parameter_server(n, 300, seed=seed)
+    # wall-clock monotone non-decreasing (events are completions in order)
+    assert np.all(np.diff(tr.t_wall) >= 0)
+    # delays are write-event counts: 0 <= tau <= tau_max <= k
+    k = np.arange(300)
+    assert np.all(tr.tau >= 0) and np.all(tr.tau <= k)
+    assert np.all(tr.tau_max >= tr.tau) and np.all(tr.tau_max <= k)
+    # a worker's reads are strictly increasing (it always picks up the
+    # newest iterate after its own write)
+    for w in range(n):
+        mine = tr.read_at[tr.worker == w]
+        assert np.all(np.diff(mine) > 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_shared_memory_trace_invariants(seed):
+    tr = simulate_shared_memory(4, 200, 10, seed=seed)
+    assert np.all(tr.tau >= 0)
+    assert np.all(np.diff(tr.t_wall) >= 0)
+
+
+def test_straggler_model_increases_delays():
+    fast = simulate_parameter_server(
+        6, 2000, [WorkerModel(mean=1.0)] * 6, seed=0)
+    slow = simulate_parameter_server(
+        6, 2000, [WorkerModel(mean=1.0, p_straggle=0.3, straggle_x=20)] * 6,
+        seed=0)
+    assert slow.max_delay() > fast.max_delay()
+
+
+def test_heterogeneous_workers_speed_spread():
+    ws = heterogeneous_workers(8, spread=3.0, seed=1)
+    means = sorted(w.mean for w in ws)
+    assert means[0] == pytest.approx(1.0)
+    assert means[-1] == pytest.approx(3.0)
+
+
+def test_token_stream_batches_independent_of_order():
+    ts = TokenStream(vocab=128, batch=2, seq=16, seed=3)
+    a = np.asarray(ts.batch_at(7)["tokens"])
+    _ = ts.batch_at(3)
+    b = np.asarray(ts.batch_at(7)["tokens"])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_embed_stream_deterministic():
+    es = EmbedStream(d_model=16, vocab=8, batch=2, seq=10, seed=0)
+    np.testing.assert_allclose(es.batch_at(4)["embeds"],
+                               es.batch_at(4)["embeds"])

@@ -1,0 +1,137 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("shape", [(17,), (1000,), (64, 130), (3, 5, 7),
+                                   (2048,)])
+@pytest.mark.parametrize("kind", ["none", "l1", "l2", "box"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prox_step_sweep(shape, kind, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), shape, dtype)
+    got = ops.prox_step(x, g, 0.13, kind=kind, lam=0.05)
+    want = ref.prox_step_ref(x, g, jnp.float32(0.13), kind=kind, lam=0.05)
+    atol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("dims", [(2, 33, 33, 16), (1, 128, 128, 32),
+                                  (3, 65, 200, 64), (2, 1, 96, 16)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 13),
+                                           (False, None)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(dims, causal, window, dtype):
+    BH, Sq, Sk, d = dims
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, Sq, d), dtype)
+    k = jax.random.normal(ks[1], (BH, Sk, d), dtype)
+    v = jax.random.normal(ks[2], (BH, Sk, d), dtype)
+    qp = jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq)
+    kp = jnp.arange(Sk, dtype=jnp.int32)
+    got = flash_attention_bhsd(q, k, v, qp, kp, causal=causal, window=window,
+                               scale=d ** -0.5, block_q=32, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, qp, kp, causal=causal,
+                                   window=window, scale=d ** -0.5)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_attention_ring_holes():
+    """kpos == -1 slots (ring-cache holes) are ignored."""
+    BH, Sq, Sk, d = 2, 4, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, Sq, d))
+    k = jax.random.normal(ks[1], (BH, Sk, d))
+    v = jax.random.normal(ks[2], (BH, Sk, d))
+    qp = jnp.arange(Sq, dtype=jnp.int32) + 100
+    kp = jnp.where(jnp.arange(Sk) % 3 == 0, -1,
+                   jnp.arange(Sk, dtype=jnp.int32) + 90)
+    got = flash_attention_bhsd(q, k, v, qp, kp, causal=True, window=None,
+                               scale=0.25, block_q=4, block_k=8)
+    want = ref.flash_attention_ref(q, k, v, qp, kp, causal=True, window=None,
+                                   scale=0.25)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("gqa", [(8, 2), (4, 4), (6, 1)])
+def test_flash_gqa_fold_vs_model_attend(gqa):
+    from repro.models.attention import attend
+    H, KV = gqa
+    B, S, d = 2, 45, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, KV, d))
+    v = jax.random.normal(ks[2], (B, S, KV, d))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    got = ops.flash_attention(q, k, v, pos, pos, causal=True, window=None,
+                              scale=0.25)
+    want = attend(q, k, v, pos, pos, causal=True, window=None, scale=0.25,
+                  q_chunk=16, impl="naive")
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("dims", [(2, 40, 4, 8, 2, 16), (1, 64, 2, 16, 1, 8),
+                                  (2, 17, 6, 8, 3, 4)])
+def test_ssd_kernel_sweep(dims):
+    Bt, S, H, P, G, N = dims
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bv = jax.random.normal(ks[3], (Bt, S, G, N))
+    Cv = jax.random.normal(ks[4], (Bt, S, G, N))
+    y1, h1 = ops.ssd_scan_pallas(x, dt, A, Bv, Cv, chunk=16)
+    y2, h2 = ssd_chunked(x, dt, A, Bv, Cv, chunk=16)
+    np.testing.assert_allclose(y1, y2, atol=3e-4)
+    np.testing.assert_allclose(h1, h2, atol=3e-4)
+
+
+def test_ssd_intra_kernel_vs_ref():
+    Q, P, N = 16, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (1, Q, 1, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, Q, 1)))
+    dA = -jax.nn.softplus(jax.random.normal(ks[2], (1, Q, 1)))
+    B = jax.random.normal(ks[3], (1, Q, 1, N))
+    C = jax.random.normal(ks[4], (1, Q, 1, N))
+    from repro.kernels.ssd_scan import ssd_intra_chunk
+    y, st = ssd_intra_chunk(x, dt, dA, B, C)
+    y_r, st_r = ref.ssd_intra_ref(x[0, :, 0], dt[0, :, 0], dA[0, :, 0],
+                                  B[0, :, 0], C[0, :, 0])
+    np.testing.assert_allclose(y[0, :, 0], y_r, atol=1e-5)
+    np.testing.assert_allclose(st[0, 0], st_r, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(7, 64), (2, 33, 128), (300, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_sweep(shape, dtype):
+    from repro.kernels.ops import rmsnorm_fused
+    x = jax.random.normal(KEY, shape, dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(2), (shape[-1],), dtype) + 1.0
+    got = rmsnorm_fused(x, scale)
+    want = ref.rmsnorm_ref(x, scale)
+    atol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_rmsnorm_kernel_matches_model_layer():
+    from repro.kernels.ops import rmsnorm_fused
+    from repro.models.layers import rmsnorm as model_rmsnorm
+    x = jax.random.normal(KEY, (4, 10, 96))
+    scale = jnp.ones((96,)) * 1.3
+    np.testing.assert_allclose(rmsnorm_fused(x, scale),
+                               model_rmsnorm(x, scale), atol=1e-5)

@@ -1,0 +1,159 @@
+"""Model substrate numerics: attention equivalences, SSD duality,
+decode/forward consistency, MoE dispatch equivalence, M-RoPE."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (decode_step, forward, init_params, loss_fn,
+                          make_cache, prefill)
+from repro.models.attention import attend
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_block, moe_block_capacity, moe_params
+from repro.models.ssm import ssd_chunked, ssd_recurrent_step
+
+KEY = jax.random.PRNGKey(0)
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab=97, q_chunk=8)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 9])
+def test_chunked_equals_naive_attention(causal, window):
+    B, S, H, KV, hd = 2, 37, 8, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = attend(q, k, v, pos, pos, causal=causal, window=window, scale=0.25,
+               q_chunk=8, impl="chunked")
+    b = attend(q, k, v, pos, pos, causal=causal, window=window, scale=0.25,
+               q_chunk=8, impl="naive")
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [5, 8, 25])
+def test_ssd_chunked_equals_recurrence(chunk):
+    Bt, S, H, P, G, N = 2, 25, 4, 8, 2, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bv = jax.random.normal(ks[3], (Bt, S, G, N))
+    Cv = jax.random.normal(ks[4], (Bt, S, G, N))
+    y_c, hf = ssd_chunked(x, dt, A, Bv, Cv, chunk=chunk)
+    h = jnp.zeros((Bt, H, P, N))
+    ys = []
+    for t in range(S):
+        y_t, h = ssd_recurrent_step(x[:, t], dt[:, t], A, Bv[:, t], Cv[:, t], h)
+        ys.append(y_t)
+    np.testing.assert_allclose(y_c, jnp.stack(ys, 1), atol=3e-4)
+    np.testing.assert_allclose(hf, h, atol=3e-4)
+
+
+def _decode_matches_forward(cfg, atol=3e-3, steps=10):
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, steps), 0, cfg.vocab)
+    logits_full, _ = forward(params, cfg, {"tokens": toks})
+    cache = make_cache(cfg, 1, steps)
+    for t in range(steps):
+        lg, cache = decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                jnp.int32(t))
+        err = float(jnp.abs(lg[0, 0] - logits_full[0, t]).max())
+        assert err < atol, (cfg.name, t, err)
+
+
+def test_decode_matches_forward_gqa():
+    _decode_matches_forward(ModelConfig(name="d", **BASE))
+
+
+def test_decode_matches_forward_mla_absorbed():
+    _decode_matches_forward(ModelConfig(
+        name="m", use_mla=True, kv_lora_rank=32, q_lora_rank=48,
+        rope_head_dim=8, nope_head_dim=16, v_head_dim=16, **BASE))
+
+
+def test_decode_matches_forward_ssm():
+    _decode_matches_forward(ModelConfig(
+        name="s", family="ssm", n_layers=2, d_model=64, vocab=97,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8, d_ff=0, rope="none"))
+
+
+def test_decode_matches_forward_hybrid():
+    _decode_matches_forward(ModelConfig(
+        name="h", family="hybrid", n_layers=4, attn_every=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=97,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8, q_chunk=8))
+
+
+def test_sliding_window_ring_decode_matches_plain():
+    """Ring cache with window W == plain cache decode with window W."""
+    cfg = ModelConfig(name="w", **BASE)
+    params = init_params(cfg, KEY)
+    S = 24
+    W = 8
+    toks = jax.random.randint(KEY, (1, S), 0, cfg.vocab)
+    plain = make_cache(cfg, 1, S)
+    ring = make_cache(cfg, 1, W, ring=True)
+    for t in range(S):
+        lg_p, plain = decode_step(params, cfg, plain, toks[:, t:t + 1],
+                                  jnp.int32(t), window=W)
+        lg_r, ring = decode_step(params, cfg, ring, toks[:, t:t + 1],
+                                 jnp.int32(t), window=W, ring=True)
+        np.testing.assert_allclose(lg_p, lg_r, atol=2e-3)
+
+
+def test_moe_capacity_matches_dense_when_no_drop():
+    cfg = ModelConfig(name="moe", family="moe", n_experts=4, top_k=2,
+                      moe_ff=32, shared_ff=32, **BASE)
+    p = moe_params(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y_d, aux_d = moe_block(p, x, cfg)
+    y_c, aux_c = moe_block_capacity(p, x, cfg, capacity_factor=4.0)
+    np.testing.assert_allclose(y_d, y_c, atol=2e-4)
+    np.testing.assert_allclose(aux_d, aux_c, atol=1e-5)
+
+
+def test_moe_aux_loss_minimum_is_topk():
+    """Load-balance loss: balanced routing gives aux == k (its minimum for
+    top-k); concentrating probability on the chosen experts raises it."""
+    from repro.models.moe import router_topk
+    _, aux_bal, _ = router_topk(jnp.zeros((64, 4)), 2)
+    assert 1.95 < float(aux_bal) < 2.05
+    skew = jnp.tile(jnp.array([[8.0, 8.0, -8.0, -8.0]]), (64, 1))
+    _, aux_skew, _ = router_topk(skew, 2)
+    assert float(aux_skew) > float(aux_bal) + 1.5
+
+
+def test_mrope_reduces_to_rope_for_text():
+    """With all three position streams equal, M-RoPE == standard RoPE."""
+    from repro.models.layers import mrope_angles, rope_angles
+    pos = jnp.arange(10, dtype=jnp.int32)[None]  # (1, 10)
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 10))
+    c1, s1 = rope_angles(pos, 8, 10000.0)
+    c3, s3 = mrope_angles(pos3, (4, 2, 2), 10000.0)
+    np.testing.assert_allclose(c1, c3, atol=1e-6)
+    np.testing.assert_allclose(s1, s3, atol=1e-6)
+
+
+def test_encoder_has_no_decode():
+    cfg = ModelConfig(name="enc", family="audio", embed_inputs=True,
+                      causal=False, has_decode=False, **BASE)
+    params = init_params(cfg, KEY)
+    with pytest.raises(ValueError):
+        decode_step(params, cfg, None, jnp.zeros((1, 1), jnp.int32),
+                    jnp.int32(0))
+
+
+def test_pallas_attention_impl_in_model():
+    """attention_impl='pallas' (interpret) == 'naive' end to end."""
+    cfg_n = ModelConfig(name="n", attention_impl="naive", **BASE)
+    cfg_p = ModelConfig(name="p", attention_impl="pallas", **BASE)
+    params = init_params(cfg_n, KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg_n.vocab)
+    ln, _ = forward(params, cfg_n, {"tokens": toks})
+    lp, _ = forward(params, cfg_p, {"tokens": toks})
+    np.testing.assert_allclose(ln, lp, atol=2e-3)

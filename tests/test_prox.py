@@ -1,0 +1,57 @@
+"""Proximal operators: closed-form optimality + nonexpansiveness properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import Box, ElasticNet, GroupL2, L1, L2Squared, Zero, make_prox
+
+OPS = [Zero(), L1(lam=0.3), L2Squared(lam=0.5), ElasticNet(lam1=0.2, lam2=0.4),
+       Box(lo=-0.7, hi=0.7), GroupL2(lam=0.3)]
+
+
+@pytest.mark.parametrize("op", OPS, ids=lambda o: type(o).__name__)
+def test_prox_optimality(op):
+    """prox(x) minimizes R(y) + ||y-x||^2/(2 gamma): compare against a grid
+    of perturbations."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(12,)), jnp.float32)
+    gamma = 0.37
+    p = op.prox(x, gamma)
+    def obj(y):
+        return float(op.value(y) + jnp.sum((y - x) ** 2) / (2 * gamma))
+    base = obj(p)
+    for _ in range(30):
+        y = p + jnp.asarray(rng.normal(size=(12,)) * 0.1, jnp.float32)
+        if isinstance(op, Box):
+            y = jnp.clip(y, op.lo, op.hi)
+        assert obj(y) >= base - 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.01, 2.0),
+       st.integers(0, len(OPS) - 1))
+def test_prox_nonexpansive(seed, gamma, op_idx):
+    """||prox(x) - prox(y)|| <= ||x - y|| (firm nonexpansiveness)."""
+    op = OPS[op_idx]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(20,)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(20,)), jnp.float32)
+    px, py = op.prox(x, gamma), op.prox(y, gamma)
+    assert float(jnp.linalg.norm(px - py)) <= float(jnp.linalg.norm(x - y)) + 1e-5
+
+
+def test_prox_pytree():
+    op = L1(lam=0.1)
+    tree = {"a": jnp.ones((3,)), "b": {"c": -jnp.ones((2, 2)) * 0.05}}
+    out = op.prox(tree, 1.0)
+    np.testing.assert_allclose(out["a"], 0.9 * np.ones(3), atol=1e-6)
+    np.testing.assert_allclose(out["b"]["c"], np.zeros((2, 2)), atol=1e-6)
+
+
+def test_registry():
+    assert type(make_prox("l1", lam=0.1)) is L1
+    with pytest.raises(ValueError):
+        make_prox("nope")

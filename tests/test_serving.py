@@ -1,0 +1,62 @@
+"""Continuous-batching scheduler: correctness vs single-request generate."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.serve import generate
+from repro.launch.train import PRESETS
+from repro.models import init_params
+from repro.serving import ContinuousBatcher, Request
+
+CFG = PRESETS["25m"].replace(n_layers=2, d_model=128, n_heads=4,
+                             n_kv_heads=2, head_dim=32, d_ff=256, vocab=256,
+                             name="lm-serve")
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _prompts(n, rng):
+    return [rng.integers(0, CFG.vocab, size=rng.integers(4, 12)).astype(np.int32)
+            for _ in range(n)]
+
+
+def test_batcher_completes_all_requests():
+    rng = np.random.default_rng(0)
+    cb = ContinuousBatcher(CFG, PARAMS, max_slots=3, max_len=64)
+    reqs = [Request(rid=i, prompt=p, max_new=int(rng.integers(3, 9)))
+            for i, p in enumerate(_prompts(7, rng))]
+    for r in reqs:
+        cb.submit(r)
+    stats = cb.run_until_idle()
+    assert stats["completed"] == 7
+    for r in reqs:
+        assert r.output is not None and 1 <= len(r.output) <= r.max_new
+        assert r.t_first_token is not None and r.t_done >= r.t_first_token
+
+
+def test_batcher_matches_single_request_greedy():
+    """Greedy outputs must equal the reference single-sequence generate
+    (continuous batching is a scheduling change, not a model change)."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, CFG.vocab, size=8).astype(np.int32)
+    gen = 6
+    ref, _ = generate(CFG, PARAMS, jnp.asarray(prompt)[None, :], gen)
+    ref_new = np.asarray(ref[0, len(prompt):])
+
+    cb = ContinuousBatcher(CFG, PARAMS, max_slots=2, max_len=64)
+    # add a competing request so scheduling actually interleaves
+    cb.submit(Request(rid=0, prompt=prompt, max_new=gen))
+    cb.submit(Request(rid=1, prompt=_prompts(1, rng)[0], max_new=4))
+    cb.run_until_idle()
+    out = next(r for r in cb.done if r.rid == 0).output
+    np.testing.assert_array_equal(out, ref_new)
+
+
+def test_slots_recycle():
+    rng = np.random.default_rng(2)
+    cb = ContinuousBatcher(CFG, PARAMS, max_slots=1, max_len=64)
+    for i, p in enumerate(_prompts(3, rng)):
+        cb.submit(Request(rid=i, prompt=p, max_new=3))
+    stats = cb.run_until_idle()
+    assert stats["completed"] == 3  # one slot served all three sequentially

@@ -1,0 +1,70 @@
+"""Input-shape policy logic: windows, ring caches, cache lengths, specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, input_specs
+from repro.configs.shapes import cache_len, decode_window, uses_ring
+
+
+def test_long_context_uses_ring_for_attention_archs():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        shp = SHAPES["long_500k"]
+        if not cfg.has_decode:
+            continue
+        if cfg.family == "ssm":
+            assert not uses_ring(cfg, shp)
+            assert decode_window(cfg, shp) is None
+        else:
+            assert uses_ring(cfg, shp)
+            w = decode_window(cfg, shp)
+            assert w is not None and w <= 8192
+            assert cache_len(cfg, shp) == w  # cache is O(window), not O(500k)
+
+
+def test_decode_32k_keeps_native_behaviour():
+    cfg = get_config("starcoder2-15b")  # native sliding window 4096
+    shp = SHAPES["decode_32k"]
+    assert decode_window(cfg, shp) == 4096
+    assert not uses_ring(cfg, shp)
+    assert cache_len(cfg, shp) == 32768
+    cfg2 = get_config("yi-34b")  # full attention
+    assert decode_window(cfg2, shp) is None
+
+
+def test_input_specs_are_abstract():
+    """Specs must be ShapeDtypeStructs -- no device allocation in dry-run."""
+    for a in ["deepseek-v2-236b", "mamba2-780m", "qwen2-vl-72b",
+              "hubert-xlarge"]:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, _ = applicable(cfg, s)
+            if not ok:
+                continue
+            specs = input_specs(cfg, s)
+            for leaf in jax.tree_util.tree_leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), (a, s.name)
+
+
+def test_vlm_specs_include_mrope_positions():
+    cfg = get_config("qwen2-vl-72b")
+    sp = input_specs(cfg, SHAPES["train_4k"])["batch"]
+    assert "positions" in sp and sp["positions"].shape == (3, 256, 4096)
+    assert "embeds" in sp and sp["embeds"].shape == (256, 4096, 8192)
+    assert sp["embeds"].dtype == jnp.bfloat16
+
+
+def test_audio_specs_are_embeddings_without_positions():
+    cfg = get_config("hubert-xlarge")
+    sp = input_specs(cfg, SHAPES["prefill_32k"])["batch"]
+    assert "embeds" in sp and "tokens" not in sp and "positions" not in sp
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_config("deepseek-v2-236b")
+    sp = input_specs(cfg, SHAPES["decode_32k"])
+    leaves = jax.tree_util.tree_leaves(sp["cache"])
+    # latent cache: (L, B, S, 512) + rope (L, B, S, 64) -- NOT per-head KV
+    total_per_tok = sum(l.size // (128 * 32768) for l in leaves)
+    assert total_per_tok == 60 * (512 + 64)

@@ -1,0 +1,100 @@
+"""Step-size policies: principle (8), window sums, Proposition 1."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, NaiveAdaptive,
+                        SunDengFixed, check_principle, make_delays,
+                        make_policy, prop1_lower_bounds, window_sum)
+from repro.core.stepsize import init_state
+
+GAMMA = 0.7
+
+
+def brute_window_sum(gammas, k, tau):
+    return float(np.sum(gammas[max(k - tau, 0):k]))
+
+
+def test_window_sum_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    state = init_state(64)
+    gammas = []
+    pol = Adaptive1(gamma_prime=GAMMA)
+    for k in range(200):
+        tau = int(rng.integers(0, min(k, 50) + 1))
+        ws, _ = window_sum(state, jnp.int32(tau))
+        assert abs(float(ws) - brute_window_sum(gammas, k, tau)) < 1e-4
+        g, state = pol.step(state, jnp.int32(tau))
+        gammas.append(float(g))
+
+
+@pytest.mark.parametrize("model", ["constant", "random", "burst", "markov"])
+@pytest.mark.parametrize("policy_name", ["adaptive1", "adaptive2", "fixed"])
+def test_policies_satisfy_principle(model, policy_name):
+    taus = make_delays(model, 400, 15, seed=1)
+    kwargs = {"tau_bound": 15} if policy_name == "fixed" else {}
+    pol = make_policy(policy_name, GAMMA, **kwargs)
+    g = np.asarray(pol.run(taus))
+    assert check_principle(g, taus, GAMMA)
+    assert g.sum() > 0  # and sum gamma = inf in the limit (nonzero rate)
+
+
+def test_naive_violates_principle():
+    taus = make_delays("constant", 300, 10, seed=0)
+    g = np.asarray(NaiveAdaptive(gamma_prime=GAMMA, b=1.0).run(taus))
+    assert not check_principle(g, taus, GAMMA)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40),
+       st.sampled_from(["adaptive1", "adaptive2"]))
+def test_principle_property(seed, tau_max, policy_name):
+    """Hypothesis: for ANY bounded delay trace, the adaptive policies obey
+    Eq. (8) -- the system invariant the convergence proof needs."""
+    rng = np.random.default_rng(seed)
+    n = 150
+    taus = np.minimum(rng.integers(0, tau_max + 1, size=n), np.arange(n))
+    pol = make_policy(policy_name, GAMMA)
+    g = np.asarray(pol.run(taus.astype(np.int32)))
+    assert check_principle(g, taus, GAMMA)
+    assert np.all(g >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 25))
+def test_prop1_lower_bounds(seed, tau_max):
+    rng = np.random.default_rng(seed)
+    n = 300
+    taus = np.minimum(rng.integers(0, tau_max + 1, size=n), np.arange(n))
+    alpha = 0.9
+    g1 = np.asarray(Adaptive1(gamma_prime=GAMMA, alpha=alpha).run(taus))
+    lhs, b1, _ = prop1_lower_bounds(g1, taus, GAMMA, alpha, tau_max)
+    assert np.all(lhs >= b1 - 1e-5), "Eq. (15) violated"
+    g2 = np.asarray(Adaptive2(gamma_prime=GAMMA).run(taus))
+    lhs2, _, b2 = prop1_lower_bounds(g2, taus, GAMMA, alpha, tau_max)
+    assert np.all(lhs2 >= b2 - 1e-5), "Eq. (16) violated"
+
+
+def test_burst_speedup_vs_fixed():
+    """Paper §3.4: under burst delays the adaptive integral approaches
+    alpha*(tau+1) x the fixed policy's."""
+    tau = 5
+    taus = make_delays("burst", 2000, tau, period=100)
+    g_ad = np.asarray(Adaptive1(gamma_prime=GAMMA, alpha=0.9).run(taus)).sum()
+    g_fx = np.asarray(FixedStepSize(gamma_prime=GAMMA, tau_bound=tau).run(taus)).sum()
+    assert g_ad > 3.0 * g_fx  # asymptotically 0.9 * 6 = 5.4x
+
+
+def test_no_delay_runs_at_full_budget():
+    taus = np.zeros(50, np.int32)
+    g = np.asarray(Adaptive2(gamma_prime=GAMMA).run(taus))
+    np.testing.assert_allclose(g, GAMMA, rtol=1e-6)
+
+
+def test_fixed_variants():
+    for pol in [SunDengFixed(gamma_prime=GAMMA, tau_bound=7),
+                make_policy("davis", GAMMA, tau_bound=7, ratio=0.5)]:
+        g = np.asarray(pol.run(np.zeros(10, np.int32)))
+        assert np.all(g > 0) and np.all(np.diff(g) == 0)

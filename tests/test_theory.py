@@ -1,0 +1,73 @@
+"""Theorem 1, Example 1, and convergence-rate order checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Adaptive1, Adaptive2, NaiveAdaptive, example1,
+                        example1_divergence_threshold, verify_theorem1)
+
+
+def test_example1_divergence_naive():
+    """Paper Example 1: gamma_k = c/(tau_k+b) diverges when T > b(e^{2/c}-1)."""
+    c, b = 0.5, 1.0
+    T = example1_divergence_threshold(c, b)
+    xs, gammas, taus = example1(NaiveAdaptive(gamma_prime=c, b=b), T, 40)
+    assert xs[-1] > 1e3 * xs[0]
+    # per-period contraction factor |1 - sum gamma| > 1
+    s = gammas[:T].sum()
+    assert s > 2.0
+
+
+def test_example1_adaptive_converges():
+    c, b = 0.5, 1.0
+    T = example1_divergence_threshold(c, b)
+    for pol in [Adaptive1(gamma_prime=0.9, alpha=0.9),
+                Adaptive2(gamma_prime=0.9)]:
+        xs, _, _ = example1(pol, T, 40)
+        assert xs[-1] < 1e-6
+
+
+def _mk_theorem1_instance(rng, K, linear=False):
+    """Random non-negative sequences engineered to satisfy (9)-(10)."""
+    taus = np.minimum(rng.integers(0, 6, size=K), np.arange(K))
+    q = np.full(K, 0.95 if linear else 1.0)
+    W = rng.random(K) * 2.0
+    r = np.full(K, 2.0)
+    p = np.full(K, 0.05)   # small p => (10) easy to satisfy; checked anyway
+    V = np.zeros(K + 1)
+    X = np.zeros(K + 1)
+    V[0] = 10.0
+    for k in range(K):
+        tau = int(taus[k])
+        budget = q[k] * V[k] + p[k] * W[k - tau:k].sum() - r[k] * W[k]
+        if budget < 0:
+            W[k] = max(0.0, W[k] + budget / r[k])  # shrink W_k to keep RHS >= 0
+            budget = q[k] * V[k] + p[k] * W[k - tau:k].sum() - r[k] * W[k]
+        split = rng.random()
+        X[k + 1] = max(budget, 0.0) * split * rng.random()
+        V[k + 1] = max(budget, 0.0) - X[k + 1]
+    return V, X, W, p, r, q, taus
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_theorem1_numeric(seed, linear):
+    rng = np.random.default_rng(seed)
+    V, X, W, p, r, q, taus = _mk_theorem1_instance(rng, 60, linear)
+    rep = verify_theorem1(V, X, W, p, r, q, taus)
+    if rep.premises_hold:
+        assert rep.conclusion_V, "Eq. (11) failed though premises hold"
+        assert rep.conclusion_X, "Eq. (12) failed though premises hold"
+
+
+def test_rate_order_sublinear():
+    """Corollary 1: with bounded delays, sum of step-sizes grows linearly ->
+    O(1/k) objective rate for convex PIAG (checked on the integral)."""
+    rng = np.random.default_rng(3)
+    n = 800
+    taus = np.minimum(rng.integers(0, 9, size=n), np.arange(n))
+    g = np.asarray(Adaptive1(gamma_prime=1.0).run(taus.astype(np.int32)))
+    csum = np.cumsum(g)
+    # integral lower bound ~ alpha*gamma'/(tau+1) * k  (Prop. 1)
+    k = np.arange(1, n + 1)
+    assert np.all(csum >= 0.9 * 1.0 / 9.0 * k * 0.5 - 1e-6)
