@@ -1,6 +1,6 @@
 """Benchmark harness -- one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 roofline kernels]
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 roofline kernels]
 
 Prints ``name,us_per_call,derived`` CSV lines.
 """
@@ -28,6 +28,9 @@ def main() -> None:
     if want("fig4"):
         from . import fig4_bcd
         fig4_bcd.run()
+    if want("fig5"):
+        from . import fig5_federated
+        fig5_federated.run()
     if want("kernels"):
         from . import kernel_bench
         kernel_bench.run()

@@ -1,0 +1,57 @@
+"""Delay-adaptive FedAsync on l1-regularized logistic regression.
+
+The server-side analogue of the paper's result: on the SAME federated event
+trace (heterogeneous straggler clients, dropouts), a staleness-ADAPTIVE
+mixing weight alpha * s(tau_k) driven by the measured per-upload delay
+converges far faster than a constant weight tuned to the worst-case
+staleness bound -- because it spends the full mixing budget whenever the
+arriving model happens to be fresh.
+
+    PYTHONPATH=src python examples/fedasync_logreg.py
+"""
+import numpy as np
+
+from repro.core import L1, make_logreg, make_policy, solve_centralized
+from repro.federated import (heterogeneous_clients, run_fedasync_problem,
+                             simulate_federated)
+
+
+def main() -> None:
+    prob = make_logreg(n_samples=500, dim=50, n_workers=8, seed=0)
+    prox = L1(lam=prob.lam1)
+    _, objs = solve_centralized(prob, prox, iters=3000)
+    p_star = float(objs[-1])
+    gap0 = float(prob.P(np.zeros(prob.dim, np.float32))) - p_star
+    print(f"logreg: {prob.A.shape[0]} samples over 8 clients, "
+          f"centralized P* = {p_star:.5f}")
+
+    # one shared trace: heterogeneous clients with stragglers and dropouts
+    clients = heterogeneous_clients(8, spread=4.0, seed=1, p_straggle=0.05,
+                                    p_dropout=0.02)
+    trace = simulate_federated(8, 3000, clients, seed=1)
+    tau_max = trace.max_delay()
+    print(f"{trace.n_events} uploads, staleness p50/p90/max = "
+          f"{int(np.percentile(trace.tau, 50))}/"
+          f"{int(np.percentile(trace.tau, 90))}/{tau_max} "
+          f"(measured on-line, never assumed)")
+
+    alpha = 0.4
+    policies = {
+        "hinge (adaptive)": make_policy("hinge", alpha, a=0.5, b=16.0),
+        "poly (adaptive)": make_policy("poly", alpha, a=0.3),
+        "fixed tau-bound": make_policy("constant", alpha / (tau_max + 1)),
+    }
+
+    target = 0.2 * gap0
+    for name, pol in policies.items():
+        res = run_fedasync_problem(prob, trace, pol, prox,
+                                   local_lr=0.5 / prob.L)
+        sub = np.asarray(res.objective) - p_star
+        hit = int(np.argmax(sub <= target)) if (sub <= target).any() else -1
+        reached = f"{hit} uploads" if hit >= 0 else "never"
+        print(f"{name:18s} final P-P* = {sub[-1]:.5f}  "
+              f"reaches 20% gap after {reached}")
+
+
+if __name__ == "__main__":
+    main()

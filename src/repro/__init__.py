@@ -4,6 +4,8 @@ ICML 2022) as a production-grade multi-pod JAX framework.
 Subpackages:
   core        the paper: step-size principle (8), policies, PIAG, Async-BCD,
               delay tracking, event engine, threaded runtimes, theory checks
+  federated   delay-adaptive async federated learning: FedAsync/FedBuff
+              servers driven by the same staleness-weight machinery
   models      dense / MoE / SSM / hybrid / audio / VLM substrate
   optim       optimizers + DelayAdaptiveOptimizer composition
   data        deterministic synthetic pipelines

@@ -11,17 +11,18 @@ Public API::
 from .async_sgd import AsyncOptState, AsyncSGD
 from .bcd import BCDResult, run_async_bcd, run_bcd_logreg
 from .delay import DelayTracker, make_delays, DELAY_MODELS
-from .engine import (EventTrace, WorkerModel, heterogeneous_workers,
+from .engine import (EventHeap, EventTrace, WorkerModel, heterogeneous_workers,
                      simulate_parameter_server, simulate_shared_memory)
 from .piag import PIAGResult, run_piag, run_piag_lipschitz, run_piag_logreg
-from .problems import LogRegProblem, Quadratic, make_logreg
+from .problems import (LassoProblem, LogRegProblem, Quadratic, make_lasso,
+                       make_logreg, solve_centralized)
 from .prox import (PROX_OPS, Box, ElasticNet, GroupL2, L1, L2Squared, ProxOp,
                    Zero, make_prox)
 from .runtime import PIAGServer, RunLog, SharedMemoryBCD
 from .stepsize import (POLICIES, Adaptive1, Adaptive2, AdaptiveLipschitz, DavisFixed,
-                       FixedStepSize, NaiveAdaptive, StepsizePolicy,
-                       StepsizeState, SunDengFixed, init_state, make_policy,
-                       window_sum)
+                       FixedStepSize, HingeWeight, NaiveAdaptive, PolyWeight,
+                       StepsizePolicy, StepsizeState, SunDengFixed, init_state,
+                       make_policy, window_sum)
 from .theory import (check_principle, example1, example1_divergence_threshold,
                      prop1_lower_bounds, verify_theorem1)
 

@@ -102,7 +102,19 @@ class DelayTracker:
         return v
 
     def delay(self, worker: int) -> int:
-        tau = self.k - self.stamps.get(worker, 0)
+        """Current staleness of ``worker``'s data.
+
+        Raises ``KeyError`` for a worker that was never stamped: silently
+        assuming stamp 0 would report staleness ``k`` -- an arbitrarily large
+        delay that crushes any delay-adaptive step-size to zero and is
+        indistinguishable from a real straggler.  Callers must ``stamp()``
+        each worker when handing it the initial iterate (Algorithm 1 line 3).
+        """
+        if worker not in self.stamps:
+            raise KeyError(
+                f"worker {worker} has no stamp; call stamp({worker}, version) "
+                "when it first reads the iterate (Algorithm 1 line 3)")
+        tau = self.k - self.stamps[worker]
         self.max_seen = max(self.max_seen, tau)
         return tau
 

@@ -26,7 +26,8 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["WorkerModel", "EventTrace", "simulate_parameter_server", "simulate_shared_memory"]
+__all__ = ["WorkerModel", "EventTrace", "EventHeap", "simulate_parameter_server",
+           "simulate_shared_memory"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +63,35 @@ def heterogeneous_workers(n: int, spread: float = 2.0, seed: int = 0,
     rng.shuffle(means)
     return [WorkerModel(mean=float(m), p_straggle=p_straggle, straggle_x=straggle_x)
             for m in means]
+
+
+class EventHeap:
+    """Deterministic discrete-event queue of in-flight tasks.
+
+    The mechanism shared by every simulator in this codebase: push a task
+    with its completion time and an arbitrary payload, pop the earliest.
+    A monotone tiebreak makes pops deterministic under equal completion
+    times (insertion order wins), so traces are reproducible bit-for-bit.
+    Used here for the paper's parameter-server / shared-memory event
+    structures and by ``repro.federated.events`` for round-trip federated
+    clients (multi-event lifecycles: start, dropout/rejoin, upload).
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._tie = 0
+
+    def push(self, t: float, *payload) -> None:
+        heapq.heappush(self._heap, (t, self._tie) + payload)
+        self._tie += 1
+
+    def pop(self):
+        """Return ``(t, *payload)`` of the earliest task."""
+        item = heapq.heappop(self._heap)
+        return (item[0],) + item[2:]
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 class EventTrace(NamedTuple):
@@ -107,10 +137,9 @@ def simulate_parameter_server(
     assert len(workers) == n_workers
     rng = np.random.default_rng(seed + 1)
 
-    # (completion_time, tiebreak, worker, version_read)
-    heap = []
+    heap = EventHeap()  # payload: (worker, version_read)
     for i, w in enumerate(workers):
-        heapq.heappush(heap, (w.sample(rng), i, i, 0))
+        heap.push(w.sample(rng), i, 0)
     s = np.zeros((n_workers,), np.int64)  # version each table entry was computed on
 
     worker = np.zeros((n_events,), np.int32)
@@ -119,9 +148,8 @@ def simulate_parameter_server(
     tau_max = np.zeros((n_events,), np.int32)
     t_wall = np.zeros((n_events,), np.float64)
 
-    tie = n_workers
     for k in range(n_events):
-        t, _, i, v = heapq.heappop(heap)
+        t, i, v = heap.pop()
         s[i] = v
         worker[k] = i
         read_at[k] = v
@@ -129,8 +157,7 @@ def simulate_parameter_server(
         tau_max[k] = k - int(s.min())
         t_wall[k] = t
         # master writes x_{k+1} (version k+1) and hands it to worker i
-        heapq.heappush(heap, (t + workers[i].sample(rng), tie, i, k + 1))
-        tie += 1
+        heap.push(t + workers[i].sample(rng), i, k + 1)
     return EventTrace(worker, read_at, tau, tau_max, t_wall)
 
 
@@ -152,23 +179,21 @@ def simulate_shared_memory(
         workers = heterogeneous_workers(n_workers, seed=seed)
     rng = np.random.default_rng(seed + 2)
 
-    heap = []
+    heap = EventHeap()  # payload: (worker, counter_read)
     for i, w in enumerate(workers):
-        heapq.heappush(heap, (w.sample(rng), i, i, 0))
+        heap.push(w.sample(rng), i, 0)
 
     worker = np.zeros((n_events,), np.int32)
     read_at = np.zeros((n_events,), np.int32)
     tau = np.zeros((n_events,), np.int32)
     t_wall = np.zeros((n_events,), np.float64)
 
-    tie = n_workers
     for k in range(n_events):
-        t, _, i, s_read = heapq.heappop(heap)
+        t, i, s_read = heap.pop()
         worker[k] = i
         read_at[k] = s_read
         tau[k] = k - s_read
         t_wall[k] = t
         # worker i re-reads immediately after its write (version k+1)
-        heapq.heappush(heap, (t + workers[i].sample(rng), tie, i, k + 1))
-        tie += 1
+        heap.push(t + workers[i].sample(rng), i, k + 1)
     return EventTrace(worker, read_at, tau, tau.copy(), t_wall)

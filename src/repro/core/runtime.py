@@ -163,6 +163,7 @@ class SharedMemoryBCD:
         counter = {"k": 0}
         ss_box = {"ss": self.policy.init()}
         log = RunLog()
+        objectives: dict = {}   # write event k -> P(x) (filled outside the lock)
         t0 = time.perf_counter()
         stop = threading.Event()
 
@@ -175,6 +176,7 @@ class SharedMemoryBCD:
                 g = np.asarray(self._grad(jnp.asarray(xhat)))  # line 4
                 lo, hi = j * self.db, min((j + 1) * self.db, d)
                 gj = g[lo:hi]
+                x_snap = None
                 with lock:                        # lines 5-9 critical section
                     k = counter["k"]
                     if k >= n_events:
@@ -186,10 +188,17 @@ class SharedMemoryBCD:
                     x[lo:hi] = np.asarray(self.prox.prox(jnp.asarray(xj), gamma_f))
                     counter["k"] = k + 1          # line 9 (write event)
                     if k % self.record_every == 0:
+                        # record scalars + an iterate snapshot inside the
+                        # lock; the O(Nd) objective matvec runs OUTSIDE it so
+                        # workers are not serialized on a jitted dense matvec
+                        # every record_every events
                         log.gammas.append(gamma_f)
                         log.taus.append(int(tau))
                         log.wall.append(time.perf_counter() - t0)
-                        log.objective.append(float(self._P(jnp.asarray(x))))
+                        x_snap = (k, x.copy())
+                if x_snap is not None:
+                    k_rec, xs = x_snap
+                    objectives[k_rec] = float(self._P(jnp.asarray(xs)))
 
         threads = [threading.Thread(target=worker, args=(i,), daemon=True)
                    for i in range(self.n)]
@@ -199,6 +208,15 @@ class SharedMemoryBCD:
             time.sleep(0.01)
         stop.set()
         for t in threads:
-            t.join(timeout=2.0)
+            t.join(timeout=5.0)
+        # scalar rows were appended in write-event order under the lock;
+        # reassemble the objective column in the same order.  If a straggler
+        # thread outlived the join with its deferred P(x) still pending, trim
+        # the scalar columns so all four stay aligned.
+        obj_sorted = [objectives[k] for k in sorted(objectives)]
+        n_rows = len(obj_sorted)
+        if n_rows < len(log.gammas):
+            del log.gammas[n_rows:], log.taus[n_rows:], log.wall[n_rows:]
+        log.objective.extend(obj_sorted)
         self.x_final = x.copy()
         return log

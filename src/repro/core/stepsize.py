@@ -17,6 +17,10 @@ and the concrete policies from the paper:
 * ``Adaptive1``          -- gamma_k = alpha * max(gamma' - window_sum, 0)  (Eq. 13).
 * ``Adaptive2``          -- gamma_k = gamma'/(tau_k+1) when it fits the remaining
                             window budget, else 0  (Eq. 14).
+* ``HingeWeight``        -- gamma' * s(tau), hinge staleness discount
+                            [FedAsync, Xie'19]: the federated mixing weight.
+* ``PolyWeight``         -- gamma' * (tau+1)^(-a), polynomial staleness
+                            discount [FedAsync, Xie'19].
 
 All policies are pure-functional and jit/scan-compatible.  The window sum
 ``sum_{t=k-tau_k}^{k-1} gamma_t`` is computed in O(1) from a circular buffer of
@@ -200,6 +204,50 @@ class Adaptive2(StepsizePolicy):
         return jnp.where(cand <= budget, cand, 0.0), clip
 
 
+@dataclasses.dataclass(frozen=True)
+class HingeWeight(StepsizePolicy):
+    """FedAsync hinge staleness weight [Xie et al. '19]:
+
+        gamma_k = gamma' * s(tau_k),  s(tau) = 1                      tau <= b
+                                              1 / (a (tau - b) + 1)  otherwise.
+
+    In the federated server ``gamma'`` plays the role of the base mixing
+    weight alpha; s(tau) down-weights stale client models exactly as the
+    paper's gamma(tau) down-weights stale gradients.  The ``+1`` keeps
+    s continuous at the knee, monotone nonincreasing in tau, and <= 1 for
+    EVERY a > 0 (without it, a < 1 would up-weight a stale model above the
+    fresh weight).
+    """
+
+    a: float = 10.0
+    b: float = 4.0
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)  # keep buffer diagnostics uniform
+        t = jnp.asarray(tau, jnp.float32)
+        s = jnp.where(t <= self.b, 1.0,
+                      1.0 / (self.a * jnp.maximum(t - self.b, 0.0) + 1.0))
+        return self.gamma_prime * s, clip
+
+
+@dataclasses.dataclass(frozen=True)
+class PolyWeight(StepsizePolicy):
+    """FedAsync polynomial staleness weight [Xie et al. '19]:
+
+        gamma_k = gamma' * (tau_k + 1)^(-a).
+
+    Monotone decreasing in tau; ``a = 0`` reduces to the constant weight
+    (FedAvg-style mixing, no staleness discount).
+    """
+
+    a: float = 0.5
+
+    def _gamma(self, state, tau):
+        _, clip = window_sum(state, tau)
+        t = jnp.asarray(tau, jnp.float32)
+        return self.gamma_prime * jnp.power(t + 1.0, -self.a), clip
+
+
 class LipschitzState(NamedTuple):
     """StepsizeState extended with an on-line curvature estimate."""
 
@@ -261,12 +309,15 @@ class AdaptiveLipschitz(StepsizePolicy):
 
 POLICIES = {
     "fixed": FixedStepSize,
+    "constant": FixedStepSize,   # tau_bound=0 -> gamma_k = gamma' (FedAvg mixing)
     "sun_deng": SunDengFixed,
     "davis": DavisFixed,
     "naive": NaiveAdaptive,
     "adaptive1": Adaptive1,
     "adaptive2": Adaptive2,
     "adaptive_lipschitz": AdaptiveLipschitz,
+    "hinge": HingeWeight,
+    "poly": PolyWeight,
 }
 
 

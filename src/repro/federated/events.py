@@ -1,0 +1,184 @@
+"""Round-trip federated client simulation (the event layer of `repro.federated`).
+
+Generalizes ``core.engine`` from single-shot gradient returns to full client
+*round trips*: a client reads the current server model (recording the server
+version, Algorithm 1's stamp), runs ``local_epochs`` of local training, pays
+upload jitter on the way back, and may drop out mid-round and rejoin later.
+The server version counter only advances on *aggregation* events, so with a
+FedBuff buffer of size ``|R| >= 1`` the staleness of an upload is measured in
+server writes -- exactly the paper's write-event delay ``tau_k = k - s^(i)``,
+with "write" now meaning "server aggregation".
+
+As with ``core.engine``, the simulation produces a deterministic integer
+trace; the server (``repro.federated.server``) consumes it inside a fully
+jitted ``lax.scan``, so a simulated trace + a jitted server loop is *exactly*
+FedAsync/FedBuff for that realization of client timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import EventHeap, WorkerModel
+
+__all__ = ["ClientModel", "FederatedTrace", "heterogeneous_clients",
+           "simulate_federated"]
+
+# event kinds inside the heap
+_START, _UPLOAD = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientModel:
+    """One federated client's timing/lifecycle model.
+
+    compute:       service-time model for ONE local epoch (reuses
+                   ``core.engine.WorkerModel`` -- lognormal + stragglers).
+    upload:        service-time model for the upload leg (network jitter).
+    local_epochs:  local training epochs per round (recorded in the trace so
+                   the solver can replay the exact local computation).
+    p_dropout:     probability a started round is lost (client goes offline
+                   and never uploads that round's model).
+    rejoin_after:  offline time before a dropped client re-reads the server
+                   model and starts a fresh round.
+    """
+
+    compute: WorkerModel = WorkerModel()
+    upload: WorkerModel = WorkerModel(mean=0.1, sigma=0.5)
+    local_epochs: int = 1
+    p_dropout: float = 0.0
+    rejoin_after: float = 5.0
+
+    def round_duration(self, rng: np.random.Generator) -> float:
+        dt = sum(self.compute.sample(rng) for _ in range(self.local_epochs))
+        return dt + self.upload.sample(rng)
+
+
+def heterogeneous_clients(
+    n: int,
+    spread: float = 4.0,
+    seed: int = 0,
+    p_straggle: float = 0.05,
+    straggle_x: float = 8.0,
+    p_dropout: float = 0.02,
+    rejoin_after: float = 5.0,
+    local_epochs: int = 1,
+    upload_mean: float = 0.1,
+) -> list:
+    """n clients with epoch times log-spaced over [1, spread] -- federated
+    populations are far more heterogeneous than co-located workers (edge
+    devices vs. datacenter nodes), hence the wider default spread."""
+    rng = np.random.default_rng(seed)
+    means = np.geomspace(1.0, spread, n)
+    rng.shuffle(means)
+    return [ClientModel(
+        compute=WorkerModel(mean=float(m), p_straggle=p_straggle,
+                            straggle_x=straggle_x),
+        upload=WorkerModel(mean=upload_mean, sigma=0.5),
+        local_epochs=local_epochs,
+        p_dropout=p_dropout,
+        rejoin_after=rejoin_after,
+    ) for m in means]
+
+
+class FederatedTrace(NamedTuple):
+    """One row per client *upload* event (model arriving at the server).
+
+    client:      (K,) int32 -- uploading client.
+    read_at:     (K,) int32 -- server version the client's round started from.
+    tau:         (K,) int32 -- staleness in server versions at arrival.
+    aggregate:   (K,) int32 -- 1 iff this upload completes the buffer and
+                               triggers a server write (FedAsync: always 1).
+    version:     (K,) int32 -- server version AFTER processing the event.
+    local_steps: (K,) int32 -- local epochs the client ran this round.
+    t_wall:      (K,) float64 -- simulated wall-clock arrival time.
+    """
+
+    client: np.ndarray
+    read_at: np.ndarray
+    tau: np.ndarray
+    aggregate: np.ndarray
+    version: np.ndarray
+    local_steps: np.ndarray
+    t_wall: np.ndarray
+
+    @property
+    def n_events(self) -> int:
+        return int(self.client.shape[0])
+
+    @property
+    def n_writes(self) -> int:
+        return int(self.aggregate.sum())
+
+    def max_delay(self) -> int:
+        return int(self.tau.max(initial=0))
+
+
+def simulate_federated(
+    n_clients: int,
+    n_uploads: int,
+    clients: Optional[Sequence[ClientModel]] = None,
+    buffer_size: int = 1,
+    seed: int = 0,
+) -> FederatedTrace:
+    """Simulate the event structure of async federated aggregation.
+
+    ``buffer_size = 1`` is FedAsync (every upload is a server write);
+    ``buffer_size = |R| > 1`` is FedBuff's semi-async buffer.  Clients start
+    their next round immediately after uploading (reading the post-write
+    model), and dropped rounds re-enter via a rejoin event, so slow/flaky
+    clients naturally accumulate large staleness -- the regime where
+    delay-adaptive mixing weights matter.
+    """
+    if clients is None:
+        clients = heterogeneous_clients(n_clients, seed=seed)
+    assert len(clients) == n_clients
+    if buffer_size < 1:
+        raise ValueError(f"buffer_size must be >= 1 (|R| >= 1), got {buffer_size}")
+    rng = np.random.default_rng(seed + 3)
+
+    heap = EventHeap()  # payload: (kind, client, read_version, epochs)
+    for i in range(n_clients):
+        heap.push(0.0, _START, i, 0, 0)
+
+    client = np.zeros((n_uploads,), np.int32)
+    read_at = np.zeros((n_uploads,), np.int32)
+    tau = np.zeros((n_uploads,), np.int32)
+    aggregate = np.zeros((n_uploads,), np.int32)
+    version_arr = np.zeros((n_uploads,), np.int32)
+    local_steps = np.zeros((n_uploads,), np.int32)
+    t_wall = np.zeros((n_uploads,), np.float64)
+
+    version = 0
+    buffered = 0
+    k = 0
+    while k < n_uploads:
+        t, kind, i, v, epochs = heap.pop()
+        cm = clients[i]
+        if kind == _START:
+            # the client reads the server model *now*: stamp = current version
+            if cm.p_dropout > 0 and rng.random() < cm.p_dropout:
+                # round lost; client rejoins later and re-reads a fresh model
+                heap.push(t + cm.rejoin_after, _START, i, 0, 0)
+            else:
+                heap.push(t + cm.round_duration(rng), _UPLOAD, i, version,
+                          cm.local_epochs)
+            continue
+        # upload arrival: record the row, maybe aggregate, start next round
+        client[k] = i
+        read_at[k] = v
+        tau[k] = version - v
+        local_steps[k] = epochs
+        t_wall[k] = t
+        buffered += 1
+        if buffered >= buffer_size:
+            version += 1
+            buffered = 0
+            aggregate[k] = 1
+        version_arr[k] = version
+        heap.push(t, _START, i, 0, 0)
+        k += 1
+    return FederatedTrace(client, read_at, tau, aggregate, version_arr,
+                          local_steps, t_wall)

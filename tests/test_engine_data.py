@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (WorkerModel, heterogeneous_workers,
+from repro.core import (DelayTracker, WorkerModel, heterogeneous_workers,
                         simulate_parameter_server, simulate_shared_memory)
 from repro.data import EmbedStream, TokenStream
 
@@ -47,6 +47,22 @@ def test_heterogeneous_workers_speed_spread():
     means = sorted(w.mean for w in ws)
     assert means[0] == pytest.approx(1.0)
     assert means[-1] == pytest.approx(3.0)
+
+
+def test_delay_tracker_unstamped_worker_raises():
+    """Regression: an unstamped worker used to silently default to stamp 0,
+    reporting staleness k -- indistinguishable from a real straggler and
+    enough to crush any delay-adaptive step-size to zero."""
+    tr = DelayTracker()
+    tr.stamp(0, 0)
+    for _ in range(5):
+        tr.advance()
+    assert tr.delay(0) == 5
+    with pytest.raises(KeyError):
+        tr.delay(1)          # never stamped -> loud failure, not tau = k
+    assert 1 not in tr.delays()
+    tr.stamp(1)              # explicit stamp at the current version
+    assert tr.delay(1) == 0
 
 
 def test_token_stream_batches_independent_of_order():

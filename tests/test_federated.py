@@ -1,0 +1,159 @@
+"""`repro.federated`: staleness-weight policies, event traces, servers."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import L1, make_logreg, make_policy, solve_centralized
+from repro.federated import (ClientModel, heterogeneous_clients,
+                             local_prox_sgd, run_fedasync,
+                             run_fedasync_problem, run_fedbuff,
+                             run_fedbuff_problem, simulate_federated)
+from repro.core.engine import WorkerModel
+
+
+# ---------------------------------------------------------------- policies
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("hinge", {"a": 4.0, "b": 4.0}),
+    ("hinge", {"a": 0.5, "b": 16.0}),   # a < 1: regression for the +1 term
+    ("poly", {"a": 0.5}),
+])
+def test_staleness_weights_monotone_in_tau(name, kwargs):
+    """s(tau) must never up-weight a staler model."""
+    pol = make_policy(name, 0.5, **kwargs)
+    taus = np.arange(0, 60, dtype=np.int32)
+    g = np.asarray(pol.run(taus))
+    assert np.all(np.diff(g) <= 1e-7)
+    assert g[0] == pytest.approx(0.5)      # fresh return gets the full weight
+    assert np.all(g > 0)                   # stale models still participate
+
+
+def test_constant_weight_reduces_to_fedavg_mixing():
+    """make_policy('constant', alpha) ignores tau entirely: every upload is
+    mixed with the same weight -- FedAvg-style aggregation."""
+    pol = make_policy("constant", 0.3)
+    taus = np.array([0, 1, 17, 300, 2], np.int32)
+    np.testing.assert_allclose(np.asarray(pol.run(taus)), 0.3, rtol=1e-6)
+
+
+# ------------------------------------------------------------------ traces
+
+def test_federated_trace_deterministic():
+    a = simulate_federated(6, 400, seed=7)
+    b = simulate_federated(6, 400, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = simulate_federated(6, 400, seed=8)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, c))
+
+
+def test_federated_trace_invariants():
+    tr = simulate_federated(5, 300, buffer_size=3, seed=0)
+    assert np.all(tr.tau >= 0)
+    assert np.all(np.diff(tr.t_wall) >= 0)
+    # versions only advance on aggregation events, one at a time
+    v = np.concatenate([[0], np.asarray(tr.version)])
+    assert np.array_equal(np.diff(v), np.asarray(tr.aggregate))
+    # staleness = (version before the event) - (version the round read)
+    assert np.array_equal(np.asarray(tr.tau),
+                          np.asarray(tr.version) - np.asarray(tr.aggregate)
+                          - np.asarray(tr.read_at))
+    # every third upload closes the buffer
+    assert tr.n_writes == 100
+
+
+def test_dropout_increases_staleness():
+    flaky = [ClientModel(compute=WorkerModel(mean=1.0), p_dropout=0.3,
+                         rejoin_after=20.0) for _ in range(4)]
+    steady = [ClientModel(compute=WorkerModel(mean=1.0)) for _ in range(4)]
+    tr_flaky = simulate_federated(4, 500, flaky, seed=0)
+    tr_steady = simulate_federated(4, 500, steady, seed=0)
+    assert tr_flaky.t_wall[-1] > tr_steady.t_wall[-1]  # lost rounds cost time
+
+
+# ----------------------------------------------------------------- servers
+
+def _tiny_problem(seed=0):
+    return make_logreg(n_samples=240, dim=24, n_workers=6, seed=seed)
+
+
+def test_fedbuff_buffer1_equals_sequential_reference():
+    """At |R| = 1 the buffered server must collapse to sequential application
+    of x <- x + eta * s(tau) * (x_c - x_read): checked against a plain python
+    loop over the same trace."""
+    prob = _tiny_problem()
+    prox = L1(lam=prob.lam1)
+    tr = simulate_federated(6, 120, seed=2)
+    pol = make_policy("poly", 1.0, a=0.5)
+    lr = 0.5 / prob.L
+    eta = 0.3
+    res = run_fedbuff_problem(prob, tr, pol, prox, eta=eta, buffer_size=1,
+                              local_lr=lr)
+
+    # reference: numpy loop, same local prox-SGD client update
+    Aw, bw = prob.worker_slices()
+    update = local_prox_sgd(lambda x, A, b: prob.worker_loss(x, A, b), prox, lr)
+    x = np.zeros((prob.dim,), np.float32)
+    x_read = np.zeros((6, prob.dim), np.float32)
+    for k in range(tr.n_events):
+        w = int(tr.client[k])
+        tau = int(tr.tau[k])
+        xc = np.asarray(update(jnp.asarray(x_read[w]), int(tr.local_steps[k]),
+                               Aw[w], bw[w]))
+        s = (tau + 1.0) ** -0.5
+        x = x + eta * s * (xc - x_read[w])
+        x_read[w] = x
+    np.testing.assert_allclose(np.asarray(res.x), x, rtol=2e-4, atol=2e-5)
+
+
+def test_fedasync_updates_only_mix_toward_client_models():
+    """Mixing weight in (0, 1] keeps the server model in the convex hull of
+    {previous model, client model} -- a pure-mixing invariant FedBuff's delta
+    form does not have."""
+    prob = _tiny_problem()
+    prox = L1(lam=prob.lam1)
+    tr = simulate_federated(6, 100, seed=3)
+    res = run_fedasync_problem(prob, tr, make_policy("hinge", 1.0, a=2.0, b=2.0),
+                               prox, local_lr=0.5 / prob.L)
+    w = np.asarray(res.weights)
+    assert np.all(w > 0) and np.all(w <= 1.0)
+
+
+def test_fedasync_delay_adaptive_converges_to_centralized_optimum():
+    """Delay-adaptive FedAsync on heterogeneous straggler clients reaches the
+    centralized logreg optimum (suboptimality well inside the initial gap)."""
+    prob = make_logreg(n_samples=500, dim=50, n_workers=8, seed=0)
+    prox = L1(lam=prob.lam1)
+    _, objs = solve_centralized(prob, prox, iters=3000)
+    p_star = float(objs[-1])
+    gap0 = float(prob.P(jnp.zeros(prob.dim))) - p_star
+
+    clients = heterogeneous_clients(8, spread=4.0, seed=1, p_straggle=0.05,
+                                    p_dropout=0.02)
+    tr = simulate_federated(8, 3000, clients, seed=1)
+    assert tr.max_delay() > 20          # the straggler regime we care about
+
+    pol = make_policy("hinge", 0.4, a=0.5, b=16.0)
+    res = run_fedasync_problem(prob, tr, pol, prox, local_lr=0.5 / prob.L)
+    sub = np.asarray(res.objective) - p_star
+    assert sub[-1] <= 0.25 * gap0       # final model close to optimum
+    assert sub.min() <= 0.1 * gap0      # and the trajectory got much closer
+
+
+def test_fedbuff_matches_fedasync_scale():
+    """FedBuff with a larger buffer takes fewer (but bigger) server writes;
+    both reduce the objective on the same upload budget."""
+    prob = _tiny_problem()
+    prox = L1(lam=prob.lam1)
+    p0 = float(prob.P(jnp.zeros(prob.dim)))
+    tr1 = simulate_federated(6, 400, seed=4, buffer_size=1)
+    tr4 = simulate_federated(6, 400, seed=4, buffer_size=4)
+    r1 = run_fedasync_problem(prob, tr1, make_policy("poly", 0.4, a=0.5),
+                              prox, local_lr=0.5 / prob.L)
+    r4 = run_fedbuff_problem(prob, tr4, make_policy("poly", 1.0, a=0.5), prox,
+                             eta=0.4, buffer_size=4, local_lr=0.5 / prob.L)
+    assert float(r1.objective[-1]) < p0
+    assert float(r4.objective[-1]) < p0
+    assert tr4.n_writes == 100
