@@ -1,6 +1,6 @@
 """Benchmark harness -- one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 roofline kernels]
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep roofline kernels]
 
 Prints ``name,us_per_call,derived`` CSV lines.
 """
@@ -34,6 +34,9 @@ def main() -> None:
     if want("kernels"):
         from . import kernel_bench
         kernel_bench.run()
+    if want("sweep"):
+        from . import sweep_grid
+        sweep_grid.run()
     if want("ext"):
         from . import ext_lipschitz
         ext_lipschitz.run()

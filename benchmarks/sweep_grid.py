@@ -1,0 +1,166 @@
+"""Batched sweep engine benchmark: the Fig. 2/3 policy-comparison grid at
+~100x the per-figure cell count, batched vs the status-quo Python loop.
+
+The looped baseline is exactly what ``fig2_piag.py`` does per cell today --
+a Python ``heapq`` trace simulation plus a ``run_piag_logreg`` call that
+re-traces and re-compiles -- repeated for every (policy, seed, topology)
+cell.  The batched path runs the SAME cells (same service-time matrices,
+same policies) as one ``vmap``'d XLA program: jitted trace generation
+composed with the PIAG scan, one compile for the whole grid.
+
+Emits ``BENCH_sweep_grid.json`` with wall-clock for both paths, the
+speedup, and an equivalence spot-check of sampled rows against solo runs.
+
+    PYTHONPATH=src python -m benchmarks.sweep_grid [--events N] [--seeds N]
+        [--workers N] [--loop-cells N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
+                        SunDengFixed, make_logreg, run_piag_logreg,
+                        simulate_parameter_server)
+from repro.sweep import (make_grid, make_sweep_piag, measure_tau_bar,
+                         standard_topologies)
+
+from .common import emit
+
+
+def build_grid(n_workers: int, n_seeds: int, n_events: int, gp: float):
+    """policies x seeds x topologies; fixed baselines tuned from the
+    worst-case bound tau-bar measured over the whole grid's traces (the
+    paper's protocol for the fixed step-size)."""
+    seeds = list(range(n_seeds))
+    topos = standard_topologies(n_workers)
+    tau_bar = measure_tau_bar(topos, seeds, n_events)
+    policies = {
+        "adaptive1": Adaptive1(gamma_prime=gp, alpha=0.9),
+        "adaptive2": Adaptive2(gamma_prime=gp),
+        "fixed": FixedStepSize(gamma_prime=gp, tau_bound=tau_bar),
+        "fixed_sun_deng": SunDengFixed(gamma_prime=gp, tau_bound=tau_bar),
+    }
+    return make_grid(policies, seeds, topos, n_events), tau_bar
+
+
+def run(n_events: int = 800, n_seeds: int = 4, n_workers: int = 8,
+        loop_cells: int | None = None, out: str = "BENCH_sweep_grid.json") -> dict:
+    prob = make_logreg(800, 100, n_workers=n_workers, seed=0)
+    gp = 0.99 / prob.L
+    prox = L1(lam=prob.lam1)
+    grid, tau_bar = build_grid(n_workers, n_seeds, n_events, gp)
+    B = len(grid)
+    emit("sweep_grid/config", 0.0,
+         f"cells={B};events={n_events};workers={n_workers};tau_bar={tau_bar}")
+
+    # ---- batched path: one program for the whole grid --------------------
+    Aw, bw = prob.worker_slices()
+    x0 = jnp.zeros((prob.dim,), jnp.float32)
+    fn = make_sweep_piag(lambda x, A, b: prob.worker_loss(x, A, b), x0,
+                         (Aw, bw), prox, objective=prob.P)
+    T_all = jnp.asarray(grid.service_times())
+    params = grid.policy_params()
+
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(fn(T_all, params))
+    batched_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(fn(T_all, params))
+    batched_warm = time.perf_counter() - t0
+    emit("sweep_grid/batched", batched_cold * 1e6,
+         f"warm_us={batched_warm * 1e6:.1f};cells={B}")
+
+    # ---- looped status quo: heapq trace + fresh jit per cell -------------
+    # subsampled cells are spread across the whole grid (linspace over cell
+    # indices) so every policy family is both timed and equivalence-checked
+    T_np = np.asarray(T_all)
+    n_loop = B if loop_cells is None else min(loop_cells, B)
+    loop_idx = np.unique(np.linspace(0, B - 1, n_loop).round().astype(int))
+    t0 = time.perf_counter()
+    loop_obj = {}
+    for i in loop_idx:
+        c = grid.cells[i]
+        tr = simulate_parameter_server(n_workers, n_events, list(c.workers),
+                                       seed=c.seed, service_times=T_np[i])
+        solo = run_piag_logreg(prob, tr, c.policy, prox)
+        loop_obj[int(i)] = np.asarray(solo.objective)
+    loop_s = (time.perf_counter() - t0) * (B / len(loop_idx))
+    emit("sweep_grid/looped", loop_s * 1e6,
+         f"cells_run={len(loop_idx)};scaled_to={B}")
+
+    speedup_cold = loop_s / batched_cold
+    speedup_warm = loop_s / batched_warm
+    emit("sweep_grid/speedup", 0.0,
+         f"cold={speedup_cold:.1f}x;warm={speedup_warm:.1f}x")
+
+    # ---- equivalence spot-check on the rows the loop already ran ---------
+    atol = 16 * float(np.spacing(np.float32(gp)))
+    max_obj = 0.0
+    for i, obj_i in loop_obj.items():
+        max_obj = max(max_obj, float(np.max(np.abs(
+            obj_i - np.asarray(res.objective[i])))))
+    rows_ok = bool(max_obj <= 1e-4)
+    emit("sweep_grid/equivalence", 0.0,
+         f"rows={len(loop_obj)};max_obj_diff={max_obj:.2e};ok={rows_ok}")
+
+    # per-policy summary: mean final objective across seeds x topologies
+    obj = np.asarray(res.objective)
+    finals = {}
+    for pn in dict.fromkeys(c.policy_name for c in grid.cells):
+        rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
+        finals[pn] = float(np.mean(obj[rows, -1]))
+        emit(f"sweep_grid/final_P/{pn}", 0.0, f"mean_P_final={finals[pn]:.5f}")
+
+    payload = {
+        "bench": "sweep_grid",
+        "cells": B,
+        "n_events": n_events,
+        "n_workers": n_workers,
+        "tau_bar": tau_bar,
+        "grid": {"policies": sorted({c.policy_name for c in grid.cells}),
+                 "seeds": n_seeds,
+                 "topologies": sorted({c.topology_name for c in grid.cells})},
+        "loop_seconds": loop_s,
+        "loop_cells_run": int(len(loop_idx)),
+        "batched_seconds_cold": batched_cold,
+        "batched_seconds_warm": batched_warm,
+        "speedup_cold": speedup_cold,
+        "speedup_warm": speedup_warm,
+        "equivalence": {"rows_checked": int(len(loop_obj)),
+                        "max_objective_diff": max_obj,
+                        "gamma_atol_envelope": atol,
+                        "ok": rows_ok},
+        "mean_final_objective": finals,
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}: {B} cells, speedup cold {speedup_cold:.1f}x / "
+          f"warm {speedup_warm:.1f}x, equivalence ok={rows_ok}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--events", type=int, default=800)
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--loop-cells", type=int, default=None,
+                    help="run only this many looped cells and scale the "
+                    "loop time linearly (CI shortcut; default: all)")
+    ap.add_argument("--out", default="BENCH_sweep_grid.json")
+    a = ap.parse_args()
+    payload = run(n_events=a.events, n_seeds=a.seeds, n_workers=a.workers,
+                  loop_cells=a.loop_cells, out=a.out)
+    if not payload["equivalence"]["ok"]:
+        raise SystemExit("equivalence spot-check failed")
+
+
+if __name__ == "__main__":
+    main()

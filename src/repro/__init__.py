@@ -6,6 +6,8 @@ Subpackages:
               delay tracking, event engine, threaded runtimes, theory checks
   federated   delay-adaptive async federated learning: FedAsync/FedBuff
               servers driven by the same staleness-weight machinery
+  sweep       vectorized experiment sweeps: policy x seed x topology grids
+              as one vmapped XLA program (policies as data, jitted traces)
   models      dense / MoE / SSM / hybrid / audio / VLM substrate
   optim       optimizers + DelayAdaptiveOptimizer composition
   data        deterministic synthetic pipelines

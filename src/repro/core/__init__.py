@@ -9,11 +9,15 @@ Public API::
     )
 """
 from .async_sgd import AsyncOptState, AsyncSGD
-from .bcd import BCDResult, run_async_bcd, run_bcd_logreg
+from .bcd import (BCDResult, bcd_scan, run_async_bcd, run_bcd_logreg,
+                  sample_blocks)
 from .delay import DelayTracker, make_delays, DELAY_MODELS
-from .engine import (EventHeap, EventTrace, WorkerModel, heterogeneous_workers,
-                     simulate_parameter_server, simulate_shared_memory)
-from .piag import PIAGResult, run_piag, run_piag_lipschitz, run_piag_logreg
+from .engine import (EventHeap, EventTrace, TraceArrays, WorkerModel,
+                     generate_trace, heterogeneous_workers,
+                     sample_service_times, simulate_parameter_server,
+                     simulate_shared_memory, trace_scan)
+from .piag import (PIAGResult, piag_scan, run_piag, run_piag_lipschitz,
+                   run_piag_logreg)
 from .problems import (LassoProblem, LogRegProblem, Quadratic, make_lasso,
                        make_logreg, solve_centralized)
 from .prox import (PROX_OPS, Box, ElasticNet, GroupL2, L1, L2Squared, ProxOp,

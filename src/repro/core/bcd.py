@@ -26,7 +26,8 @@ from .engine import EventTrace
 from .prox import ProxOp
 from .stepsize import StepsizePolicy
 
-__all__ = ["BCDResult", "run_async_bcd", "run_bcd_logreg"]
+__all__ = ["BCDResult", "bcd_scan", "run_async_bcd", "run_bcd_logreg",
+           "sample_blocks"]
 
 
 class BCDResult(NamedTuple):
@@ -44,32 +45,28 @@ def _blockify(x: jnp.ndarray, m: int):
     return jnp.pad(x, (0, pad)).reshape(m, db), d
 
 
-def run_async_bcd(
+def bcd_scan(
     grad_f: Callable,           # full gradient of the smooth part, (d_pad,) -> (d_pad,)
     objective: Callable,        # P(x) on the unpadded vector
     x0: jnp.ndarray,            # (d,)
     m: int,
-    trace: EventTrace,
-    blocks: np.ndarray,         # (K,) int32 block choices (uniform at random)
+    n_workers: int,
+    events,                     # (worker, tau, block) (K,) i32 jnp arrays each
     policy: StepsizePolicy,
     prox: ProxOp,
     horizon: int = 4096,
 ) -> BCDResult:
-    n = int(trace.worker.max()) + 1 if trace.n_events else 1
+    """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
+    shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
+    ``repro.sweep.sweep_bcd`` batch."""
     xb0, d = _blockify(jnp.asarray(x0, jnp.float32), m)
     db = xb0.shape[1]
 
     def unpad(xb):
         return xb.reshape(-1)[:d]
 
-    events = (
-        jnp.asarray(trace.worker, jnp.int32),
-        jnp.asarray(trace.tau, jnp.int32),
-        jnp.asarray(blocks, jnp.int32),
-    )
-
     # snapshots each worker last read (consistent-but-stale reads)
-    x_read0 = jnp.broadcast_to(xb0, (n,) + xb0.shape)
+    x_read0 = jnp.broadcast_to(xb0, (n_workers,) + xb0.shape)
 
     def step(carry, event):
         xb, x_read, ss = carry
@@ -84,19 +81,48 @@ def run_async_bcd(
         x_read = x_read.at[w].set(xb_new)                  # line 10 (re-read)
         return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma, tau, j)
 
-    @jax.jit
-    def run(carry0, events):
-        return jax.lax.scan(step, carry0, events)
-
-    (xb_fin, *_), (obj, gam, taus, blk) = run((xb0, x_read0, policy.init(horizon)), events)
+    carry0 = (xb0, x_read0, policy.init(horizon))
+    (xb_fin, *_), (obj, gam, taus, blk) = jax.lax.scan(step, carry0, events)
     return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus, blocks=blk)
+
+
+def run_async_bcd(
+    grad_f: Callable,
+    objective: Callable,
+    x0: jnp.ndarray,
+    m: int,
+    trace: EventTrace,
+    blocks: np.ndarray,         # (K,) int32 block choices (uniform at random)
+    policy: StepsizePolicy,
+    prox: ProxOp,
+    horizon: int = 4096,
+) -> BCDResult:
+    n = int(trace.worker.max()) + 1 if trace.n_events else 1
+    events = (
+        jnp.asarray(trace.worker, jnp.int32),
+        jnp.asarray(trace.tau, jnp.int32),
+        jnp.asarray(blocks, jnp.int32),
+    )
+
+    @jax.jit
+    def run(events):
+        return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
+                        horizon=horizon)
+
+    return run(events)
+
+
+def sample_blocks(m: int, n_events: int, seed: int = 0) -> np.ndarray:
+    """The uniform block choices of Algorithm 2 line 5 (shared by the solo
+    ``run_bcd_logreg`` and the sweep path so rows stay comparable)."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, m, size=n_events).astype(np.int32)
 
 
 def run_bcd_logreg(problem, trace, policy, prox, m: int = 20,
                    seed: int = 0, horizon: int = 4096) -> BCDResult:
     """Async-BCD on the paper's l1-regularized logistic regression (§4.2)."""
-    rng = np.random.default_rng(seed)
-    blocks = rng.integers(0, m, size=trace.n_events).astype(np.int32)
+    blocks = sample_blocks(m, trace.n_events, seed=seed)
     x0 = jnp.zeros((problem.dim,), jnp.float32)
     return run_async_bcd(problem.grad_f, problem.P, x0, m, trace, blocks,
                          policy, prox, horizon=horizon)

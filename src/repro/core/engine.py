@@ -17,6 +17,29 @@ driven by a simulated event trace is *exactly* the paper's algorithm for that
 realization of worker timings.  ``core.runtime`` provides genuinely-threaded
 execution for the paper-scale experiments; this module provides determinism
 and scale.
+
+Two trace paths
+---------------
+
+There are two interchangeable implementations of the event structure:
+
+* the **reference path** -- ``simulate_parameter_server`` /
+  ``simulate_shared_memory`` -- a Python ``heapq`` discrete-event loop.
+  Simple, obviously correct, and the ground truth every other path is
+  tested against; but it costs Python time per event and cannot be
+  batched.
+* the **jitted path** -- ``trace_scan`` / ``generate_trace`` -- the same
+  event structure computed inside a ``lax.scan`` from a pre-sampled
+  per-worker service-time matrix (``sample_service_times``).  It jits,
+  and, crucially, it ``vmap``s: ``repro.sweep`` stacks one service-time
+  matrix per grid cell and runs whole policy x seed x topology sweeps as
+  one XLA program.
+
+The two paths agree *bitwise* (same (worker, read_at, tau) sequence, same
+float32 wall-clock) when driven by the same service-time matrix: both
+accumulate completion times in float32 and both break completion-time ties
+by push order ((time, seq) -- workers 0..n-1 first, then one push per
+event).  ``tests/test_sweep.py`` pins this equivalence.
 """
 from __future__ import annotations
 
@@ -24,10 +47,13 @@ import dataclasses
 import heapq
 from typing import NamedTuple, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["WorkerModel", "EventTrace", "EventHeap", "simulate_parameter_server",
-           "simulate_shared_memory"]
+           "simulate_shared_memory", "sample_service_times", "trace_scan",
+           "generate_trace"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +79,15 @@ class WorkerModel:
             t *= self.straggle_x
         return t
 
+    def sample_n(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Vectorized draw of ``n`` task durations (own stream, task order)."""
+        mu = np.log(self.mean) - 0.5 * self.sigma**2
+        t = rng.lognormal(mu, self.sigma, size=n)
+        if self.p_straggle > 0:
+            t = np.where(rng.random(n) < self.p_straggle,
+                         t * self.straggle_x, t)
+        return t
+
 
 def heterogeneous_workers(n: int, spread: float = 2.0, seed: int = 0,
                           p_straggle: float = 0.02, straggle_x: float = 8.0) -> list:
@@ -63,6 +98,26 @@ def heterogeneous_workers(n: int, spread: float = 2.0, seed: int = 0,
     rng.shuffle(means)
     return [WorkerModel(mean=float(m), p_straggle=p_straggle, straggle_x=straggle_x)
             for m in means]
+
+
+def sample_service_times(workers: Sequence[WorkerModel], n_tasks: int,
+                         seed: int = 0) -> np.ndarray:
+    """Pre-sample the full service-time matrix ``T[i, j]`` (float32).
+
+    ``T[i, j]`` is the duration of worker ``i``'s ``j``-th task.  Each worker
+    draws from its own counter-based substream ``default_rng([seed, i])``, so
+    the matrix is independent of event order -- the property that lets the
+    heapq reference and the ``lax.scan`` path consume identical randomness.
+    Durations are rounded to float32 because the jitted path accumulates
+    completion times in float32 (x64 is disabled under JAX defaults); the
+    reference path does the same when handed a matrix, keeping event *order*
+    (ties included) bitwise-identical across paths.
+    """
+    out = np.empty((len(workers), n_tasks), np.float32)
+    for i, w in enumerate(workers):
+        rng = np.random.default_rng([seed, i])
+        out[i] = w.sample_n(rng, n_tasks).astype(np.float32)
+    return out
 
 
 class EventHeap:
@@ -119,11 +174,26 @@ class EventTrace(NamedTuple):
         return int(self.tau_max.max(initial=0))
 
 
+def _next_time(t: float, workers, i: int, rng, service_times, next_task):
+    """Completion time of worker i's next task.
+
+    With a pre-sampled matrix, accumulate in float32 (matching ``trace_scan``
+    bit-for-bit); otherwise sample on the fly in float64 (legacy behavior,
+    kept so existing seeded traces are unchanged).
+    """
+    if service_times is None:
+        return t + workers[i].sample(rng)
+    j = next_task[i]
+    next_task[i] += 1
+    return np.float32(t) + service_times[i, j]
+
+
 def simulate_parameter_server(
     n_workers: int,
     n_events: int,
     workers: Optional[Sequence[WorkerModel]] = None,
     seed: int = 0,
+    service_times: Optional[np.ndarray] = None,
 ) -> EventTrace:
     """Simulate Algorithm 1's event structure with |R| = 1.
 
@@ -131,15 +201,21 @@ def simulate_parameter_server(
     the master performs one write event (k += 1) and hands the worker the new
     iterate.  Staleness of worker i's table entry at event k is k - s[i],
     where s[i] is the version it last read -- the paper's delay definition.
+
+    ``service_times`` (n_workers, >= n_events + 1) float32, if given, replaces
+    on-the-fly sampling: worker i's j-th task takes ``service_times[i, j]``
+    and completion times accumulate in float32 -- the reference against which
+    the jitted ``trace_scan`` is bitwise-tested.
     """
     if workers is None:
         workers = heterogeneous_workers(n_workers, seed=seed)
     assert len(workers) == n_workers
     rng = np.random.default_rng(seed + 1)
+    next_task = np.zeros((n_workers,), np.int64)
 
     heap = EventHeap()  # payload: (worker, version_read)
     for i, w in enumerate(workers):
-        heap.push(w.sample(rng), i, 0)
+        heap.push(_next_time(0.0, workers, i, rng, service_times, next_task), i, 0)
     s = np.zeros((n_workers,), np.int64)  # version each table entry was computed on
 
     worker = np.zeros((n_events,), np.int32)
@@ -157,7 +233,7 @@ def simulate_parameter_server(
         tau_max[k] = k - int(s.min())
         t_wall[k] = t
         # master writes x_{k+1} (version k+1) and hands it to worker i
-        heap.push(t + workers[i].sample(rng), i, k + 1)
+        heap.push(_next_time(t, workers, i, rng, service_times, next_task), i, k + 1)
     return EventTrace(worker, read_at, tau, tau_max, t_wall)
 
 
@@ -167,6 +243,7 @@ def simulate_shared_memory(
     n_blocks: int,
     workers: Optional[Sequence[WorkerModel]] = None,
     seed: int = 0,
+    service_times: Optional[np.ndarray] = None,
 ) -> "EventTrace":
     """Simulate Algorithm 2's event structure.
 
@@ -174,14 +251,17 @@ def simulate_shared_memory(
     compute a block gradient, then perform one atomic write event.  The block
     index is sampled uniformly by the solver (kept out of the trace so the
     trace is model-independent); tau_k = k - s_{i_k}.
+
+    ``service_times`` works exactly as in ``simulate_parameter_server``.
     """
     if workers is None:
         workers = heterogeneous_workers(n_workers, seed=seed)
     rng = np.random.default_rng(seed + 2)
+    next_task = np.zeros((n_workers,), np.int64)
 
     heap = EventHeap()  # payload: (worker, counter_read)
     for i, w in enumerate(workers):
-        heap.push(w.sample(rng), i, 0)
+        heap.push(_next_time(0.0, workers, i, rng, service_times, next_task), i, 0)
 
     worker = np.zeros((n_events,), np.int32)
     read_at = np.zeros((n_events,), np.int32)
@@ -195,5 +275,92 @@ def simulate_shared_memory(
         tau[k] = k - s_read
         t_wall[k] = t
         # worker i re-reads immediately after its write (version k+1)
-        heap.push(t + workers[i].sample(rng), i, k + 1)
+        heap.push(_next_time(t, workers, i, rng, service_times, next_task), i, k + 1)
     return EventTrace(worker, read_at, tau, tau.copy(), t_wall)
+
+
+class TraceArrays(NamedTuple):
+    """``EventTrace`` columns as jnp arrays -- the jit/vmap-side twin.
+
+    Identical field meaning to ``EventTrace``; ``t_wall`` is float32 (the
+    accumulation dtype of the jitted path).  ``tau_max`` is the
+    parameter-server table staleness; shared-memory consumers use ``tau``.
+    """
+
+    worker: jnp.ndarray
+    read_at: jnp.ndarray
+    tau: jnp.ndarray
+    tau_max: jnp.ndarray
+    t_wall: jnp.ndarray
+
+
+def trace_scan(service_times: jnp.ndarray) -> TraceArrays:
+    """The jitted/vmappable event-structure kernel.
+
+    ``service_times`` is a (n_workers, n_events + 1) float32 matrix
+    (``sample_service_times``); the extra column covers the worst case of one
+    worker consuming every event.  Emits ``n_events = service_times.shape[1]
+    - 1`` write events: per event, the in-flight task with the smallest
+    (completion_time, push_seq) key completes -- the exact pop order of the
+    ``EventHeap`` reference (initial tasks carry seq 0..n-1 in worker order;
+    the task pushed at event k carries seq n + k), so simultaneous arrivals
+    resolve identically in both paths.
+
+    Pure function of its argument: ``jax.vmap(trace_scan)`` over a stacked
+    batch of matrices generates a whole sweep's traces in one program, and
+    ``repro.sweep`` composes it with the solver scans under a single jit.
+    """
+    T = jnp.asarray(service_times, jnp.float32)
+    n, n_tasks = T.shape
+    n_events = n_tasks - 1
+    i32 = jnp.int32
+
+    init = (
+        T[:, 0],                        # t: completion time of in-flight task
+        jnp.arange(n, dtype=i32),       # seq: push order of in-flight task
+        jnp.ones((n,), i32),            # next_task: per-worker task cursor
+        jnp.zeros((n,), i32),           # ver: version the in-flight task read
+        jnp.zeros((n,), i32),           # s: version of each table entry
+    )
+
+    def step(carry, k):
+        t, seq, task, ver, s = carry
+        # pop: lexicographic argmin over (t, seq) == EventHeap order
+        at_min = t == jnp.min(t)
+        i = jnp.argmin(jnp.where(at_min, seq, jnp.iinfo(i32).max)).astype(i32)
+        v = ver[i]
+        s = s.at[i].set(v)
+        out = (i, v, k - v, k - jnp.min(s), t[i])
+        # push: worker i starts its next task at the write it just triggered
+        t = t.at[i].add(T[i, task[i]])
+        task = task.at[i].add(1)
+        ver = ver.at[i].set(k + 1)
+        seq = seq.at[i].set(n + k)
+        return (t, seq, task, ver, s), out
+
+    _, (worker, read_at, tau, tau_max, t_wall) = jax.lax.scan(
+        step, init, jnp.arange(n_events, dtype=i32))
+    return TraceArrays(worker, read_at, tau, tau_max, t_wall)
+
+
+@jax.jit
+def _trace_scan_jit(service_times):
+    return trace_scan(service_times)
+
+
+def generate_trace(service_times: np.ndarray,
+                   kind: str = "parameter_server") -> EventTrace:
+    """Host-side wrapper: run ``trace_scan`` jitted and return an ``EventTrace``.
+
+    Drop-in replacement for ``simulate_parameter_server`` /
+    ``simulate_shared_memory`` driven by a pre-sampled matrix -- bitwise-equal
+    traces at a fraction of the Python cost.  ``kind='shared_memory'`` only
+    changes the ``tau_max`` column (shared-memory staleness is per-write,
+    ``tau_max == tau``), exactly as in the reference pair.
+    """
+    if kind not in ("parameter_server", "shared_memory"):
+        raise ValueError(f"unknown trace kind {kind!r}")
+    out = jax.device_get(_trace_scan_jit(np.asarray(service_times, np.float32)))
+    tau_max = out.tau_max if kind == "parameter_server" else out.tau.copy()
+    return EventTrace(out.worker, out.read_at, out.tau, tau_max,
+                      out.t_wall.astype(np.float64))

@@ -27,7 +27,7 @@ from .engine import EventTrace
 from .prox import ProxOp
 from .stepsize import StepsizePolicy, StepsizeState
 
-__all__ = ["PIAGResult", "run_piag", "run_piag_logreg"]
+__all__ = ["PIAGResult", "piag_scan", "run_piag", "run_piag_logreg"]
 
 
 class PIAGResult(NamedTuple):
@@ -38,18 +38,24 @@ class PIAGResult(NamedTuple):
     opt_residual: jnp.ndarray  # (K,) ||x_{k+1} - x_k|| / gamma_k (prox-grad map)
 
 
-def run_piag(
+def piag_scan(
     worker_loss: Callable,      # (x, *worker_data_slice) -> scalar, f_i
     x0,                         # pytree initial iterate
     worker_data,                # pytree, each leaf (n_workers, ...)
-    trace: EventTrace,
+    events,                     # (worker (K,) i32, tau (K,) i32) jnp arrays
     policy: StepsizePolicy,
     prox: ProxOp,
     objective: Callable | None = None,  # P(x); defaults to mean worker loss + R
     horizon: int = 4096,
-    use_tau_max: bool = True,
 ) -> PIAGResult:
-    """Run PIAG over a write-event trace; everything under one jit."""
+    """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
+
+    Everything is a function of jnp values, so the SAME step code serves the
+    solo path (``run_piag`` jits it directly) and the batched path
+    (``repro.sweep.sweep_piag`` vmaps it over stacked events and policy
+    parameters) -- which is what makes per-row equivalence between the two
+    exact rather than approximate.
+    """
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     grad_i = jax.grad(worker_loss)
 
@@ -69,11 +75,6 @@ def run_piag(
 
     g_table = jax.vmap(init_grad)(jnp.arange(n))
     x_read0 = jax.tree_util.tree_map(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
-
-    events = (
-        jnp.asarray(trace.worker, jnp.int32),
-        jnp.asarray(trace.tau_max if use_tau_max else trace.tau, jnp.int32),
-    )
 
     def step(carry, event):
         x, gtab, x_read, ss = carry
@@ -97,13 +98,33 @@ def run_piag(
         return (x_new, gtab, x_read, ss), out
 
     carry0 = (x0, g_table, x_read0, policy.init(horizon))
+    (x_fin, *_), (obj, gam, taus, res) = jax.lax.scan(step, carry0, events)
+    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus, opt_residual=res)
+
+
+def run_piag(
+    worker_loss: Callable,
+    x0,
+    worker_data,
+    trace: EventTrace,
+    policy: StepsizePolicy,
+    prox: ProxOp,
+    objective: Callable | None = None,
+    horizon: int = 4096,
+    use_tau_max: bool = True,
+) -> PIAGResult:
+    """Run PIAG over a write-event trace; everything under one jit."""
+    events = (
+        jnp.asarray(trace.worker, jnp.int32),
+        jnp.asarray(trace.tau_max if use_tau_max else trace.tau, jnp.int32),
+    )
 
     @jax.jit
-    def run(carry0, events):
-        return jax.lax.scan(step, carry0, events)
+    def run(events):
+        return piag_scan(worker_loss, x0, worker_data, events, policy, prox,
+                         objective=objective, horizon=horizon)
 
-    (x_fin, *_), (obj, gam, taus, res) = run(carry0, events)
-    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus, opt_residual=res)
+    return run(events)
 
 
 def run_piag_lipschitz(problem, trace, prox, h: float = 0.9,

@@ -56,40 +56,67 @@ class StepsizeState(NamedTuple):
 
     @property
     def horizon(self) -> int:
-        return self.cumbuf.shape[0]
+        return self.cumbuf.shape[-1]
 
 
-def init_state(horizon: int = DEFAULT_HORIZON) -> StepsizeState:
+def init_state(horizon: int = DEFAULT_HORIZON,
+               batch_shape: Tuple[int, ...] = ()) -> StepsizeState:
+    """Fresh policy state; ``batch_shape`` prepends grid dimensions.
+
+    A batched state steps directly: ``window_sum`` / ``_push`` gather and
+    scatter along the last (horizon) axis, so ``policy.step(state, taus)``
+    with a ``batch_shape`` state and a matching batch of delays advances
+    every cell's independent circular buffer in one call -- no ``vmap``
+    required (``repro.sweep`` vmaps whole solver scans instead, where the
+    per-cell state is scalar; this path serves host-side batched policy
+    experiments).
+    """
     return StepsizeState(
-        k=jnp.zeros((), jnp.int32),
-        total=jnp.zeros((), jnp.float32),
-        cumbuf=jnp.zeros((horizon,), jnp.float32),
-        clipped=jnp.zeros((), jnp.int32),
+        k=jnp.zeros(batch_shape, jnp.int32),
+        total=jnp.zeros(batch_shape, jnp.float32),
+        cumbuf=jnp.zeros(batch_shape + (horizon,), jnp.float32),
+        clipped=jnp.zeros(batch_shape, jnp.int32),
     )
 
 
 def window_sum(state: StepsizeState, tau: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Return (sum_{t=k-tau}^{k-1} gamma_t, was_clipped).
 
-    ``tau`` is clipped to ``[0, min(k, H)]``; clipping beyond the horizon only
-    ever *under-estimates* the window sum, which would be unsafe, so we also
-    return a flag the caller accumulates (in practice H is chosen >= any
+    ``tau`` is clipped to ``[0, min(k, H-1)]``; clipping beyond the horizon
+    only ever *under-estimates* the window sum, which would be unsafe, so we
+    also return a flag the caller accumulates (in practice H is chosen > any
     system delay; the dry-run configs use H=4096).
+
+    The cap is ``H - 1``, not ``H``: we need ``S_{k-tau}``, which lives in
+    buffer slot ``(k - tau - 1) % H``, and at ``tau = H`` that slot collides
+    with ``(k - 1) % H`` -- just overwritten with ``S_k`` -- so the window
+    sum would silently read as zero (regression pinned in
+    ``tests/test_stepsize_properties.py::test_window_sum_horizon_clipping_edge``).
     """
     H = state.horizon
     k = state.k
     tau = jnp.asarray(tau, jnp.int32)
-    tau_c = jnp.clip(tau, 0, jnp.minimum(k, H))
-    was_clipped = (tau > jnp.minimum(k, H)).astype(jnp.int32)
+    cap = jnp.minimum(k, H - 1)
+    tau_c = jnp.clip(tau, 0, cap)
+    was_clipped = (tau > cap).astype(jnp.int32)
     j = k - tau_c  # we need S_j
-    s_j = jnp.where(j <= 0, 0.0, state.cumbuf[(j - 1) % H])
+    if state.cumbuf.ndim == 1:
+        s_read = state.cumbuf[(j - 1) % H]
+    else:  # batched state (init_state(batch_shape=...)): gather per cell
+        s_read = jnp.take_along_axis(
+            state.cumbuf, (((j - 1) % H)[..., None]), axis=-1)[..., 0]
+    s_j = jnp.where(j <= 0, 0.0, s_read)
     return state.total - s_j, was_clipped
 
 
 def _push(state: StepsizeState, gamma: jnp.ndarray, was_clipped: jnp.ndarray) -> StepsizeState:
     H = state.horizon
     new_total = state.total + gamma
-    cumbuf = state.cumbuf.at[state.k % H].set(new_total)
+    if state.cumbuf.ndim == 1:
+        cumbuf = state.cumbuf.at[state.k % H].set(new_total)
+    else:  # batched state: scatter each cell's slot
+        slot = jnp.arange(H) == (state.k % H)[..., None]
+        cumbuf = jnp.where(slot, new_total[..., None], state.cumbuf)
     return StepsizeState(
         k=state.k + 1,
         total=new_total,

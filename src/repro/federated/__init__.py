@@ -31,11 +31,12 @@ Three layers:
 """
 from .events import (ClientModel, FederatedTrace, heterogeneous_clients,
                      simulate_federated)
-from .server import (FedResult, local_prox_sgd, run_fedasync,
+from .server import (FedResult, fedasync_scan, local_prox_sgd, run_fedasync,
                      run_fedasync_problem, run_fedbuff, run_fedbuff_problem)
 
 __all__ = [
     "ClientModel", "FederatedTrace", "heterogeneous_clients",
-    "simulate_federated", "FedResult", "local_prox_sgd", "run_fedasync",
-    "run_fedasync_problem", "run_fedbuff", "run_fedbuff_problem",
+    "simulate_federated", "FedResult", "fedasync_scan", "local_prox_sgd",
+    "run_fedasync", "run_fedasync_problem", "run_fedbuff",
+    "run_fedbuff_problem",
 ]

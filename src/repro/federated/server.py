@@ -31,8 +31,8 @@ from repro.core.stepsize import StepsizePolicy
 
 from .events import FederatedTrace
 
-__all__ = ["FedResult", "run_fedasync", "run_fedbuff", "local_prox_sgd",
-           "run_fedasync_problem", "run_fedbuff_problem"]
+__all__ = ["FedResult", "fedasync_scan", "run_fedasync", "run_fedbuff",
+           "local_prox_sgd", "run_fedasync_problem", "run_fedbuff_problem"]
 
 Pytree = Any
 
@@ -84,17 +84,22 @@ def _prep(x0, client_data, trace: FederatedTrace):
     return n, x_read0, events
 
 
-def run_fedasync(
+def fedasync_scan(
     client_update: Callable,    # (x, n_steps, *client_data_slice) -> x_c
     x0: Pytree,
     client_data: Pytree,        # each leaf (n_clients, ...)
-    trace: FederatedTrace,
-    policy: StepsizePolicy,     # gamma_prime = alpha; emits alpha * s(tau)
-    objective: Optional[Callable] = None,   # P(x); nan if omitted
+    events,                     # stacked (client, tau, local_steps, aggregate, version)
+    policy: StepsizePolicy,
+    objective: Optional[Callable] = None,
     horizon: int = 4096,
 ) -> FedResult:
-    """FedAsync: staleness-weighted model mixing, one write per upload."""
-    n, x_read0, events = _prep(x0, client_data, trace)
+    """The traceable FedAsync core: one ``lax.scan`` over upload events.
+
+    Shared verbatim by the solo ``run_fedasync`` jit and the vmapped
+    ``repro.sweep.sweep_fedasync`` batch (events and policy parameters get a
+    leading grid dimension there)."""
+    n = _leaves(client_data)[0].shape[0]
+    x_read0 = _tmap(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
     def data_at(w):
         return _tmap(lambda leaf: leaf[w], client_data)
@@ -113,13 +118,29 @@ def run_fedasync(
         x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
         return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
 
-    @jax.jit
-    def run(carry0, events):
-        return jax.lax.scan(step, carry0, events)
-
     carry0 = (x0, x_read0, policy.init(horizon))
-    (x_fin, *_), (o, g, t, v) = run(carry0, events)
+    (x_fin, *_), (o, g, t, v) = jax.lax.scan(step, carry0, events)
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v)
+
+
+def run_fedasync(
+    client_update: Callable,
+    x0: Pytree,
+    client_data: Pytree,
+    trace: FederatedTrace,
+    policy: StepsizePolicy,     # gamma_prime = alpha; emits alpha * s(tau)
+    objective: Optional[Callable] = None,   # P(x); nan if omitted
+    horizon: int = 4096,
+) -> FedResult:
+    """FedAsync: staleness-weighted model mixing, one write per upload."""
+    _, _, events = _prep(x0, client_data, trace)
+
+    @jax.jit
+    def run(events):
+        return fedasync_scan(client_update, x0, client_data, events, policy,
+                             objective=objective, horizon=horizon)
+
+    return run(events)
 
 
 def run_fedbuff(

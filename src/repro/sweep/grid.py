@@ -1,0 +1,120 @@
+"""Sweep grids: the cartesian product of policies x seeds x topologies.
+
+A ``SweepGrid`` is a flat list of cells, each pinning one policy instance,
+one RNG seed, and one worker topology (a list of ``WorkerModel``/
+``ClientModel``).  The grid knows how to materialize the batched inputs the
+runners consume: a stacked service-time tensor (B, n_workers, K+1) for the
+jitted trace generator and stacked ``PolicyParams`` for the parametric
+policy.  All topologies in one grid must share ``n_workers`` (stacking needs
+rectangular arrays); sweep worker counts across separate grids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (WorkerModel, heterogeneous_workers,
+                               sample_service_times, trace_scan)
+from repro.core.stepsize import StepsizePolicy
+
+from .policies import PolicyParams, stack_params
+
+__all__ = ["SweepCell", "SweepGrid", "make_grid", "measure_tau_bar",
+           "standard_topologies"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One grid cell: (policy, seed, topology)."""
+
+    policy_name: str
+    policy: StepsizePolicy
+    seed: int
+    topology_name: str
+    workers: Tuple = ()
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.workers)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """A flat batch of sweep cells plus the shared event count."""
+
+    cells: Tuple[SweepCell, ...]
+    n_events: int
+
+    def __post_init__(self):
+        ns = {c.n_workers for c in self.cells}
+        if len(ns) > 1:
+            raise ValueError(f"all cells must share n_workers, got {sorted(ns)}")
+
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    @property
+    def n_workers(self) -> int:
+        return self.cells[0].n_workers
+
+    def policy_params(self) -> PolicyParams:
+        """Stacked (B,) ``PolicyParams`` for the parametric policy."""
+        return stack_params([c.policy for c in self.cells])
+
+    def service_times(self) -> np.ndarray:
+        """(B, n_workers, n_events + 1) float32 -- one matrix per cell,
+        sampled from the cell's seed (per-worker counter substreams)."""
+        return np.stack([
+            sample_service_times(c.workers, self.n_events + 1, seed=c.seed)
+            for c in self.cells])
+
+    def labels(self) -> List[str]:
+        return [f"{c.policy_name}/s{c.seed}/{c.topology_name}"
+                for c in self.cells]
+
+
+def standard_topologies(n_workers: int, seed: int = 0) -> Dict[str, list]:
+    """The four worker regimes the paper's figures probe: homogeneous,
+    mildly/strongly heterogeneous speeds (Fig. 3 shows ~2.4x per-worker
+    spread), and straggler-dominated (Fig. 2's long-tail delays)."""
+    return {
+        "uniform": [WorkerModel() for _ in range(n_workers)],
+        "hetero2": heterogeneous_workers(n_workers, spread=2.0, seed=seed),
+        "hetero4": heterogeneous_workers(n_workers, spread=4.0, seed=seed + 1),
+        "straggler": [WorkerModel(mean=1.0, p_straggle=0.1, straggle_x=12.0)
+                      for _ in range(n_workers)],
+    }
+
+
+def measure_tau_bar(topologies: Dict[str, Sequence], seeds: Sequence[int],
+                    n_events: int) -> int:
+    """The worst-case delay bound tau-bar over every (topology, seed) trace
+    of a prospective grid -- what the paper's fixed baselines are tuned from.
+
+    Runs the jitted trace generator over all topology x seed cells in one
+    vmapped program (policies don't influence traces, so none are needed).
+    Shared by ``benchmarks/sweep_grid.py`` and ``repro.launch.sweep``.
+    """
+    Ts = np.stack([
+        sample_service_times(ws, n_events + 1, seed=int(s))
+        for ws in topologies.values() for s in seeds])
+    taus = jax.jit(jax.vmap(lambda T: trace_scan(T).tau_max))(jnp.asarray(Ts))
+    return int(np.max(np.asarray(taus)))
+
+
+def make_grid(policies: Dict[str, StepsizePolicy],
+              seeds: Sequence[int],
+              topologies: Dict[str, Sequence],
+              n_events: int) -> SweepGrid:
+    """Cartesian product in deterministic (policy, seed, topology) order."""
+    cells = tuple(
+        SweepCell(policy_name=pn, policy=pol, seed=int(s),
+                  topology_name=tn, workers=tuple(ws))
+        for (pn, pol), s, (tn, ws) in itertools.product(
+            policies.items(), seeds, topologies.items()))
+    return SweepGrid(cells=cells, n_events=n_events)

@@ -1,0 +1,152 @@
+"""Data-driven step-size policies: `StepsizePolicy` instances as arrays.
+
+``core.stepsize`` policies are frozen dataclasses whose parameters are
+Python floats -- compile-time constants.  A sweep wants the OPPOSITE: one
+compiled program where the policy (type and parameters) is a runtime value,
+so a whole policy x seed x topology grid shares a single XLA executable.
+
+``PolicyParams`` flattens any supported policy into four scalars
+(``policy_id`` + three floats) -- a pytree, so it stacks and ``vmap``s.
+``ParamPolicy`` is the `StepsizePolicy`-shaped adapter that dispatches on
+``policy_id`` with ``lax.switch``; each branch reproduces the concrete
+policy's ``_gamma`` arithmetic operation-for-operation (float32 throughout,
+fixed-family per-step constants precomputed in float64 exactly like the
+dataclass does), so a sweep row is bitwise-equal in (gammas, taus) to a solo
+run of the concrete policy.  ``tests/test_sweep.py`` pins that equality.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stepsize import (Adaptive1, Adaptive2, DavisFixed,
+                                 FixedStepSize, HingeWeight, NaiveAdaptive,
+                                 PolyWeight, StepsizePolicy, SunDengFixed,
+                                 _push, init_state, window_sum)
+
+__all__ = ["PolicyParams", "ParamPolicy", "policy_params", "stack_params",
+           "POLICY_IDS"]
+
+POLICY_IDS = {
+    "fixed_like": 0,   # FixedStepSize / SunDengFixed / DavisFixed
+    "naive": 1,
+    "adaptive1": 2,
+    "adaptive2": 3,
+    "hinge": 4,
+    "poly": 5,
+}
+
+
+class PolicyParams(NamedTuple):
+    """A `StepsizePolicy` as a vmappable pytree of scalars.
+
+    Field meaning depends on ``policy_id``:
+
+    ==========  ===========================  =====================  ======
+    policy_id   family                       c0                     c1
+    ==========  ===========================  =====================  ======
+    0           fixed / sun_deng / davis     precomputed gamma_k    --
+    1           naive c/(tau+b)              b                      --
+    2           adaptive1 (Eq. 13)           alpha                  --
+    3           adaptive2 (Eq. 14)           --                     --
+    4           hinge weight [Xie'19]        a                      b
+    5           poly weight [Xie'19]         a                      --
+    ==========  ===========================  =====================  ======
+    """
+
+    policy_id: jnp.ndarray   # int32 scalar
+    gamma_prime: jnp.ndarray  # float32 scalar
+    c0: jnp.ndarray          # float32 scalar
+    c1: jnp.ndarray          # float32 scalar
+
+
+def policy_params(policy: StepsizePolicy) -> PolicyParams:
+    """Flatten a concrete policy instance into ``PolicyParams``.
+
+    Fixed-family per-step constants are computed here in Python float64 and
+    rounded once to float32 -- the same rounding the dataclass performs via
+    ``jnp.full`` -- preserving bitwise equality with the solo path.
+    """
+    gp, c0, c1 = float(policy.gamma_prime), 0.0, 0.0
+    if isinstance(policy, FixedStepSize):
+        pid, c0 = POLICY_IDS["fixed_like"], gp / (policy.tau_bound + 1)
+    elif isinstance(policy, SunDengFixed):
+        pid, c0 = POLICY_IDS["fixed_like"], gp / (policy.tau_bound + 0.5)
+    elif isinstance(policy, DavisFixed):
+        pid, c0 = (POLICY_IDS["fixed_like"],
+                   gp / (1.0 + policy.ratio * policy.tau_bound))
+    elif isinstance(policy, NaiveAdaptive):
+        pid, c0 = POLICY_IDS["naive"], policy.b
+    elif isinstance(policy, Adaptive1):
+        pid, c0 = POLICY_IDS["adaptive1"], policy.alpha
+    elif isinstance(policy, Adaptive2):
+        pid = POLICY_IDS["adaptive2"]
+    elif isinstance(policy, HingeWeight):
+        pid, c0, c1 = POLICY_IDS["hinge"], policy.a, policy.b
+    elif isinstance(policy, PolyWeight):
+        pid, c0 = POLICY_IDS["poly"], policy.a
+    else:
+        raise TypeError(
+            f"{type(policy).__name__} has no PolicyParams flattening "
+            "(stateful policies like AdaptiveLipschitz carry extra state and "
+            "are out of sweep scope)")
+    return PolicyParams(
+        policy_id=jnp.asarray(pid, jnp.int32),
+        gamma_prime=jnp.asarray(np.float32(gp)),
+        c0=jnp.asarray(np.float32(c0)),
+        c1=jnp.asarray(np.float32(c1)),
+    )
+
+
+def stack_params(policies) -> PolicyParams:
+    """Stack per-cell ``PolicyParams`` into one batched pytree (leading B)."""
+    ps = [policy_params(p) if isinstance(p, StepsizePolicy) else p
+          for p in policies]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+
+class ParamPolicy:
+    """`StepsizePolicy`-shaped adapter around traced ``PolicyParams``.
+
+    Duck-types the two methods the solver scans use (``init`` / ``step``);
+    constructed INSIDE the vmapped cell function, so its fields are the
+    per-cell slices of the batched parameter arrays.
+    """
+
+    def __init__(self, params: PolicyParams):
+        self.params = params
+
+    def init(self, horizon: int = 4096):
+        return init_state(horizon)
+
+    def step(self, state, tau):
+        p = self.params
+        ws, clip = window_sum(state, tau)
+        t = jnp.asarray(tau, jnp.float32)
+        branches = {
+            # fixed family -- per-step constant precomputed at flatten time
+            "fixed_like": lambda: jnp.broadcast_to(p.c0, ws.shape),
+            # naive gamma' / (tau + b)  (Eq. 7, the diverging baseline)
+            "naive": lambda: p.gamma_prime / (t + p.c0),
+            # adaptive1 alpha * max(gamma' - window_sum, 0)  (Eq. 13)
+            "adaptive1": lambda: p.c0 * jnp.maximum(p.gamma_prime - ws, 0.0),
+            # adaptive2 gamma'/(tau+1) gated by the window budget (Eq. 14)
+            "adaptive2": lambda: jnp.where(
+                p.gamma_prime / (t + 1.0) <= p.gamma_prime - ws,
+                p.gamma_prime / (t + 1.0), 0.0),
+            # hinge staleness weight [Xie'19]
+            "hinge": lambda: p.gamma_prime * jnp.where(
+                t <= p.c1, 1.0,
+                1.0 / (p.c0 * jnp.maximum(t - p.c1, 0.0) + 1.0)),
+            # poly staleness weight [Xie'19]
+            "poly": lambda: p.gamma_prime * jnp.power(t + 1.0, -p.c0),
+        }
+        assert set(branches) == set(POLICY_IDS)
+        ordered = [branches[name] for name, _ in
+                   sorted(POLICY_IDS.items(), key=lambda kv: kv[1])]
+        gamma = jax.lax.switch(p.policy_id, ordered)
+        gamma = jnp.asarray(gamma, jnp.float32)
+        return gamma, _push(state, gamma, clip)

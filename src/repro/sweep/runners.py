@@ -1,0 +1,168 @@
+"""Batched sweep runners: whole policy x seed x topology grids as ONE program.
+
+Each ``make_sweep_*`` builder returns a single jitted function mapping the
+grid's stacked inputs -- a (B, n_workers, K+1) service-time tensor and (B,)
+``PolicyParams`` -- to a batched result.  Inside, ``jax.vmap`` composes the
+jitted trace generator (``core.engine.trace_scan``) with the corresponding
+solver scan (``core.piag.piag_scan`` / ``core.bcd.bcd_scan`` /
+``federated.server.fedasync_scan``), so trace generation AND optimization
+for every cell run in one XLA executable with one compile.
+
+Row semantics: cell ``i`` of a sweep is the SAME computation as a solo run
+of that cell's config (same trace bitwise, same step code via the shared
+scan cores, same policy arithmetic via ``ParamPolicy``); only XLA's batching
+of the gradient linear algebra can differ, at the last-ulp level.
+``sweep_*`` convenience wrappers build + call in one shot; keep the builder
+when you need to amortize the compile across repeated calls (benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bcd import BCDResult, bcd_scan, sample_blocks
+from repro.core.engine import trace_scan
+from repro.core.piag import PIAGResult, piag_scan
+from repro.core.prox import ProxOp
+from repro.federated.events import simulate_federated
+from repro.federated.server import FedResult, fedasync_scan
+
+from .grid import SweepGrid
+from .policies import ParamPolicy
+
+__all__ = ["make_sweep_piag", "sweep_piag", "sweep_piag_logreg",
+           "make_sweep_bcd", "sweep_bcd", "sweep_bcd_logreg",
+           "make_sweep_fedasync", "sweep_fedasync", "sweep_fedasync_problem"]
+
+
+# ---------------------------------------------------------------- PIAG ----
+
+def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
+                    objective: Optional[Callable] = None, horizon: int = 4096,
+                    use_tau_max: bool = True) -> Callable:
+    """Build the batched PIAG program.
+
+    Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
+    PIAGResult`` with a leading B on every leaf.
+    """
+
+    def cell(T, pp):
+        tr = trace_scan(T)
+        events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
+        return piag_scan(worker_loss, x0, worker_data, events,
+                         ParamPolicy(pp), prox, objective=objective,
+                         horizon=horizon)
+
+    return jax.jit(jax.vmap(cell))
+
+
+def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
+               prox: ProxOp, objective: Optional[Callable] = None,
+               horizon: int = 4096, use_tau_max: bool = True) -> PIAGResult:
+    """Run PIAG on every cell of ``grid`` in one batched program."""
+    fn = make_sweep_piag(worker_loss, x0, worker_data, prox,
+                         objective=objective, horizon=horizon,
+                         use_tau_max=use_tau_max)
+    return fn(jnp.asarray(grid.service_times()), grid.policy_params())
+
+
+def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
+                      horizon: int = 4096) -> PIAGResult:
+    """Grid analogue of ``core.piag.run_piag_logreg`` (the Fig. 2 cell)."""
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    return sweep_piag(lambda x, A, b: problem.worker_loss(x, A, b), x0,
+                      (Aw, bw), grid, prox, objective=problem.P,
+                      horizon=horizon)
+
+
+# ----------------------------------------------------------- Async-BCD ----
+
+def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
+                   n_workers: int, prox: ProxOp,
+                   horizon: int = 4096) -> Callable:
+    """Build the batched Async-BCD program: jitted ``fn(service_times
+    (B, n, K+1), blocks (B, K), params (B,)) -> BCDResult``."""
+
+    def cell(T, blocks, pp):
+        tr = trace_scan(T)
+        events = (tr.worker, tr.tau, blocks)
+        return bcd_scan(grad_f, objective, x0, m, n_workers, events,
+                        ParamPolicy(pp), prox, horizon=horizon)
+
+    return jax.jit(jax.vmap(cell))
+
+
+def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
+              grid: SweepGrid, prox: ProxOp, horizon: int = 4096) -> BCDResult:
+    """Run Async-BCD on every cell; block choices replay the solo sampling
+    (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
+    runs."""
+    fn = make_sweep_bcd(grad_f, objective, x0, m, grid.n_workers, prox,
+                        horizon=horizon)
+    blocks = np.stack([sample_blocks(m, grid.n_events, seed=c.seed)
+                       for c in grid.cells])
+    return fn(jnp.asarray(grid.service_times()), jnp.asarray(blocks),
+              grid.policy_params())
+
+
+def sweep_bcd_logreg(problem, grid: SweepGrid, prox: ProxOp, m: int = 20,
+                     horizon: int = 4096) -> BCDResult:
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    return sweep_bcd(problem.grad_f, problem.P, x0, m, grid, prox,
+                     horizon=horizon)
+
+
+# ------------------------------------------------------------- FedAsync ----
+
+def make_sweep_fedasync(client_update: Callable, x0, client_data,
+                        objective: Optional[Callable] = None,
+                        horizon: int = 4096) -> Callable:
+    """Build the batched FedAsync program: jitted ``fn(events (5 x (B, K)),
+    params (B,)) -> FedResult``."""
+
+    def cell(events, pp):
+        return fedasync_scan(client_update, x0, client_data, events,
+                             ParamPolicy(pp), objective=objective,
+                             horizon=horizon)
+
+    return jax.jit(jax.vmap(cell))
+
+
+def _stack_fed_events(grid: SweepGrid, buffer_size: int):
+    """Simulate one federated trace per cell (cell.workers are ClientModels)
+    and stack the event columns the server scan consumes."""
+    traces = [simulate_federated(c.n_workers, grid.n_events,
+                                 clients=list(c.workers),
+                                 buffer_size=buffer_size, seed=c.seed)
+              for c in grid.cells]
+    return tuple(
+        jnp.stack([jnp.asarray(getattr(t, f), dt) for t in traces])
+        for f, dt in [("client", jnp.int32), ("tau", jnp.int32),
+                      ("local_steps", jnp.int32), ("aggregate", jnp.float32),
+                      ("version", jnp.int32)])
+
+
+def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
+                   objective: Optional[Callable] = None,
+                   buffer_size: int = 1, horizon: int = 4096) -> FedResult:
+    """Run FedAsync on every cell of a grid whose topologies are
+    ``ClientModel`` lists.  Client round-trip traces come from the
+    (reference) federated event simulator; server mixing for all cells runs
+    in one batched program."""
+    fn = make_sweep_fedasync(client_update, x0, client_data,
+                             objective=objective, horizon=horizon)
+    return fn(_stack_fed_events(grid, buffer_size), grid.policy_params())
+
+
+def sweep_fedasync_problem(problem, grid: SweepGrid, prox: ProxOp,
+                           local_lr: Optional[float] = None,
+                           horizon: int = 4096) -> FedResult:
+    """Grid analogue of ``federated.server.run_fedasync_problem``."""
+    from repro.federated.server import _problem_pieces
+    update, x0, data = _problem_pieces(problem, prox, local_lr)
+    return sweep_fedasync(update, x0, data, grid, objective=problem.P,
+                          horizon=horizon)

@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (DelayTracker, WorkerModel, heterogeneous_workers,
-                        simulate_parameter_server, simulate_shared_memory)
+from repro.core import (DelayTracker, EventHeap, WorkerModel,
+                        heterogeneous_workers, simulate_parameter_server,
+                        simulate_shared_memory)
 from repro.data import EmbedStream, TokenStream
 
 
@@ -47,6 +48,60 @@ def test_heterogeneous_workers_speed_spread():
     means = sorted(w.mean for w in ws)
     assert means[0] == pytest.approx(1.0)
     assert means[-1] == pytest.approx(3.0)
+
+
+def test_event_heap_ties_pop_in_push_order():
+    """Regression: simultaneous completions must pop deterministically by
+    (time, seq) -- insertion order wins among equal times.  Without the seq
+    tiebreak, heapq would fall through to comparing payloads (worker ids,
+    arbitrary objects), making trace order depend on payload values."""
+    h = EventHeap()
+    h.push(2.0, "late-a")
+    h.push(1.0, "tied-1")
+    h.push(1.0, "tied-2")
+    h.push(1.0, "tied-3")
+    h.push(0.5, "early")
+    order = [h.pop()[1] for _ in range(len(h))]
+    assert order == ["early", "tied-1", "tied-2", "tied-3", "late-a"]
+
+
+def test_event_heap_ties_tolerate_uncomparable_payloads():
+    """The seq tiebreak must shield payloads from comparison entirely --
+    dict payloads would raise TypeError if heapq ever reached them."""
+    h = EventHeap()
+    h.push(1.0, {"a": 1})
+    h.push(1.0, {"b": 2})
+    assert h.pop()[1] == {"a": 1}
+    assert h.pop()[1] == {"b": 2}
+
+
+def test_simultaneous_arrivals_trace_is_round_robin():
+    """Deterministic identical service times tie every completion; the
+    pinned order is round-robin in worker index (= push order), for both
+    the heap reference and the jitted generator -- see test_sweep.py for
+    the scan side."""
+    workers = [WorkerModel(sigma=0.0) for _ in range(3)]
+    from repro.core import sample_service_times
+    T = sample_service_times(workers, 10, seed=0)
+    tr = simulate_parameter_server(3, 9, workers, seed=0, service_times=T)
+    np.testing.assert_array_equal(tr.worker, np.tile(np.arange(3), 3))
+    np.testing.assert_array_equal(tr.t_wall, np.repeat([1.0, 2.0, 3.0], 3))
+
+
+def test_presampled_service_times_reproduce_event_structure():
+    """The service_times path is a drop-in replacement for on-the-fly
+    sampling: same invariants, and worker i's k-th task duration is exactly
+    T[i, k] (wall-clock of a worker's completions telescopes the matrix)."""
+    workers = heterogeneous_workers(4, seed=9)
+    from repro.core import sample_service_times
+    T = sample_service_times(workers, 201, seed=9)
+    tr = simulate_parameter_server(4, 200, workers, seed=0, service_times=T)
+    assert np.all(np.diff(tr.t_wall) >= 0)
+    for w in range(4):
+        mine = tr.t_wall[tr.worker == w]
+        # completion times of worker w are prefix sums of row w (f32)
+        pref = np.cumsum(T[w].astype(np.float32))[:len(mine)]
+        np.testing.assert_allclose(mine, pref, rtol=1e-6)
 
 
 def test_delay_tracker_unstamped_worker_raises():

@@ -1,0 +1,206 @@
+"""Property tests for the Eq. (8) step-size invariant
+
+    0 <= gamma_k <= max(0, gamma' - sum_{t=k-tau_k}^{k-1} gamma_t)
+
+across EVERY policy registered in ``core.stepsize.POLICIES``, plus the
+circular-buffer window-sum machinery itself (O(1) buffer vs O(tau) direct
+sum, including the horizon-clipping edge).
+
+Every registered policy must be classified below; adding a policy to
+``POLICIES`` without declaring where it stands w.r.t. the principle fails
+``test_every_policy_is_classified`` -- the invariant the convergence proofs
+rest on should never be implicit.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import POLICIES, make_delays, make_policy, window_sum
+from repro.core.stepsize import init_state
+
+GAMMA = 0.7
+
+# How each registered policy relates to principle (8):
+#   always         satisfies (8) for ANY delay sequence (the paper's Eq. 13/14
+#                  and the Lipschitz variant, whose run() budget is gamma')
+#   bounded        satisfies (8) provided tau_k <= tau_bound (fixed policy;
+#                  davis needs ratio >= 1)
+#   bounded_slack  satisfies (8) only with slack: tau_k <= tau_bound - 1
+#                  (sun_deng divides by tau_bound + 1/2, so at tau_k =
+#                  tau_bound it overshoots the window budget by gamma_k/2)
+#   weight         staleness *mixing weights* (FedAsync): bounded by gamma'
+#                  and nonincreasing in tau, but deliberately not
+#                  window-budgeted
+#   violates       the paper's Example 1 failure mode
+CLASSIFICATION = {
+    "adaptive1": "always",
+    "adaptive2": "always",
+    "adaptive_lipschitz": "always",
+    "fixed": "bounded",
+    "davis": "bounded",
+    "sun_deng": "bounded_slack",
+    "constant": "weight",
+    "hinge": "weight",
+    "poly": "weight",
+    "naive": "violates",
+}
+
+
+def test_every_policy_is_classified():
+    assert set(CLASSIFICATION) == set(POLICIES), (
+        "new policy registered without an Eq. (8) classification")
+
+
+def _policy_for(name: str, tau_bar: int):
+    if name in ("fixed", "davis"):
+        return make_policy(name, GAMMA, tau_bound=tau_bar)
+    if name == "sun_deng":
+        return make_policy(name, GAMMA, tau_bound=tau_bar + 1)
+    if name == "constant":
+        return make_policy(name, GAMMA)  # tau_bound=0: gamma_k = gamma'
+    return make_policy(name, GAMMA)
+
+
+def _budgets(gammas: np.ndarray, taus: np.ndarray) -> np.ndarray:
+    """max(0, gamma' - window_sum) via the O(tau) direct sum."""
+    out = np.empty_like(gammas)
+    for k, tau in enumerate(taus):
+        out[k] = max(0.0, GAMMA - float(gammas[max(k - int(tau), 0):k].sum()))
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40),
+       st.sampled_from(["constant", "random", "burst", "markov"]))
+def test_principle_invariant_all_policies(seed, tau_bar, model):
+    """For random bounded delay traces, every policy does what its
+    classification claims: emits gamma_k inside [0, budget_k] (with an
+    f32-accumulation tolerance), caps at gamma' for weights, and the naive
+    policy's violation is CAUGHT by the same check."""
+    taus = make_delays(model, 200, tau_bar, seed=seed)
+    tol = 1e-4 * max(1.0, GAMMA)
+    for name, cls in CLASSIFICATION.items():
+        g = np.asarray(_policy_for(name, tau_bar).run(taus), np.float64)
+        assert np.all(g >= 0.0), name
+        assert np.all(np.isfinite(g)), name
+        if cls in ("always", "bounded", "bounded_slack"):
+            budget = _budgets(g, taus)
+            assert np.all(g <= budget + tol), (
+                f"{name}: Eq. (8) violated by {np.max(g - budget):.2e}")
+        elif cls == "weight":
+            assert np.all(g <= GAMMA + tol), name
+
+
+def test_naive_violates_principle_under_constant_delay():
+    """Example 1: gamma_k = c/(tau_k + b) overshoots the window budget."""
+    taus = make_delays("constant", 200, 8, seed=0)
+    g = np.asarray(make_policy("naive", GAMMA, b=1.0).run(taus), np.float64)
+    budget = _budgets(g, taus)
+    assert np.any(g > budget + 1e-6), "expected Example 1's violation"
+
+
+def test_sun_deng_needs_the_slack():
+    """At tau_k = tau_bound the Sun/Deng step overshoots (8) -- that is WHY
+    it is classified bounded_slack and the paper treats it as a separate
+    state-of-the-art baseline rather than an instance of the principle."""
+    taus = make_delays("constant", 200, 8, seed=0)
+    g = np.asarray(make_policy("sun_deng", GAMMA, tau_bound=8).run(taus),
+                   np.float64)
+    budget = _budgets(g, taus)
+    assert np.any(g > budget + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 30),
+       st.sampled_from(["adaptive1", "adaptive2", "fixed"]))
+def test_window_sum_buffer_matches_direct_sum(seed, tau_bar, policy_name):
+    """The O(1) circular-buffer window sum equals the O(tau) direct sum at
+    every step (no clipping when horizon >= trace length)."""
+    rng = np.random.default_rng(seed)
+    n = 120
+    taus = np.minimum(rng.integers(0, tau_bar + 1, size=n), np.arange(n))
+    pol = _policy_for(policy_name, tau_bar)
+    state = pol.init(horizon=256)
+    gammas = []
+    for k in range(n):
+        tau = int(taus[k])
+        ws, clipped = window_sum(state, jnp.int32(tau))
+        direct = float(np.sum(gammas[max(k - tau, 0):k], dtype=np.float64))
+        assert abs(float(ws) - direct) < 1e-4
+        assert int(clipped) == 0
+        g, state = pol.step(state, jnp.int32(tau))
+        gammas.append(float(g))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_window_sum_horizon_clipping_edge(seed):
+    """With a tiny horizon H, delays beyond min(k, H-1) clip to the largest
+    representable window and raise the clipped flag -- the under-estimation
+    alarm the docstring promises.  The state's clipped counter totals exactly
+    the flagged steps.
+
+    Regression: the cap must be H-1, not H -- at tau = H the needed buffer
+    slot (k-tau-1) % H has just been overwritten with S_k, so the window sum
+    silently read as ZERO (full budget granted at the worst possible moment:
+    the most-delayed step).
+    """
+    H = 8
+    rng = np.random.default_rng(seed)
+    n = 60
+    taus = rng.integers(0, 20, size=n)
+    pol = make_policy("adaptive1", GAMMA)
+    state = pol.init(horizon=H)
+    gammas, expected_clips = [], 0
+    for k in range(n):
+        tau = int(taus[k])
+        eff = min(tau, k, H - 1)
+        ws, clipped = window_sum(state, jnp.int32(tau))
+        direct = float(np.sum(gammas[k - eff:k] if eff else [],
+                              dtype=np.float64))
+        assert abs(float(ws) - direct) < 1e-4
+        should_clip = tau > min(k, H - 1)
+        assert bool(clipped) == should_clip
+        expected_clips += int(should_clip)
+        g, state = pol.step(state, jnp.int32(tau))
+        gammas.append(float(g))
+    assert int(state.clipped) == expected_clips
+
+
+def test_batched_init_state_shapes():
+    """init_state(batch_shape=...) builds batched per-cell state; horizon
+    reads from the last axis."""
+    s = init_state(horizon=32, batch_shape=(5,))
+    assert s.k.shape == (5,) and s.cumbuf.shape == (5, 32)
+    assert s.horizon == 32
+    s0 = init_state(horizon=16)
+    assert s0.cumbuf.shape == (16,) and s0.horizon == 16
+
+
+def test_batched_state_steps_like_independent_scalar_chains():
+    """A batched state advanced with a batch of delays must evolve exactly
+    like B independent scalar chains -- gammas, window sums, totals, and
+    clipped counters all bitwise per cell (including horizon clipping)."""
+    B, H, n = 3, 8, 40
+    rng = np.random.default_rng(0)
+    taus = rng.integers(0, 12, size=(n, B))
+    pol = make_policy("adaptive1", GAMMA)
+    batched = init_state(horizon=H, batch_shape=(B,))
+    scalars = [pol.init(horizon=H) for _ in range(B)]
+    for k in range(n):
+        tb = jnp.asarray(taus[k], jnp.int32)
+        ws_b, clip_b = window_sum(batched, tb)
+        g_b, batched = pol.step(batched, tb)
+        for c in range(B):
+            ws_s, clip_s = window_sum(scalars[c], jnp.int32(taus[k, c]))
+            g_s, scalars[c] = pol.step(scalars[c], jnp.int32(taus[k, c]))
+            assert float(ws_s) == float(ws_b[c])
+            assert int(clip_s) == int(clip_b[c])
+            assert float(g_s) == float(g_b[c])
+    for c in range(B):
+        assert float(scalars[c].total) == float(batched.total[c])
+        assert int(scalars[c].clipped) == int(batched.clipped[c])
+        np.testing.assert_array_equal(np.asarray(scalars[c].cumbuf),
+                                      np.asarray(batched.cumbuf[c]))

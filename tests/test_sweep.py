@@ -1,0 +1,263 @@
+"""Equivalence suite for the vectorized sweep engine.
+
+Three layers, each tied to the trusted reference:
+
+1. traces    -- the jitted ``trace_scan`` is BITWISE-equal to the heapq
+               simulators when both consume the same service-time matrix
+               (event order, read versions, staleness, f32 wall-clock),
+               including simultaneous arrivals (tie-break by push order).
+2. policies  -- ``ParamPolicy`` (the lax.switch parametric policy) steps
+               bitwise-identically to every flattenable concrete policy.
+3. solvers   -- a ``sweep_*`` row matches a solo ``run_*`` of the same
+               config: integer outputs (taus, workers, blocks) exactly;
+               float outputs to a few-ulp envelope (solo and batched are
+               different XLA programs, so fusion may differ in the last
+               ulps of gamma'-scale arithmetic -- the window-budget
+               cancellation amplifies exactly that; everything else about
+               the computation is shared code).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1, make_logreg,
+                        generate_trace, run_async_bcd, run_piag_logreg,
+                        sample_blocks, sample_service_times,
+                        simulate_parameter_server, simulate_shared_memory,
+                        trace_scan)
+from repro.core.engine import WorkerModel, heterogeneous_workers
+from repro.core.stepsize import (DavisFixed, HingeWeight, NaiveAdaptive,
+                                 PolyWeight, SunDengFixed)
+from repro.federated.events import heterogeneous_clients, simulate_federated
+from repro.federated.server import run_fedasync_problem
+from repro.sweep import (ParamPolicy, make_grid, policy_params,
+                         standard_topologies, sweep_bcd_logreg,
+                         sweep_fedasync_problem, sweep_piag_logreg)
+
+MODELS = {
+    "lognormal": [WorkerModel(sigma=0.4) for _ in range(5)],
+    "straggler": [WorkerModel(p_straggle=0.25, straggle_x=15.0)
+                  for _ in range(5)],
+    "heterogeneous": heterogeneous_workers(5, spread=3.0, seed=4),
+}
+
+
+# ------------------------------------------------------------ 1. traces ----
+
+@pytest.mark.parametrize("model", sorted(MODELS))
+def test_trace_scan_matches_heapq_parameter_server(model):
+    workers = MODELS[model]
+    T = sample_service_times(workers, 401, seed=11)
+    ref = simulate_parameter_server(5, 400, workers, seed=0, service_times=T)
+    jit = generate_trace(T)
+    for field in ("worker", "read_at", "tau", "tau_max"):
+        np.testing.assert_array_equal(getattr(ref, field), getattr(jit, field),
+                                      err_msg=field)
+    np.testing.assert_array_equal(ref.t_wall.astype(np.float32),
+                                  jit.t_wall.astype(np.float32))
+
+
+@pytest.mark.parametrize("model", sorted(MODELS))
+def test_trace_scan_matches_heapq_shared_memory(model):
+    workers = MODELS[model]
+    T = sample_service_times(workers, 301, seed=5)
+    ref = simulate_shared_memory(5, 300, 10, workers, seed=0, service_times=T)
+    jit = generate_trace(T, kind="shared_memory")
+    np.testing.assert_array_equal(ref.worker, jit.worker)
+    np.testing.assert_array_equal(ref.read_at, jit.read_at)
+    np.testing.assert_array_equal(ref.tau, jit.tau)
+    np.testing.assert_array_equal(jit.tau, jit.tau_max)  # shared-memory tau_max
+
+
+def test_trace_scan_ties_resolve_like_heap_push_order():
+    """Regression for simultaneous arrivals: identical deterministic service
+    times tie EVERY completion; both paths must order by (time, seq), which
+    for equal constant durations is round-robin in worker order."""
+    workers = [WorkerModel(sigma=0.0) for _ in range(4)]  # all tasks take 1.0
+    T = sample_service_times(workers, 13, seed=0)
+    assert np.all(T == 1.0)
+    ref = simulate_parameter_server(4, 12, workers, seed=0, service_times=T)
+    jit = generate_trace(T)
+    np.testing.assert_array_equal(ref.worker, jit.worker)
+    np.testing.assert_array_equal(ref.worker, np.tile(np.arange(4), 3))
+    # round-robin => every gradient is exactly n_workers - 1 stale (post ramp)
+    np.testing.assert_array_equal(ref.tau[4:], np.full(8, 3))
+
+
+def test_trace_scan_vmaps():
+    """A stacked batch of matrices -> a batch of traces in one program."""
+    Ts = np.stack([sample_service_times(MODELS["lognormal"], 101, seed=s)
+                   for s in range(6)])
+    out = jax.jit(jax.vmap(trace_scan))(jnp.asarray(Ts))
+    assert out.worker.shape == (6, 100)
+    for s in range(6):
+        solo = generate_trace(Ts[s])
+        np.testing.assert_array_equal(solo.worker, np.asarray(out.worker[s]))
+        np.testing.assert_array_equal(solo.tau_max, np.asarray(out.tau_max[s]))
+
+
+# ---------------------------------------------------------- 2. policies ----
+
+CONCRETE_POLICIES = [
+    FixedStepSize(gamma_prime=0.7, tau_bound=9),
+    SunDengFixed(gamma_prime=0.7, tau_bound=9),
+    DavisFixed(gamma_prime=0.7, tau_bound=9, ratio=0.5),
+    NaiveAdaptive(gamma_prime=0.7, b=1.5),
+    Adaptive1(gamma_prime=0.7, alpha=0.9),
+    Adaptive2(gamma_prime=0.7),
+    HingeWeight(gamma_prime=0.7, a=10.0, b=4.0),
+    PolyWeight(gamma_prime=0.7, a=0.5),
+]
+
+
+@pytest.mark.parametrize("policy", CONCRETE_POLICIES,
+                         ids=lambda p: type(p).__name__)
+def test_param_policy_steps_bitwise_like_concrete(policy):
+    """ParamPolicy's lax.switch branch reproduces the concrete policy's
+    arithmetic exactly: stepping both through the same random delay sequence
+    yields bit-identical gammas and states."""
+    par = ParamPolicy(policy_params(policy))
+    rng = np.random.default_rng(3)
+    s_c, s_p = policy.init(64), par.init(64)
+    for k in range(80):
+        tau = jnp.int32(min(int(rng.integers(0, 13)), k))
+        g_c, s_c = policy.step(s_c, tau)
+        g_p, s_p = par.step(s_p, tau)
+        assert float(g_c) == float(g_p), (k, type(policy).__name__)
+    assert float(s_c.total) == float(s_p.total)
+    np.testing.assert_array_equal(np.asarray(s_c.cumbuf),
+                                  np.asarray(s_p.cumbuf))
+
+
+def test_param_policy_rejects_stateful_policies():
+    from repro.core.stepsize import AdaptiveLipschitz
+    with pytest.raises(TypeError):
+        policy_params(AdaptiveLipschitz(gamma_prime=1.0))
+
+
+# ----------------------------------------------------------- 3. solvers ----
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+def _gamma_envelope(gp: float) -> float:
+    # a few ulps of gamma'-scale intermediates (see module docstring)
+    return 32 * float(np.spacing(np.float32(gp)))
+
+
+def test_sweep_piag_rows_match_solo(problem):
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "a2": Adaptive2(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=12)},
+        seeds=[0, 1],
+        topologies={"uniform": [WorkerModel() for _ in range(4)],
+                    "hetero": heterogeneous_workers(4, seed=1)},
+        n_events=200)
+    res = sweep_piag_logreg(problem, grid, prox)
+    assert res.objective.shape == (len(grid), 200)
+    Ts = grid.service_times()
+    for i, cell in enumerate(grid.cells):
+        trace = generate_trace(Ts[i])
+        solo = run_piag_logreg(problem, trace, cell.policy, prox)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_allclose(np.asarray(solo.gammas),
+                                   np.asarray(res.gammas[i]),
+                                   rtol=1e-6, atol=_gamma_envelope(gp))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(solo.x), np.asarray(res.x[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_sweep_bcd_rows_match_solo(problem):
+    m = 8
+    gp = 0.99 / problem.block_smoothness(m)
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "dv": DavisFixed(gamma_prime=gp, tau_bound=10, ratio=0.5)},
+        seeds=[0, 1],
+        topologies={"uniform": [WorkerModel() for _ in range(4)]},
+        n_events=150)
+    res = sweep_bcd_logreg(problem, grid, prox, m=m)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    Ts = grid.service_times()
+    for i, cell in enumerate(grid.cells):
+        trace = generate_trace(Ts[i], kind="shared_memory")
+        blocks = sample_blocks(m, 150, seed=cell.seed)
+        solo = run_async_bcd(problem.grad_f, problem.P, x0, m, trace, blocks,
+                             cell.policy, prox)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_array_equal(np.asarray(solo.blocks),
+                                      np.asarray(res.blocks[i]))
+        np.testing.assert_allclose(np.asarray(solo.gammas),
+                                   np.asarray(res.gammas[i]),
+                                   rtol=1e-6, atol=_gamma_envelope(gp))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_sweep_fedasync_rows_match_solo(problem):
+    prox = L1(lam=problem.lam1)
+    clients = heterogeneous_clients(4, seed=2)
+    grid = make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6),
+                  "poly": PolyWeight(gamma_prime=0.6, a=0.5),
+                  "const": FixedStepSize(gamma_prime=0.6)},
+        seeds=[0, 1],
+        topologies={"edge": clients},
+        n_events=120)
+    res = sweep_fedasync_problem(problem, grid, prox)
+    assert res.objective.shape == (len(grid), 120)
+    for i, cell in enumerate(grid.cells):
+        trace = simulate_federated(4, 120, clients=list(cell.workers),
+                                   buffer_size=1, seed=cell.seed)
+        solo = run_fedasync_problem(problem, trace, cell.policy, prox)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_allclose(np.asarray(solo.weights),
+                                   np.asarray(res.weights[i]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_sweep_full_grid_64_cells(problem):
+    """The benchmark-scale grid (4 policies x 4 seeds x 4 topologies = 64
+    cells) runs as one batched program; sampled rows match solo runs."""
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"adaptive1": Adaptive1(gamma_prime=gp),
+                  "adaptive2": Adaptive2(gamma_prime=gp),
+                  "fixed": FixedStepSize(gamma_prime=gp, tau_bound=40),
+                  "sun_deng": SunDengFixed(gamma_prime=gp, tau_bound=40)},
+        seeds=range(4),
+        topologies=standard_topologies(4),
+        n_events=250)
+    assert len(grid) == 64
+    res = sweep_piag_logreg(problem, grid, prox)
+    assert res.objective.shape == (64, 250)
+    assert np.all(np.isfinite(np.asarray(res.objective)))
+    Ts = grid.service_times()
+    for i in (0, 21, 42, 63):
+        trace = generate_trace(Ts[i])
+        solo = run_piag_logreg(problem, trace, grid.cells[i].policy, prox)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
