@@ -1,0 +1,304 @@
+"""Device-sharded mega-grid benchmark: a >= 512-cell policy x seed x
+topology x n_workers PIAG grid, single-device batched vs sharded across
+forced host devices.
+
+Three timed paths over the SAME cells (same service-time matrices, same
+policies, bucketed by padded worker count exactly as ``repro.sweep`` does):
+
+* ``single``   -- the PR 2 path: one ``jit(vmap(cell))`` program per bucket
+                  on one device.
+* ``sharded1`` -- the shard_map path over a 1-device mesh (measures the
+                  shard_map overhead in isolation).
+* ``shardedN`` -- the shard_map path over every device: the cell axis
+                  round-robin-padded to a device multiple and partitioned,
+                  stacked service-time tensors donated.
+
+Also re-runs the PR 2 64-cell ``benchmarks/sweep_grid.py`` in a clean
+single-device subprocess (refreshing ``BENCH_sweep_grid.json``) so the
+sweep-engine baseline stays comparable release to release.  Gate: the
+refreshed warm time must stay within ``GRID64_REGRESSION_TOLERANCE`` of the
+prior artifact's (shared/throttled CI runners jitter real timings by tens
+of percent, so the tolerance is deliberately loose -- it catches
+algorithmic regressions, not noise).
+
+Emits ``BENCH_mega_grid.json``.  Run with forced host devices (done
+automatically when this module is imported before jax, e.g. ``python -m
+benchmarks.mega_grid``):
+
+    PYTHONPATH=src python -m benchmarks.mega_grid \
+        [--events N] [--seeds N] [--widths 4,8] [--out PATH]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# must precede ANY jax import in the process: forced host devices are fixed
+# at backend init (no-op if the operator already set a device count)
+_FLAG = "xla_force_host_platform_device_count"
+if "jax" not in sys.modules and _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --{_FLAG}={os.environ.get('MEGA_GRID_DEVICES', '8')}").strip()
+
+import argparse
+import json
+import subprocess
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
+                        SunDengFixed, make_logreg)
+from repro.core.engine import trace_scan, sample_service_times
+from repro.core.piag import piag_scan
+from repro.sweep import (cell_mesh, make_grid, make_sharded_sweep_piag,
+                         make_sweep_piag, measure_tau_bar, round_robin_pad,
+                         run_bucketed, standard_topology_factories)
+from repro.sweep.runners import _slice_workers
+
+from .common import emit
+
+# 64-cell warm-time regression gate: refreshed / prior must stay below this
+# (loose on purpose: shared CI runners jitter wall-clock by tens of percent)
+GRID64_REGRESSION_TOLERANCE = 1.5
+
+
+def build_mega_grid(widths, n_seeds, n_events, gp):
+    seeds = list(range(n_seeds))
+    topos = standard_topology_factories()
+    tau_bar = measure_tau_bar(
+        {f"{tn}/w{w}": f(w) for tn, f in topos.items() for w in widths},
+        seeds, n_events)
+    policies = {
+        "adaptive1": Adaptive1(gamma_prime=gp, alpha=0.9),
+        "adaptive2": Adaptive2(gamma_prime=gp),
+        "fixed": FixedStepSize(gamma_prime=gp, tau_bound=tau_bar),
+        "fixed_sun_deng": SunDengFixed(gamma_prime=gp, tau_bound=tau_bar),
+    }
+    return make_grid(policies, seeds, topos, n_events,
+                     n_workers=list(widths)), tau_bar
+
+
+class BucketedRunner:
+    """Pre-built per-bucket programs + pre-stacked inputs, so repeated calls
+    time execution (warm) instead of rebuild+retrace.  ``mesh=None`` is the
+    plain single-device path; otherwise shard_map over the mesh (inputs are
+    re-uploaded per call because the sharded program donates them)."""
+
+    def __init__(self, problem, grid, prox, mesh=None):
+        Aw, bw = problem.worker_slices()
+        x0 = jnp.zeros((problem.dim,), jnp.float32)
+        loss = lambda x, A, b: problem.worker_loss(x, A, b)
+        self.grid, self.mesh = grid, mesh
+        self.plan = {}
+        for b in grid.buckets():
+            wd = _slice_workers((Aw, bw), b.width)
+            masked = not b.uniform
+            if mesh is None:
+                fn = make_sweep_piag(loss, x0, wd, prox, objective=problem.P,
+                                     masked=masked)
+                idx = None
+            else:
+                fn = make_sharded_sweep_piag(loss, x0, wd, prox,
+                                             objective=problem.P,
+                                             masked=masked, mesh=mesh)
+                idx = round_robin_pad(len(b.grid), mesh.devices.size)
+            T = b.grid.service_times(b.width)
+            act = b.grid.active_masks(b.width)
+            pp = b.grid.policy_params()
+            self.plan[b.width] = (fn, masked, idx, T, act, pp)
+
+    def __call__(self):
+        def run_bucket_cached(b):
+            fn, masked, idx, T, act, pp = self.plan[b.width]
+            args = (jnp.asarray(T),) + (
+                (jnp.asarray(act),) if masked else ()) + (pp,)
+            if idx is not None:
+                args = tuple(
+                    jax.tree_util.tree_map(lambda x: jnp.asarray(x)[idx], a)
+                    for a in args)
+            out = fn(*args)
+            if idx is not None:
+                out = jax.tree_util.tree_map(lambda x: x[:len(b.grid)], out)
+            return out
+
+        return jax.block_until_ready(
+            run_bucketed(self.grid, run_bucket_cached))
+
+
+def _time(runner):
+    t0 = time.perf_counter()
+    res = runner()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = runner()
+    warm = time.perf_counter() - t0
+    return cold, warm, res
+
+
+def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
+        loop_cells: int = 6, out: str = "BENCH_mega_grid.json") -> dict:
+    n_dev = len(jax.devices())
+    prob = make_logreg(480, 60, n_workers=max(widths), seed=0)
+    gp = 0.99 / prob.L
+    prox = L1(lam=prob.lam1)
+    grid, tau_bar = build_mega_grid(widths, n_seeds, n_events, gp)
+    B = len(grid)
+    emit("mega_grid/config", 0.0,
+         f"cells={B};events={n_events};widths={list(widths)};"
+         f"devices={n_dev};tau_bar={tau_bar}")
+
+    single = BucketedRunner(prob, grid, prox, mesh=None)
+    cold_1, warm_1, res_single = _time(single)
+    emit("mega_grid/single_device", cold_1 * 1e6, f"warm_us={warm_1 * 1e6:.1f}")
+
+    sharded1 = BucketedRunner(prob, grid, prox,
+                              mesh=cell_mesh(jax.devices()[:1]))
+    cold_s1, warm_s1, _ = _time(sharded1)
+    emit("mega_grid/sharded_1dev", cold_s1 * 1e6,
+         f"warm_us={warm_s1 * 1e6:.1f}")
+
+    shardedN = BucketedRunner(prob, grid, prox, mesh=cell_mesh())
+    cold_sN, warm_sN, res_shard = _time(shardedN)
+    speedup_cold = cold_1 / cold_sN
+    speedup_warm = warm_1 / warm_sN
+    emit("mega_grid/sharded_all", cold_sN * 1e6,
+         f"warm_us={warm_sN * 1e6:.1f};devices={n_dev}")
+    emit("mega_grid/speedup_vs_single", 0.0,
+         f"cold={speedup_cold:.2f}x;warm={speedup_warm:.2f}x")
+    emit("mega_grid/device_scaling", 0.0,
+         f"warm_1dev_mesh={warm_s1:.3f}s;warm_{n_dev}dev={warm_sN:.3f}s;"
+         f"scaling={warm_s1 / warm_sN:.2f}x")
+
+    # ---- row equivalence: sharded == single-device, spot-check vs solo ----
+    max_diff = float(np.max(np.abs(np.asarray(res_single.objective)
+                                   - np.asarray(res_shard.objective))))
+    taus_equal = bool(np.array_equal(np.asarray(res_single.taus),
+                                     np.asarray(res_shard.taus)))
+    Aw, bw = prob.worker_slices()
+    x0 = jnp.zeros((prob.dim,), jnp.float32)
+    solo_diff = 0.0
+    for i in np.unique(np.linspace(0, B - 1, loop_cells).round().astype(int)):
+        c = grid.cells[i]
+        T = sample_service_times(c.workers, n_events + 1, seed=c.seed)
+        tr = trace_scan(jnp.asarray(T))
+        w = c.n_workers
+        solo = jax.jit(lambda ev, _w=w, _p=c.policy: piag_scan(
+            lambda x, A, b: prob.worker_loss(x, A, b), x0,
+            (Aw[:_w], bw[:_w]), ev, _p, prox,
+            objective=prob.P))((tr.worker, tr.tau_max))
+        solo_diff = max(solo_diff, float(np.max(np.abs(
+            np.asarray(solo.objective)
+            - np.asarray(res_shard.objective[i])))))
+    rows_ok = taus_equal and max_diff <= 1e-5 and solo_diff <= 1e-4
+    emit("mega_grid/equivalence", 0.0,
+         f"sharded_vs_single_max_diff={max_diff:.2e};"
+         f"solo_rows_max_diff={solo_diff:.2e};ok={rows_ok}")
+
+    # ---- clipped-horizon diagnostic now visible per cell ------------------
+    n_clipped = int(np.sum(np.asarray(res_shard.clipped) > 0))
+    emit("mega_grid/clipped_cells", 0.0, f"cells_with_clipping={n_clipped}")
+
+    # ---- PR 2 compat: the 64-cell grid must not have regressed -----------
+    # re-run benchmarks/sweep_grid.py (the SAME bench that produced the
+    # prior BENCH_sweep_grid.json) in a clean single-device subprocess --
+    # measuring it inside this multi-forced-device process would understate
+    # it (host threads are split across the forced devices) -- refreshing
+    # the artifact with current-code numbers and comparing against the
+    # prior ones
+    prior = None
+    prior_path = Path("BENCH_sweep_grid.json")
+    events64 = 800
+    if prior_path.exists():
+        pj = json.loads(prior_path.read_text())
+        events64 = int(pj.get("n_events", events64))
+        prior = {"cold": pj["batched_seconds_cold"],
+                 "warm": pj["batched_seconds_warm"]}
+    compat = {"n_events": events64, "prior_bench_sweep_grid": prior}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = " ".join(
+        f for f in env.get("XLA_FLAGS", "").split() if _FLAG not in f)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep_grid",
+         "--events", str(events64), "--loop-cells", "4"],
+        env=env, capture_output=True, text=True)
+    if proc.returncode == 0 and prior_path.exists():
+        pj = json.loads(prior_path.read_text())
+        compat.update(cells=pj["cells"],
+                      batched_seconds_cold=pj["batched_seconds_cold"],
+                      batched_seconds_warm=pj["batched_seconds_warm"])
+        emit("mega_grid/compat64", pj["batched_seconds_cold"] * 1e6,
+             f"warm_us={pj['batched_seconds_warm'] * 1e6:.1f};"
+             f"events={events64};prior={prior}")
+    else:
+        compat["error"] = (proc.stderr or "")[-500:]
+        emit("mega_grid/compat64", 0.0, "FAILED;see json")
+
+    payload = {
+        "bench": "mega_grid",
+        "devices": n_dev,
+        "cells": B,
+        "n_events": n_events,
+        "widths": list(widths),
+        "buckets": [{"width": b.width, "cells": len(b.grid)}
+                    for b in grid.buckets()],
+        "tau_bar": tau_bar,
+        "single_device_seconds_cold": cold_1,
+        "single_device_seconds_warm": warm_1,
+        "sharded_1dev_seconds_cold": cold_s1,
+        "sharded_1dev_seconds_warm": warm_s1,
+        "sharded_seconds_cold": cold_sN,
+        "sharded_seconds_warm": warm_sN,
+        "speedup_sharded_vs_single_cold": speedup_cold,
+        "speedup_sharded_vs_single_warm": speedup_warm,
+        "device_scaling_warm_1_to_N": warm_s1 / warm_sN,
+        "cells_with_horizon_clipping": n_clipped,
+        "equivalence": {"taus_bitwise_equal": taus_equal,
+                        "sharded_vs_single_max_objective_diff": max_diff,
+                        "solo_rows_checked": int(loop_cells),
+                        "solo_rows_max_objective_diff": solo_diff,
+                        "ok": rows_ok},
+        "grid64_compat": compat,
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}: {B} cells on {n_dev} devices, sharded speedup "
+          f"cold {speedup_cold:.2f}x / warm {speedup_warm:.2f}x, "
+          f"equivalence ok={rows_ok}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--events", type=int, default=300)
+    ap.add_argument("--seeds", type=int, default=16)
+    ap.add_argument("--widths", default="4,8",
+                    help="comma-separated worker counts (the ragged axis)")
+    ap.add_argument("--loop-cells", type=int, default=6,
+                    help="solo spot-check rows")
+    ap.add_argument("--out", default="BENCH_mega_grid.json")
+    a = ap.parse_args()
+    widths = tuple(int(w) for w in a.widths.split(","))
+    payload = run(n_events=a.events, n_seeds=a.seeds, widths=widths,
+                  loop_cells=a.loop_cells, out=a.out)
+    if not payload["equivalence"]["ok"]:
+        raise SystemExit("equivalence spot-check failed")
+    if payload["devices"] > 1 and payload["speedup_sharded_vs_single_warm"] <= 1.0:
+        raise SystemExit("sharded path failed to beat single-device")
+    compat = payload["grid64_compat"]
+    if "error" in compat:
+        raise SystemExit(f"64-cell compat re-run failed: {compat['error']}")
+    prior = compat.get("prior_bench_sweep_grid")
+    if prior and compat["batched_seconds_warm"] > (
+            GRID64_REGRESSION_TOLERANCE * prior["warm"]):
+        raise SystemExit(
+            f"64-cell batched warm time regressed: "
+            f"{compat['batched_seconds_warm']:.2f}s vs prior "
+            f"{prior['warm']:.2f}s (tolerance {GRID64_REGRESSION_TOLERANCE}x)")
+
+
+if __name__ == "__main__":
+    main()

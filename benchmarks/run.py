@@ -1,8 +1,16 @@
 """Benchmark harness -- one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep roofline kernels]
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep mega roofline kernels]
 
 Prints ``name,us_per_call,derived`` CSV lines.
+
+``mega`` (the device-sharded mega-grid) forces multiple host devices at jax
+init -- a process-wide, irreversible setting that would split host threads
+across fake devices and understate every OTHER benchmark's numbers.  It
+therefore only runs when EXPLICITLY selected (never as part of the
+no-selector full suite), and when selected it runs first so the flag lands
+before any other module imports jax; combine it with other selections at
+your own risk.
 """
 from __future__ import annotations
 
@@ -16,6 +24,10 @@ def main() -> None:
         return not sel or name in sel
 
     print("name,us_per_call,derived")
+    if "mega" in sel:  # explicit-only (see module docstring), and first:
+        # must set XLA_FLAGS before any other module imports jax
+        from . import mega_grid
+        mega_grid.run()
     if want("fig1"):
         from . import fig1_stepsizes
         fig1_stepsizes.run()

@@ -24,7 +24,7 @@ import numpy as np
 
 from .engine import EventTrace
 from .prox import ProxOp
-from .stepsize import StepsizePolicy
+from .stepsize import StepsizePolicy, clipped_count
 
 __all__ = ["BCDResult", "bcd_scan", "run_async_bcd", "run_bcd_logreg",
            "sample_blocks"]
@@ -36,6 +36,9 @@ class BCDResult(NamedTuple):
     gammas: jnp.ndarray       # (K,)
     taus: jnp.ndarray         # (K,)
     blocks: jnp.ndarray       # (K,) block index updated at each event
+    clipped: jnp.ndarray = 0  # plain-int default: no jax init at import time
+    # ^ final StepsizeState.clipped: events whose delay exceeded the policy
+    #   horizon (H - 1 cap); nonzero flags an undersized horizon per cell.
 
 
 def _blockify(x: jnp.ndarray, m: int):
@@ -58,7 +61,14 @@ def bcd_scan(
 ) -> BCDResult:
     """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
     shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
-    ``repro.sweep.sweep_bcd`` batch."""
+    ``repro.sweep.sweep_bcd`` batch.
+
+    Ragged worker-count buckets need NO active-worker mask here (unlike
+    ``piag_scan``): there is no cross-worker reduction -- each event touches
+    only the returning worker's snapshot row -- so as long as the trace is
+    masked (``engine.trace_scan(T, active=...)``), padded workers never
+    appear in ``events`` and their ``x_read`` rows are dead weight; passing
+    ``n_workers`` = the bucket width is sufficient and exact."""
     xb0, d = _blockify(jnp.asarray(x0, jnp.float32), m)
     db = xb0.shape[1]
 
@@ -82,8 +92,9 @@ def bcd_scan(
         return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma, tau, j)
 
     carry0 = (xb0, x_read0, policy.init(horizon))
-    (xb_fin, *_), (obj, gam, taus, blk) = jax.lax.scan(step, carry0, events)
-    return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus, blocks=blk)
+    (xb_fin, _, ss_fin), (obj, gam, taus, blk) = jax.lax.scan(step, carry0, events)
+    return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus,
+                     blocks=blk, clipped=clipped_count(ss_fin))
 
 
 def run_async_bcd(

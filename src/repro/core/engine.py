@@ -294,7 +294,8 @@ class TraceArrays(NamedTuple):
     t_wall: jnp.ndarray
 
 
-def trace_scan(service_times: jnp.ndarray) -> TraceArrays:
+def trace_scan(service_times: jnp.ndarray,
+               active: Optional[jnp.ndarray] = None) -> TraceArrays:
     """The jitted/vmappable event-structure kernel.
 
     ``service_times`` is a (n_workers, n_events + 1) float32 matrix
@@ -306,7 +307,16 @@ def trace_scan(service_times: jnp.ndarray) -> TraceArrays:
     the task pushed at event k carries seq n + k), so simultaneous arrivals
     resolve identically in both paths.
 
-    Pure function of its argument: ``jax.vmap(trace_scan)`` over a stacked
+    ``active`` is an optional (n_workers,) bool mask for RAGGED batches: a
+    grid bucket pads every cell's matrix to a common worker count, and the
+    mask guarantees padded rows never win the (time, seq) event race and
+    never enter the staleness table minimum, so a padded cell's trace is
+    bitwise-identical to its exact-width run (``repro.sweep`` pads service
+    times with +inf as a second line of defense, but only the mask keeps
+    ``tau_max`` correct -- an unmasked padded row would freeze ``s`` at 0
+    and make the table staleness grow without bound).
+
+    Pure function of its arguments: ``jax.vmap(trace_scan)`` over a stacked
     batch of matrices generates a whole sweep's traces in one program, and
     ``repro.sweep`` composes it with the solver scans under a single jit.
     """
@@ -314,6 +324,7 @@ def trace_scan(service_times: jnp.ndarray) -> TraceArrays:
     n, n_tasks = T.shape
     n_events = n_tasks - 1
     i32 = jnp.int32
+    act = None if active is None else jnp.asarray(active, jnp.bool_)
 
     init = (
         T[:, 0],                        # t: completion time of in-flight task
@@ -326,11 +337,13 @@ def trace_scan(service_times: jnp.ndarray) -> TraceArrays:
     def step(carry, k):
         t, seq, task, ver, s = carry
         # pop: lexicographic argmin over (t, seq) == EventHeap order
-        at_min = t == jnp.min(t)
+        t_race = t if act is None else jnp.where(act, t, jnp.inf)
+        at_min = t_race == jnp.min(t_race)
         i = jnp.argmin(jnp.where(at_min, seq, jnp.iinfo(i32).max)).astype(i32)
         v = ver[i]
         s = s.at[i].set(v)
-        out = (i, v, k - v, k - jnp.min(s), t[i])
+        s_race = s if act is None else jnp.where(act, s, jnp.iinfo(i32).max)
+        out = (i, v, k - v, k - jnp.min(s_race), t[i])
         # push: worker i starts its next task at the write it just triggered
         t = t.at[i].add(T[i, task[i]])
         task = task.at[i].add(1)

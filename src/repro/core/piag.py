@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from .engine import EventTrace
 from .prox import ProxOp
-from .stepsize import StepsizePolicy, StepsizeState
+from .stepsize import StepsizePolicy, StepsizeState, clipped_count as _clipped_of
 
 __all__ = ["PIAGResult", "piag_scan", "run_piag", "run_piag_logreg"]
 
@@ -36,6 +36,10 @@ class PIAGResult(NamedTuple):
     gammas: jnp.ndarray       # (K,) emitted step-sizes
     taus: jnp.ndarray         # (K,) tau_k = max_i tau_k^(i) fed to the policy
     opt_residual: jnp.ndarray  # (K,) ||x_{k+1} - x_k|| / gamma_k (prox-grad map)
+    clipped: jnp.ndarray = 0  # plain-int default: no jax init at import time
+    # ^ final StepsizeState.clipped: number of events whose delay exceeded the
+    #   policy horizon (H - 1 cap) -- nonzero means the horizon was undersized
+    #   and window sums were silently truncated; see ROADMAP.
 
 
 def piag_scan(
@@ -47,6 +51,7 @@ def piag_scan(
     prox: ProxOp,
     objective: Callable | None = None,  # P(x); defaults to mean worker loss + R
     horizon: int = 4096,
+    active: jnp.ndarray | None = None,  # (n,) bool; ragged-bucket worker mask
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -55,9 +60,28 @@ def piag_scan(
     (``repro.sweep.sweep_piag`` vmaps it over stacked events and policy
     parameters) -- which is what makes per-row equivalence between the two
     exact rather than approximate.
+
+    ``active`` supports ragged worker-count sweeps: a bucketed cell pads its
+    gradient table to the bucket width, and the mask turns the aggregation
+    into a mean over ACTIVE rows only, so padded workers never contribute
+    gradients (their table rows are multiplied by an exact 0.0; padded
+    ``worker_data`` rows therefore only need to be finite).  The trace must
+    be masked consistently (``engine.trace_scan(T, active=...)``) so padded
+    workers never appear in ``events`` either.
     """
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     grad_i = jax.grad(worker_loss)
+
+    if active is None:
+        def aggregate(buf):
+            return jnp.mean(buf, axis=0)
+    else:
+        amask = jnp.asarray(active, jnp.float32)
+        n_active = jnp.sum(amask)
+
+        def aggregate(buf):
+            w = amask.reshape((n,) + (1,) * (buf.ndim - 1))
+            return jnp.sum(buf * w, axis=0) / n_active
 
     def data_at(w):
         return jax.tree_util.tree_map(lambda leaf: leaf[w], worker_data)
@@ -67,7 +91,7 @@ def piag_scan(
             losses = jax.vmap(lambda i: worker_loss(x, *jax.tree_util.tree_leaves(data_at(i))))
             # note: assumes worker_data leaves order == worker_loss arg order
             idx = jnp.arange(n)
-            return jnp.mean(losses(idx)) + prox.value(x)
+            return aggregate(losses(idx)) + prox.value(x)
 
     # Algorithm 1 line 3: g^(i) <- grad f_i(x_0)
     def init_grad(w):
@@ -84,7 +108,7 @@ def piag_scan(
         gw = grad_i(xw, *jax.tree_util.tree_leaves(data_at(w)))
         gtab = jax.tree_util.tree_map(lambda buf, gnew: buf.at[w].set(gnew), gtab, gw)
         # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
-        g = jax.tree_util.tree_map(lambda buf: jnp.mean(buf, axis=0), gtab)
+        g = jax.tree_util.tree_map(aggregate, gtab)
         gamma, ss = policy.step(ss, tau)
         x_new = prox.prox(
             jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
@@ -98,8 +122,9 @@ def piag_scan(
         return (x_new, gtab, x_read, ss), out
 
     carry0 = (x0, g_table, x_read0, policy.init(horizon))
-    (x_fin, *_), (obj, gam, taus, res) = jax.lax.scan(step, carry0, events)
-    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus, opt_residual=res)
+    (x_fin, _, _, ss_fin), (obj, gam, taus, res) = jax.lax.scan(step, carry0, events)
+    return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
+                      opt_residual=res, clipped=_clipped_of(ss_fin))
 
 
 def run_piag(
@@ -173,9 +198,9 @@ def run_piag_lipschitz(problem, trace, prox, h: float = 0.9,
         return jax.lax.scan(step, carry0, events)
 
     carry0 = (x0, g_table, x_read0, x_read0, pol.init(horizon))
-    (x_fin, *_), (obj, gam, taus, L_est) = run(carry0, events)
+    (x_fin, _, _, _, lip_fin), (obj, gam, taus, L_est) = run(carry0, events)
     return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
-                      opt_residual=L_est)
+                      opt_residual=L_est, clipped=_clipped_of(lip_fin))
 
 
 def run_piag_logreg(problem, trace, policy, prox, horizon: int = 4096) -> PIAGResult:

@@ -334,6 +334,19 @@ class AdaptiveLipschitz(StepsizePolicy):
         return gammas
 
 
+def clipped_count(state) -> jnp.ndarray:
+    """The horizon-clip diagnostic of a final policy state (int32 scalar).
+
+    Works for both ``StepsizeState`` and the extended ``LipschitzState``;
+    solvers thread this into their result tuples so a sweep can see which
+    cells silently truncated window sums (delay > H - 1) instead of having
+    to re-run with a bigger horizon to find out.
+    """
+    if isinstance(state, LipschitzState):
+        state = state.ss
+    return state.clipped
+
+
 POLICIES = {
     "fixed": FixedStepSize,
     "constant": FixedStepSize,   # tau_bound=0 -> gamma_k = gamma' (FedAvg mixing)

@@ -22,6 +22,9 @@ Three layers:
 * ``events``  -- deterministic round-trip client simulation (local epochs,
   upload jitter, dropout/rejoin) generalizing ``core.engine``; emits a
   ``FederatedTrace`` with per-upload staleness measured in server writes.
+  Two interchangeable paths: the heapq reference (``simulate_federated``)
+  and the fully-jitted ``federated_trace_scan`` (bitwise-equal on the same
+  pre-sampled ``ClientRounds``; vmaps and shard_maps for sweeps).
 * ``server``  -- FedAsync staleness-weighted mixing and FedBuff buffered
   aggregation as jitted ``lax.scan`` loops; mixing weights come from
   ``core.stepsize.make_policy`` (``hinge`` / ``poly`` / ``constant``).
@@ -29,14 +32,20 @@ Three layers:
   transformer presets), ``examples/fedasync_logreg.py``,
   ``benchmarks/fig5_federated.py``.
 """
-from .events import (ClientModel, FederatedTrace, heterogeneous_clients,
+from .events import (ClientModel, ClientRounds, FederatedTrace,
+                     FederatedTraceArrays, client_arrays, default_fed_steps,
+                     federated_trace_scan, generate_federated_trace,
+                     heterogeneous_clients, sample_client_rounds,
                      simulate_federated)
-from .server import (FedResult, fedasync_scan, local_prox_sgd, run_fedasync,
-                     run_fedasync_problem, run_fedbuff, run_fedbuff_problem)
+from .server import (FedResult, fedasync_scan, fedbuff_scan, local_prox_sgd,
+                     run_fedasync, run_fedasync_problem, run_fedbuff,
+                     run_fedbuff_problem)
 
 __all__ = [
-    "ClientModel", "FederatedTrace", "heterogeneous_clients",
-    "simulate_federated", "FedResult", "fedasync_scan", "local_prox_sgd",
-    "run_fedasync", "run_fedasync_problem", "run_fedbuff",
-    "run_fedbuff_problem",
+    "ClientModel", "ClientRounds", "FederatedTrace", "FederatedTraceArrays",
+    "client_arrays", "default_fed_steps", "federated_trace_scan",
+    "generate_federated_trace", "heterogeneous_clients",
+    "sample_client_rounds", "simulate_federated", "FedResult",
+    "fedasync_scan", "fedbuff_scan", "local_prox_sgd", "run_fedasync",
+    "run_fedasync_problem", "run_fedbuff", "run_fedbuff_problem",
 ]

@@ -13,17 +13,51 @@ As with ``core.engine``, the simulation produces a deterministic integer
 trace; the server (``repro.federated.server``) consumes it inside a fully
 jitted ``lax.scan``, so a simulated trace + a jitted server loop is *exactly*
 FedAsync/FedBuff for that realization of client timings.
+
+Two trace paths
+---------------
+
+Mirroring ``core.engine``, there are two interchangeable implementations:
+
+* the **reference path** -- ``simulate_federated`` -- a Python ``heapq``
+  discrete-event loop over START/UPLOAD events.  Handed a pre-sampled
+  ``ClientRounds`` (per-client dropout coins + round durations, indexed by
+  attempt), it accumulates times in float32 and becomes the bitwise ground
+  truth for the jitted path; without one it keeps its legacy on-the-fly
+  float64 sampling (seeded traces from earlier PRs are unchanged).
+* the **jitted path** -- ``federated_trace_scan`` / the
+  ``generate_federated_trace`` host wrapper -- the same event structure
+  inside one ``lax.scan``.  The key invariant making this possible: every
+  client has EXACTLY ONE in-flight heap event at all times (its pending
+  START or its pending UPLOAD), so the heap collapses to per-client
+  ``(time, seq, kind)`` arrays and a pop is a lexicographic ``(time, seq)``
+  argmin -- the same tie-break discipline as ``core.engine.trace_scan``.
+  Each pop performs exactly one push (rejoin START, in-flight UPLOAD, or
+  next-round START), so push sequence numbers advance one per scan step in
+  pop order, exactly like ``EventHeap``'s monotone tie counter.  It jits,
+  vmaps (``repro.sweep`` fuses it with the server scans so FedAsync/FedBuff
+  sweeps are one XLA program) and shard_maps (``repro.sweep.shard``).
+
+The two paths agree *bitwise* (same rows, same float32 arrival times) when
+driven by the same ``ClientRounds``; ``tests/test_fed_scan.py`` pins this,
+including simultaneous-upload tie-breaks and dropout/rejoin chains.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import NamedTuple, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import EventHeap, WorkerModel
 
-__all__ = ["ClientModel", "FederatedTrace", "heterogeneous_clients",
+__all__ = ["ClientModel", "ClientRounds", "FederatedTrace",
+           "FederatedTraceArrays", "client_arrays", "default_fed_steps",
+           "federated_trace_scan", "generate_federated_trace",
+           "heterogeneous_clients", "sample_client_rounds",
            "simulate_federated"]
 
 # event kinds inside the heap
@@ -83,6 +117,72 @@ def heterogeneous_clients(
     ) for m in means]
 
 
+class ClientRounds(NamedTuple):
+    """Pre-sampled per-client round randomness, indexed by START attempt.
+
+    ``drop_u[i, a]`` is the dropout coin and ``duration[i, a]`` the full
+    round duration (``local_epochs`` compute legs + the upload leg) of client
+    ``i``'s ``a``-th START attempt.  Each client draws from its own
+    counter-based substream, so the arrays are independent of event order --
+    the property that lets the heapq reference and ``federated_trace_scan``
+    consume identical randomness (same role as
+    ``core.engine.sample_service_times``).  Durations are pre-rounded to
+    float32 because the jitted path accumulates arrival times in float32.
+    """
+
+    drop_u: np.ndarray      # (n_clients, n_attempts) float32 in [0, 1)
+    duration: np.ndarray    # (n_clients, n_attempts) float32 round durations
+
+    @property
+    def n_attempts(self) -> int:
+        return int(np.shape(self.drop_u)[-1])
+
+
+def sample_client_rounds(clients: Sequence[ClientModel], n_attempts: int,
+                         seed: int = 0) -> ClientRounds:
+    """Pre-sample every client's dropout coins and round durations.
+
+    Client ``i`` uses ``default_rng([seed, i])`` and draws, in order: all
+    ``n_attempts`` dropout uniforms, then all compute-epoch durations, then
+    all upload durations -- a fixed convention shared by both trace paths
+    (it need not match the legacy on-the-fly draw order; only cross-path
+    consistency matters).  Dropped attempts waste their pre-sampled duration
+    by construction, which is what keeps the attempt cursor identical in
+    both paths.
+    """
+    def leg(model: WorkerModel, rng_ln, rng_st, shape):
+        mu = np.log(model.mean) - 0.5 * model.sigma ** 2
+        t = rng_ln.lognormal(mu, model.sigma, size=shape)
+        if model.p_straggle > 0:
+            t = np.where(rng_st.random(shape) < model.p_straggle,
+                         t * model.straggle_x, t)
+        return t
+
+    n = len(clients)
+    drop_u = np.empty((n, n_attempts), np.float32)
+    duration = np.empty((n, n_attempts), np.float32)
+    for i, cm in enumerate(clients):
+        # one substream per distribution, each consumed attempt-major, so the
+        # first A rows of a larger draw equal the A-attempt draw exactly --
+        # generate_federated_trace's budget doubling then extends the trace
+        # realization instead of resampling it
+        streams = [np.random.default_rng([seed, i, j]) for j in range(5)]
+        drop_u[i] = streams[0].random(n_attempts).astype(np.float32)
+        compute = leg(cm.compute, streams[1], streams[2],
+                      (n_attempts, cm.local_epochs)).sum(axis=1)
+        upload = leg(cm.upload, streams[3], streams[4], (n_attempts,))
+        duration[i] = (compute + upload).astype(np.float32)
+    return ClientRounds(drop_u=drop_u, duration=duration)
+
+
+def client_arrays(clients: Sequence[ClientModel]):
+    """The per-client lifecycle constants ``federated_trace_scan`` consumes:
+    ``(p_dropout (n,) f32, rejoin_after (n,) f32, local_epochs (n,) i32)``."""
+    return (np.asarray([c.p_dropout for c in clients], np.float32),
+            np.asarray([c.rejoin_after for c in clients], np.float32),
+            np.asarray([c.local_epochs for c in clients], np.int32))
+
+
 class FederatedTrace(NamedTuple):
     """One row per client *upload* event (model arriving at the server).
 
@@ -122,6 +222,7 @@ def simulate_federated(
     clients: Optional[Sequence[ClientModel]] = None,
     buffer_size: int = 1,
     seed: int = 0,
+    client_rounds: Optional[ClientRounds] = None,
 ) -> FederatedTrace:
     """Simulate the event structure of async federated aggregation.
 
@@ -131,6 +232,13 @@ def simulate_federated(
     model), and dropped rounds re-enter via a rejoin event, so slow/flaky
     clients naturally accumulate large staleness -- the regime where
     delay-adaptive mixing weights matter.
+
+    ``client_rounds`` (``sample_client_rounds``), if given, replaces on-the-
+    fly sampling: attempt ``a`` of client ``i`` uses ``drop_u[i, a]`` and
+    ``duration[i, a]``, and event times accumulate in float32 -- the
+    reference against which the jitted ``federated_trace_scan`` is
+    bitwise-tested.  Without it the legacy float64 shared-stream sampling is
+    used, so traces from earlier PRs are unchanged.
     """
     if clients is None:
         clients = heterogeneous_clients(n_clients, seed=seed)
@@ -138,6 +246,7 @@ def simulate_federated(
     if buffer_size < 1:
         raise ValueError(f"buffer_size must be >= 1 (|R| >= 1), got {buffer_size}")
     rng = np.random.default_rng(seed + 3)
+    cursor = np.zeros((n_clients,), np.int64)  # attempt index per client
 
     heap = EventHeap()  # payload: (kind, client, read_version, epochs)
     for i in range(n_clients):
@@ -159,7 +268,22 @@ def simulate_federated(
         cm = clients[i]
         if kind == _START:
             # the client reads the server model *now*: stamp = current version
-            if cm.p_dropout > 0 and rng.random() < cm.p_dropout:
+            if client_rounds is not None:
+                a = cursor[i]
+                if a >= client_rounds.n_attempts:
+                    raise ValueError(
+                        f"client {i} exhausted its {client_rounds.n_attempts} "
+                        "pre-sampled attempts; enlarge n_attempts in "
+                        "sample_client_rounds")
+                cursor[i] += 1
+                # float32 time accumulation, matching federated_trace_scan
+                if client_rounds.drop_u[i, a] < cm.p_dropout:
+                    heap.push(np.float32(t) + np.float32(cm.rejoin_after),
+                              _START, i, 0, 0)
+                else:
+                    heap.push(np.float32(t) + client_rounds.duration[i, a],
+                              _UPLOAD, i, version, cm.local_epochs)
+            elif cm.p_dropout > 0 and rng.random() < cm.p_dropout:
                 # round lost; client rejoins later and re-reads a fresh model
                 heap.push(t + cm.rejoin_after, _START, i, 0, 0)
             else:
@@ -182,3 +306,201 @@ def simulate_federated(
         k += 1
     return FederatedTrace(client, read_at, tau, aggregate, version_arr,
                           local_steps, t_wall)
+
+
+class FederatedTraceArrays(NamedTuple):
+    """``FederatedTrace`` columns as jnp arrays -- the jit/vmap-side twin.
+
+    Field meanings match ``FederatedTrace`` (``t_wall`` is float32, the
+    accumulation dtype of the jitted path), plus two diagnostics the host
+    cannot know ahead of time because dropout chains consume scan steps:
+
+    n_uploads:  scalar i32 -- uploads actually emitted (< the requested K
+                means ``n_steps`` was too small and trailing rows are zero).
+    exhausted:  scalar bool -- some client ran past its pre-sampled attempts
+                (enlarge ``n_attempts``); rows after that point are invalid.
+    """
+
+    client: jnp.ndarray
+    read_at: jnp.ndarray
+    tau: jnp.ndarray
+    aggregate: jnp.ndarray
+    version: jnp.ndarray
+    local_steps: jnp.ndarray
+    t_wall: jnp.ndarray
+    n_uploads: jnp.ndarray
+    exhausted: jnp.ndarray
+
+
+def default_fed_steps(n_uploads: int) -> int:
+    """Default scan length: every upload costs two pops (its successful START
+    and the UPLOAD itself) plus slack for dropout/rejoin chains."""
+    return 2 * n_uploads + max(64, n_uploads // 4)
+
+
+def federated_trace_scan(
+    rounds: ClientRounds,           # (n, A) leaves, jnp or np
+    p_dropout: jnp.ndarray,         # (n,) f32
+    rejoin_after: jnp.ndarray,      # (n,) f32
+    local_epochs: jnp.ndarray,      # (n,) i32
+    n_uploads: int,
+    buffer_size: int = 1,
+    n_steps: Optional[int] = None,
+    active: Optional[jnp.ndarray] = None,
+) -> FederatedTraceArrays:
+    """The jitted/vmappable federated event-structure kernel.
+
+    One scan step = one heap pop.  The heap state is per-client ``(t, seq,
+    kind)`` -- valid because every client always has exactly one in-flight
+    event -- and a pop is the lexicographic ``(t, seq)`` argmin, the exact
+    ``EventHeap`` order of the ``simulate_federated`` reference (initial
+    STARTs carry seq 0..n-1 in client order; the single push performed by
+    pop number p carries seq n + p).  START pops consume attempt ``a``'s
+    pre-sampled dropout coin and duration; UPLOAD pops emit a trace row and
+    re-read immediately (a same-time START with a fresh seq).  Upload rows
+    are compacted to the first ``n_uploads`` inside the program, so the
+    output is fixed-shape and the whole thing fuses with the server scans
+    under one jit (``repro.sweep.sweep_fedasync`` / ``sweep_fedbuff``).
+
+    ``active`` masks padded clients in ragged-bucket sweeps: padded rows
+    never win the pop race, hence never start rounds, never upload, and
+    never touch the version counter -- a padded cell's trace is bitwise the
+    exact-width cell's trace.
+
+    ``n_steps`` bounds total pops (default ``default_fed_steps``); if
+    dropout chains eat the budget before ``n_uploads`` uploads arrive, the
+    returned ``n_uploads`` field is short -- callers must check it (the
+    ``generate_federated_trace`` wrapper retries with a doubled budget).
+    """
+    if buffer_size < 1:
+        raise ValueError(f"buffer_size must be >= 1 (|R| >= 1), got {buffer_size}")
+    drop_u = jnp.asarray(rounds.drop_u, jnp.float32)
+    dur = jnp.asarray(rounds.duration, jnp.float32)
+    n, A = drop_u.shape
+    K = int(n_uploads)
+    S = default_fed_steps(K) if n_steps is None else int(n_steps)
+    i32 = jnp.int32
+    imax = jnp.iinfo(i32).max
+    p_drop = jnp.asarray(p_dropout, jnp.float32)
+    rejoin = jnp.asarray(rejoin_after, jnp.float32)
+    epochs = jnp.asarray(local_epochs, i32)
+    act = None if active is None else jnp.asarray(active, jnp.bool_)
+
+    init = (
+        jnp.zeros((n,), jnp.float32),    # t: pop time of the in-flight event
+        jnp.arange(n, dtype=i32),        # seq: its push order
+        jnp.zeros((n,), i32),            # kind: _START / _UPLOAD
+        jnp.zeros((n,), i32),            # stamp: version the round read
+        jnp.zeros((n,), i32),            # attempt: pre-sample cursor
+        jnp.zeros((), i32),              # version: server aggregation counter
+        jnp.zeros((), i32),              # buffered: uploads since last write
+        jnp.full((), n, i32),            # seq_next: next push sequence number
+        jnp.zeros((), jnp.bool_),        # exhausted: attempts overran A
+    )
+
+    def step(carry, _):
+        t, seq, kind, stamp, attempt, version, buffered, seq_next, exhausted = carry
+        # pop: lexicographic argmin over (t, seq) == EventHeap order
+        t_race = t if act is None else jnp.where(act, t, jnp.inf)
+        at_min = t_race == jnp.min(t_race)
+        i = jnp.argmin(jnp.where(at_min, seq, imax)).astype(i32)
+        ti = t[i]
+        stamp_i = stamp[i]
+        is_start = kind[i] == _START
+        a = attempt[i]
+        a_c = jnp.minimum(a, A - 1)
+        dropped = is_start & (drop_u[i, a_c] < p_drop[i])
+        started = is_start & ~dropped
+        uploaded = ~is_start
+        exhausted = exhausted | (is_start & (a >= A))
+
+        # the single push this pop performs: rejoin START at t + rejoin,
+        # in-flight UPLOAD at t + duration, or next-round START at t
+        t = t.at[i].add(jnp.where(dropped, rejoin[i],
+                                  jnp.where(started, dur[i, a_c], 0.0)))
+        kind = kind.at[i].set(jnp.where(started, _UPLOAD, _START))
+        stamp = stamp.at[i].set(jnp.where(started, version, stamp_i))
+        attempt = attempt.at[i].add(is_start.astype(i32))
+        seq = seq.at[i].set(seq_next)
+
+        # upload bookkeeping: row + (maybe) aggregation
+        buffered = buffered + uploaded.astype(i32)
+        agg = uploaded & (buffered >= buffer_size)
+        version_new = version + agg.astype(i32)
+        buffered = jnp.where(agg, 0, buffered)
+
+        out = (i, stamp_i, version - stamp_i, agg.astype(i32), version_new,
+               epochs[i], ti, uploaded)
+        return (t, seq, kind, stamp, attempt, version_new, buffered,
+                seq_next + 1, exhausted), out
+
+    carry_fin, (ci, ra, tu, ag, ve, ls, tw, up) = jax.lax.scan(
+        step, init, None, length=S)
+    exhausted_fin = carry_fin[-1]
+
+    # compact upload rows to the first K inside the program
+    pos = jnp.cumsum(up.astype(i32)) - 1
+    valid = up & (pos < K)
+    idx = jnp.where(valid, pos, K)  # K is out of bounds -> dropped
+
+    def compact(col, dtype):
+        out = jnp.zeros((K,), dtype)
+        return out.at[idx].set(col.astype(dtype), mode="drop")
+
+    return FederatedTraceArrays(
+        client=compact(ci, i32), read_at=compact(ra, i32),
+        tau=compact(tu, i32), aggregate=compact(ag, i32),
+        version=compact(ve, i32), local_steps=compact(ls, i32),
+        t_wall=compact(tw, jnp.float32),
+        n_uploads=jnp.minimum(jnp.sum(up.astype(i32)), K),
+        exhausted=exhausted_fin)
+
+
+@partial(jax.jit, static_argnames=("n_uploads", "buffer_size", "n_steps"))
+def _fed_scan_jit(rounds, p_dropout, rejoin_after, local_epochs, n_uploads,
+                  buffer_size, n_steps):
+    return federated_trace_scan(rounds, p_dropout, rejoin_after, local_epochs,
+                                n_uploads, buffer_size=buffer_size,
+                                n_steps=n_steps)
+
+
+def generate_federated_trace(
+    n_clients: int,
+    n_uploads: int,
+    clients: Optional[Sequence[ClientModel]] = None,
+    buffer_size: int = 1,
+    seed: int = 0,
+    n_steps: Optional[int] = None,
+    max_doublings: int = 4,
+) -> FederatedTrace:
+    """Host-side wrapper: run ``federated_trace_scan`` jitted and return a
+    ``FederatedTrace``.
+
+    Drop-in replacement for ``simulate_federated`` at a fraction of the
+    Python cost -- bitwise-equal to ``simulate_federated(...,
+    client_rounds=...)`` on the same pre-sampled rounds.  Dropout chains
+    make the required pop budget data-dependent, so if the scan runs out of
+    steps (or a client runs out of pre-sampled attempts) the budget is
+    doubled and the scan re-run; each budget is its own static shape, so
+    repeated calls at the same size reuse the compiled program.
+    """
+    if clients is None:
+        clients = heterogeneous_clients(n_clients, seed=seed)
+    assert len(clients) == n_clients
+    p_drop, rejoin, epochs = client_arrays(clients)
+    S = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
+    for _ in range(max_doublings + 1):
+        rounds = sample_client_rounds(clients, S, seed=seed)
+        out = jax.device_get(_fed_scan_jit(
+            ClientRounds(*map(jnp.asarray, rounds)), jnp.asarray(p_drop),
+            jnp.asarray(rejoin), jnp.asarray(epochs), n_uploads,
+            buffer_size, S))
+        if int(out.n_uploads) >= n_uploads and not bool(out.exhausted):
+            return FederatedTrace(out.client, out.read_at, out.tau,
+                                  out.aggregate, out.version, out.local_steps,
+                                  out.t_wall.astype(np.float64))
+        S *= 2
+    raise RuntimeError(
+        f"federated trace did not produce {n_uploads} uploads within "
+        f"{S // 2} pops; dropout/rejoin chains are extreme -- pass a larger "
+        "n_steps explicitly")

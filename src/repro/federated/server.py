@@ -27,12 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.prox import ProxOp
-from repro.core.stepsize import StepsizePolicy
+from repro.core.stepsize import StepsizePolicy, clipped_count
 
 from .events import FederatedTrace
 
-__all__ = ["FedResult", "fedasync_scan", "run_fedasync", "run_fedbuff",
-           "local_prox_sgd", "run_fedasync_problem", "run_fedbuff_problem"]
+__all__ = ["FedResult", "fedasync_scan", "fedbuff_scan", "run_fedasync",
+           "run_fedbuff", "local_prox_sgd", "run_fedasync_problem",
+           "run_fedbuff_problem"]
 
 Pytree = Any
 
@@ -43,6 +44,9 @@ class FedResult(NamedTuple):
     weights: jnp.ndarray      # (K,) emitted mixing weights alpha * s(tau_k)
     taus: jnp.ndarray         # (K,) staleness fed to the weight policy
     versions: jnp.ndarray     # (K,) server version after each event
+    clipped: jnp.ndarray = 0  # plain-int default: no jax init at import time
+    # ^ final StepsizeState.clipped: uploads whose staleness exceeded the
+    #   weight-policy horizon (H - 1 cap); nonzero flags undersized horizons.
 
 
 def _tmap(fn, *ts):
@@ -119,8 +123,9 @@ def fedasync_scan(
         return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
 
     carry0 = (x0, x_read0, policy.init(horizon))
-    (x_fin, *_), (o, g, t, v) = jax.lax.scan(step, carry0, events)
-    return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v)
+    (x_fin, _, ss_fin), (o, g, t, v) = jax.lax.scan(step, carry0, events)
+    return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
+                     clipped=clipped_count(ss_fin))
 
 
 def run_fedasync(
@@ -143,25 +148,29 @@ def run_fedasync(
     return run(events)
 
 
-def run_fedbuff(
-    client_update: Callable,
+def fedbuff_scan(
+    client_update: Callable,    # (x, n_steps, *client_data_slice) -> x_c
     x0: Pytree,
-    client_data: Pytree,
-    trace: FederatedTrace,
+    client_data: Pytree,        # each leaf (n_clients, ...)
+    events,                     # stacked (client, tau, local_steps, aggregate, version)
     policy: StepsizePolicy,     # per-delta staleness weight s(tau) (gamma'=1)
     eta: float = 1.0,           # server learning rate applied per aggregation
     buffer_size: int = 1,       # |R|; must match the trace's buffer
     objective: Optional[Callable] = None,
     horizon: int = 4096,
 ) -> FedResult:
-    """FedBuff: buffered semi-async aggregation of staleness-weighted deltas.
+    """The traceable FedBuff core: buffered semi-async aggregation of
+    staleness-weighted deltas as one ``lax.scan`` over upload events.
 
     Uploads accumulate ``s(tau_j) * (x_cj - x_read_j)``; when the trace marks
     the buffer full the server applies the mean buffered delta scaled by
     ``eta``.  ``buffer_size = 1`` makes every upload a write event and the
     update rule collapses to sequential delta application (tested against a
-    plain python reference)."""
-    n, x_read0, events = _prep(x0, client_data, trace)
+    plain python reference).  Shared verbatim by the solo ``run_fedbuff`` jit
+    and the vmapped/sharded ``repro.sweep.sweep_fedbuff`` batch, which fuses
+    this scan with the jitted ``federated.events.federated_trace_scan``."""
+    n = _leaves(client_data)[0].shape[0]
+    x_read0 = _tmap(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
     def data_at(w):
         return _tmap(lambda leaf: leaf[w], client_data)
@@ -181,13 +190,33 @@ def run_fedbuff(
         x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
         return (x_new, x_read, delta, ss), (obj(x_new), gamma, tau, ver)
 
-    @jax.jit
-    def run(carry0, events):
-        return jax.lax.scan(step, carry0, events)
-
     carry0 = (x0, x_read0, delta0, policy.init(horizon))
-    (x_fin, *_), (o, g, t, v) = run(carry0, events)
-    return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v)
+    (x_fin, _, _, ss_fin), (o, g, t, v) = jax.lax.scan(step, carry0, events)
+    return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
+                     clipped=clipped_count(ss_fin))
+
+
+def run_fedbuff(
+    client_update: Callable,
+    x0: Pytree,
+    client_data: Pytree,
+    trace: FederatedTrace,
+    policy: StepsizePolicy,     # per-delta staleness weight s(tau) (gamma'=1)
+    eta: float = 1.0,           # server learning rate applied per aggregation
+    buffer_size: int = 1,       # |R|; must match the trace's buffer
+    objective: Optional[Callable] = None,
+    horizon: int = 4096,
+) -> FedResult:
+    """FedBuff [Nguyen et al. '22] over a simulated trace; one jit."""
+    _, _, events = _prep(x0, client_data, trace)
+
+    @jax.jit
+    def run(events):
+        return fedbuff_scan(client_update, x0, client_data, events, policy,
+                            eta=eta, buffer_size=buffer_size,
+                            objective=objective, horizon=horizon)
+
+    return run(events)
 
 
 def _problem_pieces(problem, prox: ProxOp, local_lr: Optional[float]):

@@ -1,14 +1,26 @@
-"""CLI driver for vectorized policy x seed x topology sweeps.
+"""CLI driver for vectorized policy x seed x topology (x worker-count)
+sweeps, optionally sharded across devices.
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --solver piag --policies adaptive1,adaptive2,fixed \
         --seeds 4 --events 1000 --workers 8 [--json sweep.json]
 
+    # ragged worker-count axis + device sharding (forced host devices need
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N in the environment)
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --solver piag --n-workers 4,8,16 --shard
+
+    # federated sweeps (fused jitted trace generation + server scan)
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --solver fedbuff --policies hinge,poly,constant --buffer-size 4
+
 Builds a ``repro.sweep.SweepGrid`` over the requested policies, seeds and
-the standard worker topologies, runs the whole grid as one batched program,
-and prints a per-policy summary (mean/min final objective, step-size
-integral).  The paper's figures fall out of grids like these; see
-``benchmarks/sweep_grid.py`` for the timed batched-vs-looped comparison.
+the standard worker/client topologies, runs the whole grid as one batched
+program per bucket (sharded over all devices with ``--shard``), and prints a
+per-policy summary (mean/min final objective, step-size integral, horizon-
+clip counts).  The paper's figures fall out of grids like these; see
+``benchmarks/sweep_grid.py`` and ``benchmarks/mega_grid.py`` for the timed
+comparisons.
 """
 from __future__ import annotations
 
@@ -22,8 +34,12 @@ import numpy as np
 import jax
 
 from repro.core import L1, make_logreg, make_policy
-from repro.sweep import (make_grid, measure_tau_bar, standard_topologies,
-                         sweep_bcd_logreg, sweep_piag_logreg)
+from repro.federated.events import heterogeneous_clients
+from repro.sweep import (make_grid, measure_tau_bar,
+                         sharded_sweep_piag_logreg,
+                         standard_topology_factories, sweep_bcd_logreg,
+                         sweep_fedasync_problem, sweep_fedbuff_problem,
+                         sweep_piag_logreg)
 
 FIXED_FAMILY = ("fixed", "sun_deng", "davis")
 
@@ -38,59 +54,112 @@ def build_policies(names, gp: float, tau_bar: int):
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--solver", choices=["piag", "bcd"], default="piag")
-    ap.add_argument("--policies", default="adaptive1,adaptive2,fixed",
-                    help="comma-separated names from core.stepsize.POLICIES")
+    ap.add_argument("--solver", choices=["piag", "bcd", "fedasync", "fedbuff"],
+                    default="piag")
+    ap.add_argument("--policies", default=None,
+                    help="comma-separated names from core.stepsize.POLICIES "
+                    "(default: adaptive1,adaptive2,fixed; federated: "
+                    "hinge,poly,constant)")
     ap.add_argument("--seeds", type=int, default=4)
     ap.add_argument("--events", type=int, default=1000)
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--n-workers", default=None,
+                    help="comma-separated worker counts: grows the ragged "
+                    "n_workers grid axis (overrides --workers)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the cell axis across all devices "
+                    "(piag only for now)")
     ap.add_argument("--samples", type=int, default=800)
     ap.add_argument("--dim", type=int, default=100)
     ap.add_argument("--blocks", type=int, default=20, help="bcd only")
+    ap.add_argument("--buffer-size", type=int, default=1,
+                    help="fedbuff |R| (fedasync forces 1)")
+    ap.add_argument("--horizon", type=int, default=4096,
+                    help="step-size window-sum horizon H (largest "
+                    "representable delay is H - 1; raise when cells clip)")
     ap.add_argument("--json", default=None, help="write per-cell results here")
     a = ap.parse_args()
 
-    prob = make_logreg(a.samples, a.dim, n_workers=a.workers, seed=0)
-    gp = 0.99 / (prob.L if a.solver == "piag" else prob.block_smoothness(a.blocks))
+    federated = a.solver in ("fedasync", "fedbuff")
+    policy_names = (a.policies or
+                    ("hinge,poly,constant" if federated
+                     else "adaptive1,adaptive2,fixed")).split(",")
+    widths = ([int(w) for w in a.n_workers.split(",")]
+              if a.n_workers else [a.workers])
+    w_max = max(widths)
+
+    prob = make_logreg(a.samples, a.dim, n_workers=w_max, seed=0)
     prox = L1(lam=prob.lam1)
-    seeds = list(range(a.seeds))
-    topos = standard_topologies(a.workers)
 
-    # worst-case bound tau-bar for the fixed baselines, measured over the grid
-    tau_bar = measure_tau_bar(topos, seeds, a.events)
+    if federated:
+        gp = 0.6
+        factories = {"edge": lambda n: heterogeneous_clients(n, seed=0)}
+        tau_bar = 0  # fixed-family baselines are not the federated story
+        grid = make_grid(build_policies(policy_names, gp, tau_bar),
+                         list(range(a.seeds)), factories, a.events,
+                         n_workers=widths)
+    else:
+        gp = 0.99 / (prob.L if a.solver == "piag"
+                     else prob.block_smoothness(a.blocks))
+        factories = standard_topology_factories()
+        tau_bar = measure_tau_bar(
+            {f"{tn}/w{w}": f(w) for tn, f in factories.items()
+             for w in widths},
+            list(range(a.seeds)), a.events)
+        grid = make_grid(build_policies(policy_names, gp, tau_bar),
+                         list(range(a.seeds)), factories, a.events,
+                         n_workers=widths)
 
-    grid = make_grid(build_policies(a.policies.split(","), gp, tau_bar),
-                     seeds, topos, a.events)
-    print(f"sweep: {len(grid)} cells ({a.policies} x {a.seeds} seeds x "
-          f"{len(topos)} topologies), {a.events} events, tau_bar={tau_bar}")
+    n_dev = len(jax.devices())
+    print(f"sweep: {len(grid)} cells ({','.join(policy_names)} x {a.seeds} "
+          f"seeds x {len(factories)} topologies x widths {widths}), "
+          f"{a.events} events, tau_bar={tau_bar}, devices={n_dev}"
+          f"{' [sharded]' if a.shard else ''}")
 
     t0 = time.perf_counter()
     if a.solver == "piag":
-        res = jax.block_until_ready(sweep_piag_logreg(prob, grid, prox))
-    else:
+        run = sharded_sweep_piag_logreg if a.shard else sweep_piag_logreg
+        res = jax.block_until_ready(run(prob, grid, prox, horizon=a.horizon))
+    elif a.solver == "bcd":
         res = jax.block_until_ready(sweep_bcd_logreg(prob, grid, prox,
-                                                     m=a.blocks))
+                                                     m=a.blocks,
+                                                     horizon=a.horizon))
+    elif a.solver == "fedasync":
+        res = jax.block_until_ready(sweep_fedasync_problem(
+            prob, grid, prox, horizon=a.horizon))
+    else:
+        res = jax.block_until_ready(sweep_fedbuff_problem(
+            prob, grid, prox, eta=0.5, buffer_size=a.buffer_size,
+            horizon=a.horizon))
     dt = time.perf_counter() - t0
     obj = np.asarray(res.objective)
-    gam = np.asarray(res.gammas)
-    print(f"one batched program: {dt:.2f}s "
+    gam = np.asarray(res.weights if federated else res.gammas)
+    clipped = np.asarray(res.clipped)
+    print(f"one batched program per bucket: {dt:.2f}s "
           f"({dt / len(grid) * 1e3:.1f} ms/cell incl. compile)")
+    if np.any(clipped > 0):
+        print(f"WARNING: {int(np.sum(clipped > 0))} cells clipped delays at "
+              "the policy horizon (H - 1); raise --horizon")
 
     print(f"{'policy':<16} {'mean P_final':>12} {'min P_final':>12} "
-          f"{'mean sum(gamma)':>16}")
+          f"{'mean sum(gamma)':>16} {'clipped':>8}")
     for pn in dict.fromkeys(c.policy_name for c in grid.cells):
         rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
         print(f"{pn:<16} {obj[rows, -1].mean():>12.5f} "
-              f"{obj[rows, -1].min():>12.5f} {gam[rows].sum(1).mean():>16.3f}")
+              f"{obj[rows, -1].min():>12.5f} {gam[rows].sum(1).mean():>16.3f} "
+              f"{int(clipped[rows].sum()):>8}")
 
     if a.json:
         cells = [{"label": lab, "final_objective": float(obj[i, -1]),
                   "sum_gamma": float(gam[i].sum()),
-                  "max_tau": int(np.asarray(res.taus)[i].max())}
+                  "max_tau": int(np.asarray(res.taus)[i].max()),
+                  "clipped": int(clipped[i]),
+                  "n_workers": grid.cells[i].n_workers}
                  for i, lab in enumerate(grid.labels())]
         Path(a.json).write_text(json.dumps(
             {"solver": a.solver, "events": a.events, "tau_bar": tau_bar,
-             "seconds": dt, "cells": cells}, indent=2) + "\n")
+             "devices": n_dev, "sharded": bool(a.shard), "seconds": dt,
+             "cells": cells}, indent=2) + "\n")
         print(f"wrote {a.json}")
 
 

@@ -1,12 +1,14 @@
-"""Batched sweep runners: whole policy x seed x topology grids as ONE program.
+"""Batched sweep runners: whole policy x seed x topology (x worker-count)
+grids as ONE program per bucket.
 
 Each ``make_sweep_*`` builder returns a single jitted function mapping the
-grid's stacked inputs -- a (B, n_workers, K+1) service-time tensor and (B,)
+grid's stacked inputs -- a (B, width, K+1) service-time tensor and (B,)
 ``PolicyParams`` -- to a batched result.  Inside, ``jax.vmap`` composes the
-jitted trace generator (``core.engine.trace_scan``) with the corresponding
-solver scan (``core.piag.piag_scan`` / ``core.bcd.bcd_scan`` /
-``federated.server.fedasync_scan``), so trace generation AND optimization
-for every cell run in one XLA executable with one compile.
+jitted trace generator (``core.engine.trace_scan`` for PIAG/BCD,
+``federated.events.federated_trace_scan`` for FedAsync/FedBuff) with the
+corresponding solver scan (``core.piag.piag_scan`` / ``core.bcd.bcd_scan`` /
+``federated.server.fedasync_scan`` / ``fedbuff_scan``), so trace generation
+AND optimization for every cell run in one XLA executable with one compile.
 
 Row semantics: cell ``i`` of a sweep is the SAME computation as a solo run
 of that cell's config (same trace bitwise, same step code via the shared
@@ -14,10 +16,19 @@ scan cores, same policy arithmetic via ``ParamPolicy``); only XLA's batching
 of the gradient linear algebra can differ, at the last-ulp level.
 ``sweep_*`` convenience wrappers build + call in one shot; keep the builder
 when you need to amortize the compile across repeated calls (benchmarks).
+
+Ragged grids (mixed worker counts) dispatch per ``SweepGrid.buckets()``:
+each bucket pads cells to a common width, runs the ``masked=True`` builder
+(trace + PIAG aggregation take the ``active_workers`` mask so padded rows
+never win the event race or contribute gradients), and rows are stitched
+back into grid order.  A homogeneous grid is one exact-width bucket running
+the unmasked builder -- the PR 2 program, unchanged.  ``repro.sweep.shard``
+wraps the same vmapped cell functions in ``shard_map`` to spread the cell
+axis across devices.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,51 +38,116 @@ from repro.core.bcd import BCDResult, bcd_scan, sample_blocks
 from repro.core.engine import trace_scan
 from repro.core.piag import PIAGResult, piag_scan
 from repro.core.prox import ProxOp
-from repro.federated.events import simulate_federated
-from repro.federated.server import FedResult, fedasync_scan
+from repro.federated.events import (ClientRounds, client_arrays,
+                                    default_fed_steps, federated_trace_scan,
+                                    sample_client_rounds, simulate_federated)
+from repro.federated.server import (FedResult, fedasync_scan, fedbuff_scan)
 
-from .grid import SweepGrid
+from .grid import SweepBucket, SweepGrid
 from .policies import ParamPolicy
 
 __all__ = ["make_sweep_piag", "sweep_piag", "sweep_piag_logreg",
            "make_sweep_bcd", "sweep_bcd", "sweep_bcd_logreg",
-           "make_sweep_fedasync", "sweep_fedasync", "sweep_fedasync_problem"]
+           "make_sweep_fedasync", "sweep_fedasync", "sweep_fedasync_problem",
+           "make_sweep_fedbuff", "sweep_fedbuff", "sweep_fedbuff_problem",
+           "run_bucketed"]
+
+
+# ------------------------------------------------------------- plumbing ----
+
+def run_bucketed(grid: SweepGrid, run_bucket: Callable,
+                 bucket_widths: Optional[Sequence[int]] = None):
+    """Run ``run_bucket(bucket) -> result (leading B_bucket)`` over every
+    bucket of ``grid`` and stitch rows back into grid cell order.  Shared by
+    the single-device runners here and the sharded runners in ``.shard``."""
+    buckets = grid.buckets(bucket_widths)
+    parts = [run_bucket(b) for b in buckets]
+    if len(parts) == 1:
+        return parts[0]
+    order = np.concatenate([b.index for b in buckets])
+    inv = np.argsort(order)
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0)[inv], *parts)
+
+
+def _slice_workers(worker_data, width: int):
+    """Rows 0..width-1 of every leaf: the bucket's view of the shared
+    worker population (ragged cells use a prefix of it -- participation
+    semantics, see ``sweep.grid``)."""
+    leaves = jax.tree_util.tree_leaves(worker_data)
+    if leaves and leaves[0].shape[0] < width:
+        raise ValueError(
+            f"worker_data has {leaves[0].shape[0]} rows < bucket width "
+            f"{width}; provide data for the widest cell")
+    return jax.tree_util.tree_map(lambda leaf: leaf[:width], worker_data)
 
 
 # ---------------------------------------------------------------- PIAG ----
 
+def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
+               use_tau_max, masked):
+    """The per-cell program (trace generation fused with the solver scan);
+    ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
+    the sharded one."""
+    if masked:
+        def cell(T, active, pp):
+            tr = trace_scan(T, active=active)
+            events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
+            return piag_scan(worker_loss, x0, worker_data, events,
+                             ParamPolicy(pp), prox, objective=objective,
+                             horizon=horizon, active=active)
+    else:
+        def cell(T, pp):
+            tr = trace_scan(T)
+            events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
+            return piag_scan(worker_loss, x0, worker_data, events,
+                             ParamPolicy(pp), prox, objective=objective,
+                             horizon=horizon)
+    return cell
+
+
 def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
                     objective: Optional[Callable] = None, horizon: int = 4096,
-                    use_tau_max: bool = True) -> Callable:
+                    use_tau_max: bool = True, masked: bool = False) -> Callable:
     """Build the batched PIAG program.
 
     Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
-    PIAGResult`` with a leading B on every leaf.
+    PIAGResult`` with a leading B on every leaf; with ``masked=True`` the
+    signature grows an ``active (B, n) bool`` argument between the two (the
+    ragged-bucket form).
     """
-
-    def cell(T, pp):
-        tr = trace_scan(T)
-        events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
-        return piag_scan(worker_loss, x0, worker_data, events,
-                         ParamPolicy(pp), prox, objective=objective,
-                         horizon=horizon)
-
-    return jax.jit(jax.vmap(cell))
+    return jax.jit(jax.vmap(_piag_cell(
+        worker_loss, x0, worker_data, prox, objective, horizon, use_tau_max,
+        masked)))
 
 
 def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                prox: ProxOp, objective: Optional[Callable] = None,
                horizon: int = 4096, use_tau_max: bool = True) -> PIAGResult:
-    """Run PIAG on every cell of ``grid`` in one batched program."""
-    fn = make_sweep_piag(worker_loss, x0, worker_data, prox,
-                         objective=objective, horizon=horizon,
-                         use_tau_max=use_tau_max)
-    return fn(jnp.asarray(grid.service_times()), grid.policy_params())
+    """Run PIAG on every cell of ``grid`` in one batched program per
+    bucket (a homogeneous grid is exactly one program)."""
+
+    def run_bucket(b: SweepBucket):
+        wd = _slice_workers(worker_data, b.width)
+        fn = make_sweep_piag(worker_loss, x0, wd, prox, objective=objective,
+                             horizon=horizon, use_tau_max=use_tau_max,
+                             masked=not b.uniform)
+        T = jnp.asarray(b.grid.service_times(b.width))
+        pp = b.grid.policy_params()
+        if b.uniform:
+            return fn(T, pp)
+        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), pp)
+
+    return run_bucketed(grid, run_bucket)
 
 
 def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
                       horizon: int = 4096) -> PIAGResult:
-    """Grid analogue of ``core.piag.run_piag_logreg`` (the Fig. 2 cell)."""
+    """Grid analogue of ``core.piag.run_piag_logreg`` (the Fig. 2 cell).
+
+    For ragged grids the problem must be built with ``n_workers`` >= the
+    grid's widest cell; a cell with ``w`` workers runs on the first ``w``
+    shards of that fixed partition (worker-participation semantics)."""
     Aw, bw = problem.worker_slices()
     x0 = jnp.zeros((problem.dim,), jnp.float32)
     return sweep_piag(lambda x, A, b: problem.worker_loss(x, A, b), x0,
@@ -81,19 +157,31 @@ def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 
 # ----------------------------------------------------------- Async-BCD ----
 
+def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked):
+    if masked:
+        def cell(T, active, blocks, pp):
+            tr = trace_scan(T, active=active)
+            events = (tr.worker, tr.tau, blocks)
+            return bcd_scan(grad_f, objective, x0, m, n_workers, events,
+                            ParamPolicy(pp), prox, horizon=horizon)
+    else:
+        def cell(T, blocks, pp):
+            tr = trace_scan(T)
+            events = (tr.worker, tr.tau, blocks)
+            return bcd_scan(grad_f, objective, x0, m, n_workers, events,
+                            ParamPolicy(pp), prox, horizon=horizon)
+    return cell
+
+
 def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
-                   n_workers: int, prox: ProxOp,
-                   horizon: int = 4096) -> Callable:
+                   n_workers: int, prox: ProxOp, horizon: int = 4096,
+                   masked: bool = False) -> Callable:
     """Build the batched Async-BCD program: jitted ``fn(service_times
-    (B, n, K+1), blocks (B, K), params (B,)) -> BCDResult``."""
-
-    def cell(T, blocks, pp):
-        tr = trace_scan(T)
-        events = (tr.worker, tr.tau, blocks)
-        return bcd_scan(grad_f, objective, x0, m, n_workers, events,
-                        ParamPolicy(pp), prox, horizon=horizon)
-
-    return jax.jit(jax.vmap(cell))
+    (B, n, K+1)[, active (B, n)], blocks (B, K), params (B,)) ->
+    BCDResult``.  BCD has no cross-worker reduction, so the mask only
+    guards the trace (see ``core.bcd.bcd_scan``)."""
+    return jax.jit(jax.vmap(_bcd_cell(
+        grad_f, objective, x0, m, n_workers, prox, horizon, masked)))
 
 
 def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
@@ -101,12 +189,20 @@ def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
     runs."""
-    fn = make_sweep_bcd(grad_f, objective, x0, m, grid.n_workers, prox,
-                        horizon=horizon)
-    blocks = np.stack([sample_blocks(m, grid.n_events, seed=c.seed)
-                       for c in grid.cells])
-    return fn(jnp.asarray(grid.service_times()), jnp.asarray(blocks),
-              grid.policy_params())
+
+    def run_bucket(b: SweepBucket):
+        fn = make_sweep_bcd(grad_f, objective, x0, m, b.width, prox,
+                            horizon=horizon, masked=not b.uniform)
+        T = jnp.asarray(b.grid.service_times(b.width))
+        blocks = jnp.asarray(np.stack([
+            sample_blocks(m, grid.n_events, seed=c.seed)
+            for c in b.grid.cells]))
+        pp = b.grid.policy_params()
+        if b.uniform:
+            return fn(T, blocks, pp)
+        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp)
+
+    return run_bucketed(grid, run_bucket)
 
 
 def sweep_bcd_logreg(problem, grid: SweepGrid, prox: ProxOp, m: int = 20,
@@ -116,13 +212,68 @@ def sweep_bcd_logreg(problem, grid: SweepGrid, prox: ProxOp, m: int = 20,
                      horizon=horizon)
 
 
-# ------------------------------------------------------------- FedAsync ----
+# ------------------------------------------------- FedAsync / FedBuff ----
+
+def _stack_fed_rounds(grid: SweepGrid, width: int, n_steps: int):
+    """Stack per-cell pre-sampled client rounds + lifecycle constants +
+    active masks to the bucket width -- the inputs of the fused federated
+    runners.  Padded client rows carry benign constants (they never run:
+    the ``active`` mask keeps them out of the event race entirely)."""
+    B = len(grid.cells)
+    drop_u = np.zeros((B, width, n_steps), np.float32)
+    dur = np.ones((B, width, n_steps), np.float32)
+    p_drop = np.zeros((B, width), np.float32)
+    rejoin = np.ones((B, width), np.float32)
+    epochs = np.ones((B, width), np.int32)
+    for i, c in enumerate(grid.cells):
+        n = c.n_workers
+        r = sample_client_rounds(list(c.workers), n_steps, seed=c.seed)
+        drop_u[i, :n], dur[i, :n] = r.drop_u, r.duration
+        p_drop[i, :n], rejoin[i, :n], epochs[i, :n] = client_arrays(
+            list(c.workers))
+    rounds = ClientRounds(jnp.asarray(drop_u), jnp.asarray(dur))
+    cparams = (jnp.asarray(p_drop), jnp.asarray(rejoin), jnp.asarray(epochs))
+    return rounds, cparams, jnp.asarray(grid.active_masks(width))
+
+
+def _fed_cell(server_scan, n_uploads, buffer_size, n_steps):
+    """One federated cell: the jitted trace scan fused with a server scan
+    (``server_scan(events, pp) -> FedResult``), like PIAG/BCD fuse
+    ``trace_scan`` with their solver scans.  Returns the result plus the
+    trace diagnostics the host must check (uploads emitted, attempt
+    exhaustion)."""
+
+    def cell(rounds, cparams, active, pp):
+        p_drop, rejoin, epochs = cparams
+        ftr = federated_trace_scan(rounds, p_drop, rejoin, epochs, n_uploads,
+                                   buffer_size=buffer_size, n_steps=n_steps,
+                                   active=active)
+        events = (ftr.client, ftr.tau, ftr.local_steps,
+                  jnp.asarray(ftr.aggregate, jnp.float32), ftr.version)
+        return server_scan(events, pp), ftr.n_uploads, ftr.exhausted
+
+    return cell
+
+
+def _check_fed_diag(n_up, exhausted, n_uploads: int, n_steps: int) -> None:
+    n_up, exhausted = np.asarray(n_up), np.asarray(exhausted)
+    if bool(np.any(n_up < n_uploads)) or bool(np.any(exhausted)):
+        short = int(np.sum(n_up < n_uploads))
+        raise RuntimeError(
+            f"{short} cell(s) produced fewer than {n_uploads} uploads within "
+            f"{n_steps} pops (or exhausted pre-sampled attempts): "
+            "dropout/rejoin chains exceeded the scan budget -- pass a larger "
+            "n_steps")
+
 
 def make_sweep_fedasync(client_update: Callable, x0, client_data,
                         objective: Optional[Callable] = None,
                         horizon: int = 4096) -> Callable:
-    """Build the batched FedAsync program: jitted ``fn(events (5 x (B, K)),
-    params (B,)) -> FedResult``."""
+    """Build the events-driven batched FedAsync program: jitted
+    ``fn(events (5 x (B, K)), params (B,)) -> FedResult``.  This is the
+    reference-path entry (events stacked on host, e.g. by
+    ``_stack_fed_events``); the default sweep path fuses trace generation
+    via ``make_sweep_fedasync_fused``."""
 
     def cell(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
@@ -132,13 +283,69 @@ def make_sweep_fedasync(client_update: Callable, x0, client_data,
     return jax.jit(jax.vmap(cell))
 
 
-def _stack_fed_events(grid: SweepGrid, buffer_size: int):
-    """Simulate one federated trace per cell (cell.workers are ClientModels)
-    and stack the event columns the server scan consumes."""
-    traces = [simulate_federated(c.n_workers, grid.n_events,
-                                 clients=list(c.workers),
-                                 buffer_size=buffer_size, seed=c.seed)
-              for c in grid.cells]
+def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon):
+    def server_scan(events, pp):
+        return fedasync_scan(client_update, x0, client_data, events,
+                             ParamPolicy(pp), objective=objective,
+                             horizon=horizon)
+    return server_scan
+
+
+def _fedbuff_scan_adapter(client_update, x0, client_data, objective, horizon,
+                          eta, buffer_size):
+    def server_scan(events, pp):
+        return fedbuff_scan(client_update, x0, client_data, events,
+                            ParamPolicy(pp), eta=eta,
+                            buffer_size=buffer_size, objective=objective,
+                            horizon=horizon)
+    return server_scan
+
+
+def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
+                              n_uploads: int, buffer_size: int = 1,
+                              objective: Optional[Callable] = None,
+                              horizon: int = 4096,
+                              n_steps: Optional[int] = None) -> Callable:
+    """Build the fused batched FedAsync program: jitted ``fn(rounds,
+    cparams, active, params) -> (FedResult, n_uploads (B,), exhausted (B,))``
+    with trace generation (``federated_trace_scan``) and the server scan in
+    ONE executable, like the PIAG/BCD runners."""
+    n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
+    return jax.jit(jax.vmap(_fed_cell(
+        _fedasync_scan_adapter(client_update, x0, client_data, objective,
+                               horizon),
+        n_uploads, buffer_size, n_steps)))
+
+
+def make_sweep_fedbuff(client_update: Callable, x0, client_data,
+                       n_uploads: int, eta: float = 1.0, buffer_size: int = 1,
+                       objective: Optional[Callable] = None,
+                       horizon: int = 4096,
+                       n_steps: Optional[int] = None) -> Callable:
+    """Build the fused batched FedBuff program (same shape as
+    ``make_sweep_fedasync_fused`` with the buffered-delta server scan)."""
+    n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
+    return jax.jit(jax.vmap(_fed_cell(
+        _fedbuff_scan_adapter(client_update, x0, client_data, objective,
+                              horizon, eta, buffer_size),
+        n_uploads, buffer_size, n_steps)))
+
+
+def _stack_fed_events(grid: SweepGrid, buffer_size: int,
+                      n_steps: Optional[int] = None):
+    """REFERENCE TWIN of the fused path: simulate one federated trace per
+    cell with the heapq reference driven by the SAME pre-sampled client
+    rounds the jitted ``federated_trace_scan`` consumes, and stack the event
+    columns the server scan expects.  Kept for validation (bitwise-equal
+    events to the fused path) and as the ``reference=True`` escape hatch of
+    ``sweep_fedasync`` / ``sweep_fedbuff``; it costs Python time per event
+    and cannot shard."""
+    S = default_fed_steps(grid.n_events) if n_steps is None else int(n_steps)
+    traces = [simulate_federated(
+        c.n_workers, grid.n_events, clients=list(c.workers),
+        buffer_size=buffer_size, seed=c.seed,
+        client_rounds=sample_client_rounds(list(c.workers), S, seed=c.seed))
+        for c in grid.cells]
     return tuple(
         jnp.stack([jnp.asarray(getattr(t, f), dt) for t in traces])
         for f, dt in [("client", jnp.int32), ("tau", jnp.int32),
@@ -146,23 +353,99 @@ def _stack_fed_events(grid: SweepGrid, buffer_size: int):
                       ("version", jnp.int32)])
 
 
+def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
+               buffer_size: int, reference: bool,
+               n_steps: Optional[int]) -> FedResult:
+    """Shared driver for ``sweep_fedasync`` / ``sweep_fedbuff``."""
+    K = grid.n_events
+    S = default_fed_steps(K) if n_steps is None else int(n_steps)
+    if reference:
+        fn = jax.jit(jax.vmap(server_adapter))
+        return fn(_stack_fed_events(grid, buffer_size, n_steps=S),
+                  grid.policy_params())
+
+    def run_bucket(b: SweepBucket):
+        cd = _slice_workers(client_data, b.width)
+        fn = make_fused(cd, S)
+        rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
+        res, n_up, exhausted = fn(rounds, cparams, active,
+                                  b.grid.policy_params())
+        _check_fed_diag(n_up, exhausted, K, S)
+        return res
+
+    return run_bucketed(grid, run_bucket)
+
+
 def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    objective: Optional[Callable] = None,
-                   buffer_size: int = 1, horizon: int = 4096) -> FedResult:
+                   buffer_size: int = 1, horizon: int = 4096,
+                   reference: bool = False,
+                   n_steps: Optional[int] = None) -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
-    ``ClientModel`` lists.  Client round-trip traces come from the
-    (reference) federated event simulator; server mixing for all cells runs
-    in one batched program."""
-    fn = make_sweep_fedasync(client_update, x0, client_data,
-                             objective=objective, horizon=horizon)
-    return fn(_stack_fed_events(grid, buffer_size), grid.policy_params())
+    ``ClientModel`` lists.
+
+    Default path: client round-trip traces AND server mixing run fused in
+    one jitted program per bucket (``federated_trace_scan`` +
+    ``fedasync_scan``), so the whole sweep is XLA end-to-end like PIAG/BCD.
+    ``reference=True`` routes trace generation through the Python heapq
+    reference instead (same pre-sampled rounds, bitwise-equal events) --
+    the escape hatch for validating the fused path or debugging host-side.
+    """
+    adapter = _fedasync_scan_adapter(client_update, x0, client_data,
+                                     objective, horizon)
+
+    def make_fused(cd, S):
+        return make_sweep_fedasync_fused(client_update, x0, cd, grid.n_events,
+                                         buffer_size=buffer_size,
+                                         objective=objective, horizon=horizon,
+                                         n_steps=S)
+
+    return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
+                      reference, n_steps)
+
+
+def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
+                  eta: float = 1.0, buffer_size: int = 1,
+                  objective: Optional[Callable] = None, horizon: int = 4096,
+                  reference: bool = False,
+                  n_steps: Optional[int] = None) -> FedResult:
+    """Run FedBuff on every cell: fused jitted trace generation + buffered
+    delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
+    program per bucket; ``reference=True`` as in ``sweep_fedasync``."""
+    adapter = _fedbuff_scan_adapter(client_update, x0, client_data, objective,
+                                    horizon, eta, buffer_size)
+
+    def make_fused(cd, S):
+        return make_sweep_fedbuff(client_update, x0, cd, grid.n_events,
+                                  eta=eta, buffer_size=buffer_size,
+                                  objective=objective, horizon=horizon,
+                                  n_steps=S)
+
+    return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
+                      reference, n_steps)
 
 
 def sweep_fedasync_problem(problem, grid: SweepGrid, prox: ProxOp,
                            local_lr: Optional[float] = None,
-                           horizon: int = 4096) -> FedResult:
+                           horizon: int = 4096, reference: bool = False,
+                           n_steps: Optional[int] = None) -> FedResult:
     """Grid analogue of ``federated.server.run_fedasync_problem``."""
     from repro.federated.server import _problem_pieces
     update, x0, data = _problem_pieces(problem, prox, local_lr)
     return sweep_fedasync(update, x0, data, grid, objective=problem.P,
-                          horizon=horizon)
+                          horizon=horizon, reference=reference,
+                          n_steps=n_steps)
+
+
+def sweep_fedbuff_problem(problem, grid: SweepGrid, prox: ProxOp,
+                          eta: float = 1.0, buffer_size: int = 1,
+                          local_lr: Optional[float] = None,
+                          horizon: int = 4096, reference: bool = False,
+                          n_steps: Optional[int] = None) -> FedResult:
+    """Grid analogue of ``federated.server.run_fedbuff_problem``."""
+    from repro.federated.server import _problem_pieces
+    update, x0, data = _problem_pieces(problem, prox, local_lr)
+    return sweep_fedbuff(update, x0, data, grid, eta=eta,
+                         buffer_size=buffer_size, objective=problem.P,
+                         horizon=horizon, reference=reference,
+                         n_steps=n_steps)

@@ -1,0 +1,243 @@
+"""Device-sharded mega-grid sweeps (`repro.sweep.shard`).
+
+The batched runners in ``.runners`` collapse a whole grid into one XLA
+program -- but that program lives on ONE device.  This module partitions the
+**cell axis** of a mega-grid across every available device with
+``jax.experimental.shard_map`` over a 1-D ``Mesh``:
+
+* the per-cell program is the SAME vmapped cell function the single-device
+  runners use (``_piag_cell`` / ``_bcd_cell`` / ``_fed_cell``), so a sharded
+  row is the same computation as a batched row is the same computation as a
+  solo run -- the equivalence chain tested end-to-end;
+* cells are embarrassingly parallel (no cross-cell communication), so the
+  body needs no collectives: ``shard_map`` just pins shard ``d`` of the
+  stacked inputs to device ``d`` and runs the batched program there;
+* the stacked service-time / client-round tensors -- the only O(B * n * K)
+  inputs -- are **donated** (``donate_argnums=0``), so XLA reuses their
+  buffers and peak memory stays flat instead of doubling at dispatch;
+* B rarely divides the device count: ``round_robin_pad`` pads the batch to
+  the next device multiple by cycling cell indices (so padding replays real
+  cells -- every device gets live work and identical per-cell shapes), and
+  the wrappers strip the padded rows before returning.
+
+``sharded_sweep_*`` convenience wrappers mirror ``sweep_*`` exactly
+(including ragged-grid bucketing) and return identical row values; keep the
+``make_sharded_*`` builders when amortizing compiles across repeated calls
+(see ``benchmarks/mega_grid.py``, which scales a >= 512-cell
+policy x seed x topology x n_workers grid across forced host devices).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.core.bcd import BCDResult, sample_blocks
+from repro.core.piag import PIAGResult
+from repro.core.prox import ProxOp
+from repro.federated.events import default_fed_steps
+from repro.federated.server import FedResult
+
+from .grid import SweepBucket, SweepGrid
+from .runners import (_bcd_cell, _fed_cell, _fedasync_scan_adapter,
+                      _fedbuff_scan_adapter, _piag_cell, _slice_workers,
+                      _stack_fed_rounds, _check_fed_diag, run_bucketed)
+
+__all__ = ["cell_mesh", "round_robin_pad", "shard_cells",
+           "make_sharded_sweep_piag", "sharded_sweep_piag",
+           "sharded_sweep_piag_logreg",
+           "make_sharded_sweep_bcd", "sharded_sweep_bcd",
+           "sharded_sweep_fedasync", "sharded_sweep_fedbuff"]
+
+
+def cell_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D ``Mesh`` over ``devices`` (default: all of them) whose single
+    axis, ``"cells"``, carries the grid's cell dimension."""
+    devs = np.asarray(jax.devices() if devices is None else list(devices))
+    return Mesh(devs, ("cells",))
+
+
+def round_robin_pad(n_cells: int, n_devices: int) -> np.ndarray:
+    """Index map of length ``ceil(B / D) * D`` cycling through the B cells.
+
+    Gathering the stacked inputs through this map pads the batch to a device
+    multiple with REPLAYED cells (not zeros), so every shard keeps identical
+    shapes and live work; callers drop rows ``>= n_cells`` on the way out.
+    """
+    if n_cells < 1:
+        raise ValueError("empty grid")
+    padded = -(-n_cells // n_devices) * n_devices
+    return np.arange(padded) % n_cells
+
+
+def shard_cells(vmapped_fn: Callable, mesh: Mesh, n_args: int,
+                donate: bool = True) -> Callable:
+    """Wrap a vmapped cell function in ``shard_map`` over ``mesh`` and jit.
+
+    Every argument and output is partitioned on its leading (cell) axis;
+    argument 0 -- the big stacked service-time / client-rounds tensor -- is
+    donated so its buffer is reused in place.  The batch size fed to the
+    returned function must be a multiple of the mesh size
+    (``round_robin_pad``)."""
+    specs = tuple(PartitionSpec("cells") for _ in range(n_args))
+    # check_rep=False: jax 0.4's replication checker has no rule for `while`
+    # (the federated client update is a fori_loop with a traced bound); the
+    # body is collective-free and every output is sharded, so the check is
+    # vacuous here anyway.
+    fn = shard_map(vmapped_fn, mesh=mesh, in_specs=specs,
+                   out_specs=PartitionSpec("cells"), check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _pad_gather(tree, idx: np.ndarray):
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(x)[idx], tree)
+
+
+def _unpad(tree, n: int):
+    return jax.tree_util.tree_map(lambda x: x[:n], tree)
+
+
+def _run_sharded_bucket(cell, mesh: Mesh, args, n_cells: int):
+    """Pad the stacked args to a device multiple, run the sharded program,
+    strip the padding."""
+    idx = round_robin_pad(n_cells, mesh.devices.size)
+    fn = shard_cells(jax.vmap(cell), mesh, n_args=len(args))
+    out = fn(*(_pad_gather(a, idx) for a in args))
+    return _unpad(out, n_cells)
+
+
+# ---------------------------------------------------------------- PIAG ----
+
+def make_sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
+                            prox: ProxOp, objective: Optional[Callable] = None,
+                            horizon: int = 4096, use_tau_max: bool = True,
+                            masked: bool = False,
+                            mesh: Optional[Mesh] = None) -> Callable:
+    """Sharded twin of ``make_sweep_piag``: same signature and row values,
+    but the batch axis is partitioned across ``mesh`` (batch size must be a
+    mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated."""
+    mesh = cell_mesh() if mesh is None else mesh
+    cell = _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
+                      use_tau_max, masked)
+    return shard_cells(jax.vmap(cell), mesh, n_args=3 if masked else 2)
+
+
+def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
+                       grid: SweepGrid, prox: ProxOp,
+                       objective: Optional[Callable] = None,
+                       horizon: int = 4096, use_tau_max: bool = True,
+                       mesh: Optional[Mesh] = None) -> PIAGResult:
+    """``sweep_piag`` with the cell axis sharded across all devices."""
+    mesh = cell_mesh() if mesh is None else mesh
+
+    def run_bucket(b: SweepBucket):
+        wd = _slice_workers(worker_data, b.width)
+        cell = _piag_cell(worker_loss, x0, wd, prox, objective, horizon,
+                          use_tau_max, not b.uniform)
+        T = jnp.asarray(b.grid.service_times(b.width))
+        pp = b.grid.policy_params()
+        args = ((T, pp) if b.uniform else
+                (T, jnp.asarray(b.grid.active_masks(b.width)), pp))
+        return _run_sharded_bucket(cell, mesh, args, len(b.grid))
+
+    return run_bucketed(grid, run_bucket)
+
+
+def sharded_sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
+                              horizon: int = 4096,
+                              mesh: Optional[Mesh] = None) -> PIAGResult:
+    """Sharded twin of ``sweep_piag_logreg``."""
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    return sharded_sweep_piag(lambda x, A, b: problem.worker_loss(x, A, b),
+                              x0, (Aw, bw), grid, prox, objective=problem.P,
+                              horizon=horizon, mesh=mesh)
+
+
+# ----------------------------------------------------------- Async-BCD ----
+
+def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
+                           n_workers: int, prox: ProxOp, horizon: int = 4096,
+                           masked: bool = False,
+                           mesh: Optional[Mesh] = None) -> Callable:
+    """Sharded twin of ``make_sweep_bcd`` (batch must be a mesh multiple)."""
+    mesh = cell_mesh() if mesh is None else mesh
+    cell = _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon,
+                     masked)
+    return shard_cells(jax.vmap(cell), mesh, n_args=4 if masked else 3)
+
+
+def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
+                      grid: SweepGrid, prox: ProxOp, horizon: int = 4096,
+                      mesh: Optional[Mesh] = None) -> BCDResult:
+    """``sweep_bcd`` with the cell axis sharded across all devices."""
+    mesh = cell_mesh() if mesh is None else mesh
+
+    def run_bucket(b: SweepBucket):
+        cell = _bcd_cell(grad_f, objective, x0, m, b.width, prox, horizon,
+                         not b.uniform)
+        T = jnp.asarray(b.grid.service_times(b.width))
+        blocks = jnp.asarray(np.stack([
+            sample_blocks(m, grid.n_events, seed=c.seed)
+            for c in b.grid.cells]))
+        pp = b.grid.policy_params()
+        args = ((T, blocks, pp) if b.uniform else
+                (T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp))
+        return _run_sharded_bucket(cell, mesh, args, len(b.grid))
+
+    return run_bucketed(grid, run_bucket)
+
+
+# ------------------------------------------------- FedAsync / FedBuff ----
+
+def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
+                       buffer_size: int, n_steps: Optional[int],
+                       mesh: Optional[Mesh]) -> FedResult:
+    mesh = cell_mesh() if mesh is None else mesh
+    K = grid.n_events
+    S = default_fed_steps(K) if n_steps is None else int(n_steps)
+
+    def run_bucket(b: SweepBucket):
+        cd = _slice_workers(client_data, b.width)
+        cell = _fed_cell(adapter_for(cd), K, buffer_size, S)
+        rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
+        res, n_up, exhausted = _run_sharded_bucket(
+            cell, mesh, (rounds, cparams, active, b.grid.policy_params()),
+            len(b.grid))
+        _check_fed_diag(n_up, exhausted, K, S)
+        return res
+
+    return run_bucketed(grid, run_bucket)
+
+
+def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
+                           grid: SweepGrid,
+                           objective: Optional[Callable] = None,
+                           buffer_size: int = 1, horizon: int = 4096,
+                           n_steps: Optional[int] = None,
+                           mesh: Optional[Mesh] = None) -> FedResult:
+    """``sweep_fedasync`` (fused path) with the cell axis sharded."""
+    def adapter_for(cd):
+        return _fedasync_scan_adapter(client_update, x0, cd, objective,
+                                      horizon)
+    return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
+                              n_steps, mesh)
+
+
+def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
+                          grid: SweepGrid, eta: float = 1.0,
+                          buffer_size: int = 1,
+                          objective: Optional[Callable] = None,
+                          horizon: int = 4096,
+                          n_steps: Optional[int] = None,
+                          mesh: Optional[Mesh] = None) -> FedResult:
+    """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
+    def adapter_for(cd):
+        return _fedbuff_scan_adapter(client_update, x0, cd, objective,
+                                     horizon, eta, buffer_size)
+    return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
+                              n_steps, mesh)

@@ -1,0 +1,243 @@
+"""Equivalence suite for the jitted federated event layer (PR 3).
+
+Layers, each tied to the trusted heapq reference:
+
+1. traces   -- ``federated_trace_scan`` is BITWISE-equal to
+               ``simulate_federated(..., client_rounds=...)`` on the same
+               pre-sampled rounds: event order (including simultaneous-upload
+               ties, resolved by (time, seq) push order), stamps, staleness,
+               aggregation pattern, f32 arrival times, dropout/rejoin chains.
+2. wrapper  -- ``generate_federated_trace`` equals the reference and is
+               invariant to the pop/attempt budget (bigger budgets extend the
+               realization instead of resampling it).
+3. sweeps   -- fused ``sweep_fedbuff``/``sweep_fedasync`` rows match solo
+               ``run_fedbuff``/``run_fedasync`` over the same trace, and the
+               ``reference=True`` escape hatch is bitwise the default path's
+               event stream.
+4. clipped  -- the ``StepsizeState.clipped`` horizon diagnostic surfaces in
+               sweep result rows.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Adaptive1, L1, make_logreg
+from repro.core.engine import WorkerModel
+from repro.core.stepsize import HingeWeight, PolyWeight, make_policy
+from repro.federated.events import (ClientModel, ClientRounds, client_arrays,
+                                    default_fed_steps, federated_trace_scan,
+                                    generate_federated_trace,
+                                    heterogeneous_clients,
+                                    sample_client_rounds, simulate_federated)
+from repro.federated.server import local_prox_sgd, run_fedbuff
+from repro.sweep import make_grid, sweep_fedasync_problem, sweep_fedbuff_problem, sweep_piag_logreg
+
+CLIENTS = {
+    "hetero": heterogeneous_clients(6, seed=3, p_dropout=0.0),
+    "hetero_dropout": heterogeneous_clients(6, seed=3, p_dropout=0.1,
+                                            rejoin_after=2.0),
+    "heavy_dropout": heterogeneous_clients(5, seed=1, p_dropout=0.35,
+                                           rejoin_after=1.0),
+    # deterministic timings: every completion collides -> pure tie-break test
+    "ties": [ClientModel(compute=WorkerModel(mean=1.0, sigma=0.0),
+                         upload=WorkerModel(mean=0.5, sigma=0.0))
+             for _ in range(4)],
+    # ties + dropout + rejoin landing exactly on round boundaries
+    "ties_rejoin": [ClientModel(compute=WorkerModel(mean=1.0, sigma=0.0),
+                                upload=WorkerModel(mean=1.0, sigma=0.0),
+                                p_dropout=0.4, rejoin_after=2.0)
+                    for _ in range(4)],
+}
+
+
+def _scan_trace(clients, n_uploads, buffer_size, seed, n_steps):
+    rounds = sample_client_rounds(list(clients), n_steps, seed=seed)
+    p, r, e = client_arrays(list(clients))
+    out = federated_trace_scan(
+        ClientRounds(jnp.asarray(rounds.drop_u), jnp.asarray(rounds.duration)),
+        jnp.asarray(p), jnp.asarray(r), jnp.asarray(e), n_uploads,
+        buffer_size=buffer_size, n_steps=n_steps)
+    return rounds, out
+
+
+# ------------------------------------------------------------ 1. traces ----
+
+@pytest.mark.parametrize("model", sorted(CLIENTS))
+@pytest.mark.parametrize("buffer_size", [1, 3])
+def test_fed_scan_matches_heapq(model, buffer_size):
+    clients = CLIENTS[model]
+    K, S = 250, 1200
+    rounds, out = _scan_trace(clients, K, buffer_size, seed=7, n_steps=S)
+    assert int(out.n_uploads) == K
+    assert not bool(out.exhausted)
+    ref = simulate_federated(len(clients), K, clients,
+                             buffer_size=buffer_size, seed=7,
+                             client_rounds=rounds)
+    for f in ("client", "read_at", "tau", "aggregate", "version",
+              "local_steps"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(out, f)),
+                                      err_msg=f"{model}/{f}")
+    np.testing.assert_array_equal(ref.t_wall.astype(np.float32),
+                                  np.asarray(out.t_wall),
+                                  err_msg=f"{model}/t_wall")
+
+
+def test_fed_scan_simultaneous_uploads_resolve_by_push_order():
+    """All-deterministic clients collide on EVERY round boundary; both paths
+    must order simultaneous uploads by (time, seq) -- round-robin in client
+    order on the first wave."""
+    clients = CLIENTS["ties"]
+    K = 40
+    rounds, out = _scan_trace(clients, K, 1, seed=0, n_steps=200)
+    ref = simulate_federated(4, K, clients, seed=0, client_rounds=rounds)
+    np.testing.assert_array_equal(ref.client, np.asarray(out.client))
+    # first wave: all four uploads land at t=1.5 and pop in client order
+    np.testing.assert_array_equal(np.asarray(out.client[:4]), np.arange(4))
+    assert float(out.t_wall[0]) == float(out.t_wall[3])
+
+
+def test_fed_scan_dropout_rejoin_exercised():
+    """The heavy-dropout population must actually lose rounds (later final
+    arrival than the same timings without dropout), while remaining
+    bitwise-equal to the reference (already pinned above)."""
+    flaky = CLIENTS["heavy_dropout"]
+    steady = [ClientModel(compute=c.compute, upload=c.upload,
+                          local_epochs=c.local_epochs, p_dropout=0.0)
+              for c in flaky]
+    K, S = 200, 1000
+    _, out_flaky = _scan_trace(flaky, K, 1, seed=2, n_steps=S)
+    _, out_steady = _scan_trace(steady, K, 1, seed=2, n_steps=S)
+    assert float(out_flaky.t_wall[-1]) > float(out_steady.t_wall[-1])
+
+
+def test_fed_scan_short_budget_reports_truncation():
+    clients = CLIENTS["hetero"]
+    _, out = _scan_trace(clients, 300, 1, seed=0, n_steps=100)
+    assert int(out.n_uploads) < 300  # too few pops -> short, and flagged
+
+
+# ----------------------------------------------------------- 2. wrapper ----
+
+def test_generate_federated_trace_matches_reference_and_budget():
+    clients = CLIENTS["hetero_dropout"]
+    K = 300
+    tr = generate_federated_trace(6, K, clients, seed=9)
+    S = default_fed_steps(K)
+    ref = simulate_federated(
+        6, K, clients, seed=9,
+        client_rounds=sample_client_rounds(clients, S, seed=9))
+    for f in ("client", "read_at", "tau", "aggregate", "version"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(tr, f)), err_msg=f)
+    # a 4x pop/attempt budget must reproduce the SAME realization
+    tr_big = generate_federated_trace(6, K, clients, seed=9, n_steps=4 * S)
+    for f in ("client", "tau", "version", "t_wall"):
+        np.testing.assert_array_equal(np.asarray(getattr(tr, f)),
+                                      np.asarray(getattr(tr_big, f)),
+                                      err_msg=f)
+
+
+def test_generate_federated_trace_autogrows_budget():
+    """An undersized explicit budget is doubled until the trace completes."""
+    clients = CLIENTS["heavy_dropout"]
+    tr = generate_federated_trace(5, 200, clients, seed=4, n_steps=64)
+    assert tr.n_events == 200
+    assert np.all(np.diff(tr.t_wall) >= 0)
+
+
+# ------------------------------------------------------------ 3. sweeps ----
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+def test_sweep_fedbuff_rows_match_solo(problem):
+    """Acceptance: a fused ``sweep_fedbuff`` row equals a solo
+    ``run_fedbuff`` of that cell's config over the same trace."""
+    prox = L1(lam=problem.lam1)
+    clients = heterogeneous_clients(4, seed=2, p_dropout=0.05)
+    grid = make_grid(
+        policies={"poly": PolyWeight(gamma_prime=1.0, a=0.5),
+                  "hinge": HingeWeight(gamma_prime=1.0, a=2.0, b=2.0)},
+        seeds=[0, 1],
+        topologies={"edge": clients},
+        n_events=120)
+    eta, R = 0.4, 3
+    res = sweep_fedbuff_problem(problem, grid, prox, eta=eta, buffer_size=R,
+                                local_lr=0.5 / problem.L)
+    assert res.objective.shape == (len(grid), 120)
+    Aw, bw = problem.worker_slices()
+    update = local_prox_sgd(
+        lambda x, A, b: problem.worker_loss(x, A, b), prox, 0.5 / problem.L)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    for i, cell in enumerate(grid.cells):
+        trace = generate_federated_trace(4, 120, clients=list(cell.workers),
+                                         buffer_size=R, seed=cell.seed)
+        solo = run_fedbuff(update, x0, (Aw, bw), trace, cell.policy, eta=eta,
+                           buffer_size=R, objective=problem.P)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_array_equal(np.asarray(solo.versions),
+                                      np.asarray(res.versions[i]))
+        np.testing.assert_allclose(np.asarray(solo.weights),
+                                   np.asarray(res.weights[i]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_sweep_fedasync_reference_hatch_is_bitwise_twin(problem):
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6)},
+        seeds=[0, 1, 2],
+        topologies={"edge": heterogeneous_clients(4, seed=5, p_dropout=0.1)},
+        n_events=100)
+    fused = sweep_fedasync_problem(problem, grid, prox)
+    ref = sweep_fedasync_problem(problem, grid, prox, reference=True)
+    np.testing.assert_array_equal(np.asarray(fused.taus),
+                                  np.asarray(ref.taus))
+    np.testing.assert_array_equal(np.asarray(fused.versions),
+                                  np.asarray(ref.versions))
+    np.testing.assert_allclose(np.asarray(fused.objective),
+                               np.asarray(ref.objective), rtol=1e-6,
+                               atol=1e-7)
+
+
+# ----------------------------------------------------------- 4. clipped ----
+
+def test_clipped_counter_surfaces_in_sweep_rows(problem):
+    """An undersized horizon (H - 1 < max delay) must be visible per cell
+    via the ``clipped`` column instead of silently truncating window sums."""
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp)},
+        seeds=[0, 1],
+        topologies={"u": [WorkerModel() for _ in range(4)]},
+        n_events=150)
+    tight = sweep_piag_logreg(problem, grid, prox, horizon=2)
+    roomy = sweep_piag_logreg(problem, grid, prox, horizon=4096)
+    assert tight.clipped.shape == (len(grid),)
+    assert np.all(np.asarray(tight.clipped) > 0)   # delays exceed H - 1 = 1
+    assert np.all(np.asarray(roomy.clipped) == 0)  # generous horizon: silent
+    # count equals the number of events whose delay exceeded the cap
+    taus = np.asarray(roomy.taus)
+    np.testing.assert_array_equal(np.asarray(tight.clipped),
+                                  (taus > 1).sum(axis=1))
+
+
+def test_clipped_counter_in_federated_rows(problem):
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"hinge": make_policy("hinge", 0.6)},
+        seeds=[0],
+        topologies={"edge": heterogeneous_clients(4, seed=5)},
+        n_events=80)
+    res = sweep_fedasync_problem(problem, grid, prox)
+    assert res.clipped.shape == (1,)
+    assert np.all(np.asarray(res.clipped) >= 0)

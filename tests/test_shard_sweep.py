@@ -1,0 +1,299 @@
+"""Ragged worker-count buckets + device-sharded sweeps (PR 3).
+
+Masked-padding invariance: a cell padded into a wider bucket (service-time
+rows + ``active_workers`` mask) must equal its exact-width run -- traces
+bitwise, solver rows to the usual few-ulp envelope.  Sharded runners must
+reproduce single-device rows exactly on any device count; the multi-device
+assertions activate under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI multi-device lane).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Adaptive1, FixedStepSize, L1, make_logreg,
+                        generate_trace, run_async_bcd, sample_blocks,
+                        sample_service_times, trace_scan)
+from repro.core.engine import WorkerModel, heterogeneous_workers
+from repro.core.piag import piag_scan
+from repro.core.stepsize import HingeWeight
+from repro.federated.events import generate_federated_trace, heterogeneous_clients
+from repro.federated.server import local_prox_sgd, run_fedasync
+from repro.sweep import (cell_mesh, make_grid, next_pow2, round_robin_pad,
+                         sharded_sweep_bcd, sharded_sweep_fedbuff,
+                         sharded_sweep_piag_logreg,
+                         standard_topology_factories, sweep_bcd_logreg,
+                         sweep_fedasync_problem, sweep_fedbuff_problem,
+                         sweep_piag_logreg)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=8, seed=0)
+
+
+def _ragged_grid(gp, n_events=150, widths=(4, 8)):
+    return make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=12)},
+        seeds=[0, 1],
+        topologies=standard_topology_factories(),
+        n_events=n_events,
+        n_workers=list(widths))
+
+
+# -------------------------------------------------------- grid plumbing ----
+
+def test_ragged_grid_structure():
+    grid = _ragged_grid(0.5)
+    assert grid.is_ragged
+    assert grid.n_workers_max == 8
+    with pytest.raises(ValueError):
+        grid.n_workers  # ambiguous on a ragged grid
+    buckets = grid.buckets()
+    assert [b.width for b in buckets] == [4, 8]
+    assert sum(len(b.grid) for b in buckets) == len(grid)
+    assert all(c.n_workers == 4 for c in buckets[0].grid.cells)
+    # every cell lands in exactly one bucket, in a stitchable order
+    idx = np.sort(np.concatenate([b.index for b in buckets]))
+    np.testing.assert_array_equal(idx, np.arange(len(grid)))
+
+
+def test_bucket_widths_capped_at_widest_cell():
+    """Regression: pow-2 padding must not outgrow the widest real topology
+    (widths {4, 6} bucket to {4, 6}, not {4, 8} -- 8 would exceed the
+    shared worker data and waste FLOPs on rows no cell uses)."""
+    grid = make_grid(
+        policies={"a1": Adaptive1(gamma_prime=0.5)},
+        seeds=[0],
+        topologies={"u": lambda n: [WorkerModel() for _ in range(n)]},
+        n_events=20,
+        n_workers=[4, 6])
+    assert [b.width for b in grid.buckets()] == [4, 6]
+    assert all(b.uniform for b in grid.buckets())
+    # an explicit menu still wins
+    assert [b.width for b in grid.buckets(bucket_widths=[8])] == [8]
+
+
+def test_ragged_service_times_padded_with_inf():
+    grid = _ragged_grid(0.5, n_events=50)
+    T = grid.service_times(8)
+    masks = grid.active_masks(8)
+    assert T.shape == (len(grid), 8, 51)
+    assert np.all(np.isinf(T[~masks]))
+    assert np.all(np.isfinite(T[masks]))
+
+
+def test_next_pow2_and_round_robin_pad():
+    assert [next_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    idx = round_robin_pad(5, 4)
+    assert idx.shape == (8,)
+    np.testing.assert_array_equal(idx, [0, 1, 2, 3, 4, 0, 1, 2])
+
+
+# ------------------------------------------------- masked trace padding ----
+
+@pytest.mark.parametrize("pad_value", [np.inf, 1.0],
+                         ids=["inf-pad", "finite-pad"])
+def test_trace_scan_masked_padding_invariance(pad_value):
+    """A padded+masked trace is bitwise the exact-width trace -- even when
+    padding rows hold FINITE (race-winning) durations, proving the mask and
+    not the pad value keeps them out."""
+    workers = heterogeneous_workers(5, spread=3.0, seed=4)
+    T = sample_service_times(workers, 201, seed=11)
+    exact = trace_scan(jnp.asarray(T))
+    T_pad = np.full((8, 201), pad_value, np.float32)
+    T_pad[:5] = T
+    active = np.arange(8) < 5
+    padded = trace_scan(jnp.asarray(T_pad), active=jnp.asarray(active))
+    for f in ("worker", "read_at", "tau", "tau_max", "t_wall"):
+        np.testing.assert_array_equal(np.asarray(getattr(exact, f)),
+                                      np.asarray(getattr(padded, f)),
+                                      err_msg=f)
+
+
+def test_trace_scan_all_active_mask_is_identity():
+    workers = [WorkerModel(sigma=0.3) for _ in range(4)]
+    T = jnp.asarray(sample_service_times(workers, 101, seed=3))
+    a = trace_scan(T)
+    b = trace_scan(T, active=jnp.ones((4,), bool))
+    for f in ("worker", "tau", "tau_max", "t_wall"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+# ------------------------------------------- bucketed row == solo row ----
+
+def _gamma_envelope(gp):
+    return 32 * float(np.spacing(np.float32(gp)))
+
+
+def test_ragged_sweep_piag_rows_match_exact_width_solo(problem):
+    """Acceptance: a bucketed cell (4 active workers padded to width 8 would
+    be in the 4-bucket here; both buckets checked) equals its exact-width
+    solo run on the same data prefix."""
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = _ragged_grid(gp)
+    res = sweep_piag_logreg(problem, grid, prox)
+    assert res.objective.shape == (len(grid), 150)
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    checked = set()
+    for i, cell in enumerate(grid.cells):
+        if cell.n_workers in checked and i % 5:
+            continue
+        checked.add(cell.n_workers)
+        w = cell.n_workers
+        T = sample_service_times(cell.workers, 151, seed=cell.seed)
+        tr = trace_scan(jnp.asarray(T))
+        solo = jax.jit(lambda ev: piag_scan(
+            lambda x, A, b: problem.worker_loss(x, A, b), x0,
+            (Aw[:w], bw[:w]), ev, cell.policy, prox,
+            objective=problem.P))((tr.worker, tr.tau_max))
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_allclose(np.asarray(solo.gammas),
+                                   np.asarray(res.gammas[i]),
+                                   rtol=1e-6, atol=_gamma_envelope(gp))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(solo.clipped),
+                                      np.asarray(res.clipped[i]))
+
+
+def test_ragged_sweep_bcd_rows_match_solo(problem):
+    m = 8
+    gp = 0.99 / problem.block_smoothness(m)
+    prox = L1(lam=problem.lam1)
+    grid = _ragged_grid(gp, n_events=120)
+    res = sweep_bcd_logreg(problem, grid, prox, m=m)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    for i in (0, len(grid) // 2, len(grid) - 1):
+        cell = grid.cells[i]
+        T = sample_service_times(cell.workers, 121, seed=cell.seed)
+        trace = generate_trace(T, kind="shared_memory")
+        blocks = sample_blocks(m, 120, seed=cell.seed)
+        solo = run_async_bcd(problem.grad_f, problem.P, x0, m, trace, blocks,
+                             cell.policy, prox)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_array_equal(np.asarray(solo.blocks),
+                                      np.asarray(res.blocks[i]))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ragged_sweep_fedasync_rows_match_exact_width_solo(problem):
+    """Padded clients (mask) never start rounds: a ragged federated cell
+    equals the solo run over its exact client population."""
+    prox = L1(lam=problem.lam1)
+    lr = 0.5 / problem.L
+    grid = make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6)},
+        seeds=[0, 1],
+        topologies={"edge": lambda n: heterogeneous_clients(n, seed=5,
+                                                            p_dropout=0.1)},
+        n_events=100,
+        n_workers=[3, 8])
+    res = sweep_fedasync_problem(problem, grid, prox, local_lr=lr)
+    Aw, bw = problem.worker_slices()
+    update = local_prox_sgd(
+        lambda x, A, b: problem.worker_loss(x, A, b), prox, lr)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    for i, cell in enumerate(grid.cells):
+        w = cell.n_workers
+        trace = generate_federated_trace(w, 100, clients=list(cell.workers),
+                                         seed=cell.seed)
+        solo = run_fedasync(update, x0, (Aw[:w], bw[:w]), trace, cell.policy,
+                            objective=problem.P)
+        np.testing.assert_array_equal(np.asarray(solo.taus),
+                                      np.asarray(res.taus[i]))
+        np.testing.assert_allclose(np.asarray(solo.objective),
+                                   np.asarray(res.objective[i]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------- sharded ----
+
+def test_sharded_sweep_piag_rows_equal_single_device(problem):
+    """Sharded vs single-device row equality; on one device this pins the
+    mesh plumbing, under the CI multi-device lane (8 forced host devices)
+    it exercises real sharding plus round-robin batch padding (12 cells
+    pad to 16)."""
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=12)},
+        seeds=[0, 1, 2],
+        topologies={"uniform": [WorkerModel() for _ in range(4)],
+                    "hetero": heterogeneous_workers(4, seed=1)},
+        n_events=120)
+    assert len(grid) == 12
+    batched = sweep_piag_logreg(problem, grid, prox)
+    sharded = sharded_sweep_piag_logreg(problem, grid, prox)
+    np.testing.assert_array_equal(np.asarray(batched.taus),
+                                  np.asarray(sharded.taus))
+    np.testing.assert_allclose(np.asarray(batched.objective),
+                               np.asarray(sharded.objective),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(batched.x),
+                               np.asarray(sharded.x), rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=N (CI multi-device lane)")
+def test_multi_device_sharded_ragged_and_fed_rows(problem):
+    """Under forced host devices: ragged sharded PIAG and sharded FedBuff
+    reproduce the single-device rows across shard boundaries."""
+    assert cell_mesh().devices.size >= 2
+    gp = 0.99 / problem.L
+    prox = L1(lam=problem.lam1)
+    grid = _ragged_grid(gp, n_events=100)
+    batched = sweep_piag_logreg(problem, grid, prox)
+    sharded = sharded_sweep_piag_logreg(problem, grid, prox)
+    np.testing.assert_array_equal(np.asarray(batched.taus),
+                                  np.asarray(sharded.taus))
+    np.testing.assert_allclose(np.asarray(batched.objective),
+                               np.asarray(sharded.objective),
+                               rtol=1e-6, atol=1e-7)
+
+    gridf = make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6)},
+        seeds=[0, 1, 2],
+        topologies={"edge": heterogeneous_clients(4, seed=5)},
+        n_events=80)
+    from repro.federated.server import _problem_pieces
+    update, x0, data = _problem_pieces(problem, prox, None)
+    batched_f = sweep_fedbuff_problem(problem, gridf, prox, eta=0.4,
+                                      buffer_size=2)
+    sharded_f = sharded_sweep_fedbuff(update, x0, data, gridf, eta=0.4,
+                                      buffer_size=2, objective=problem.P)
+    np.testing.assert_array_equal(np.asarray(batched_f.taus),
+                                  np.asarray(sharded_f.taus))
+    np.testing.assert_allclose(np.asarray(batched_f.objective),
+                               np.asarray(sharded_f.objective),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs forced host devices")
+def test_multi_device_sharded_bcd_rows(problem):
+    m = 8
+    gp = 0.99 / problem.block_smoothness(m)
+    prox = L1(lam=problem.lam1)
+    grid = _ragged_grid(gp, n_events=80)
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    batched = sweep_bcd_logreg(problem, grid, prox, m=m)
+    sharded = sharded_sweep_bcd(problem.grad_f, problem.P, x0, m, grid, prox)
+    np.testing.assert_array_equal(np.asarray(batched.blocks),
+                                  np.asarray(sharded.blocks))
+    np.testing.assert_allclose(np.asarray(batched.objective),
+                               np.asarray(sharded.objective),
+                               rtol=1e-6, atol=1e-7)

@@ -30,7 +30,8 @@ from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1, make_logreg,
 from repro.core.engine import WorkerModel, heterogeneous_workers
 from repro.core.stepsize import (DavisFixed, HingeWeight, NaiveAdaptive,
                                  PolyWeight, SunDengFixed)
-from repro.federated.events import heterogeneous_clients, simulate_federated
+from repro.federated.events import (generate_federated_trace,
+                                    heterogeneous_clients)
 from repro.federated.server import run_fedasync_problem
 from repro.sweep import (ParamPolicy, make_grid, policy_params,
                          standard_topologies, sweep_bcd_logreg,
@@ -209,6 +210,10 @@ def test_sweep_bcd_rows_match_solo(problem):
 
 
 def test_sweep_fedasync_rows_match_solo(problem):
+    """The default sweep path fuses the jitted federated trace scan with the
+    server scan; a row must match a solo run over the SAME trace -- which is
+    now the pre-sampled-rounds trace (``generate_federated_trace``, bitwise
+    the heapq reference on those rounds; see tests/test_fed_scan.py)."""
     prox = L1(lam=problem.lam1)
     clients = heterogeneous_clients(4, seed=2)
     grid = make_grid(
@@ -221,8 +226,8 @@ def test_sweep_fedasync_rows_match_solo(problem):
     res = sweep_fedasync_problem(problem, grid, prox)
     assert res.objective.shape == (len(grid), 120)
     for i, cell in enumerate(grid.cells):
-        trace = simulate_federated(4, 120, clients=list(cell.workers),
-                                   buffer_size=1, seed=cell.seed)
+        trace = generate_federated_trace(4, 120, clients=list(cell.workers),
+                                         buffer_size=1, seed=cell.seed)
         solo = run_fedasync_problem(problem, trace, cell.policy, prox)
         np.testing.assert_array_equal(np.asarray(solo.taus),
                                       np.asarray(res.taus[i]))
