@@ -21,6 +21,7 @@ import os
 
 import numpy as np
 
+from repro.analysis import best_fixed_vs_adaptive, time_to_tolerance
 from repro.core import L1, make_logreg, make_policy, solve_centralized
 from repro.federated import (heterogeneous_clients, run_fedasync_problem,
                              run_fedbuff_problem, simulate_federated)
@@ -63,7 +64,7 @@ def run() -> dict:
 
     def record(name, res, n_writes_per_event=1):
         sub = np.asarray(res.objective) - p_star
-        hit = int(np.argmax(sub <= target)) if (sub <= target).any() else -1
+        hit = time_to_tolerance(res.objective, target, p_star=p_star)
         writes = hit * n_writes_per_event if hit >= 0 else -1
         results[name] = {
             "final_subopt": float(sub[-1]),
@@ -85,7 +86,7 @@ def run() -> dict:
         prob, trace_b4, make_policy("poly", 1.0, a=0.3), prox, eta=ALPHA,
         buffer_size=4, local_lr=0.5 / prob.L), repeats=1)
     sub = np.asarray(res.objective) - p_star
-    hit = int(np.argmax(sub <= target)) if (sub <= target).any() else -1
+    hit = time_to_tolerance(res.objective, target, p_star=p_star)
     results["fedbuff4_poly"] = {
         "final_subopt": float(sub[-1]), "best_subopt": float(sub.min()),
         "events_to_target": int(hit),
@@ -95,15 +96,14 @@ def run() -> dict:
     emit("fig5/logreg/fedbuff4_poly", us,
          f"final_subopt={sub[-1]:.5f};events_to_target={hit}")
 
-    best_fixed = min((r["events_to_target"] for n, r in results.items()
-                      if n.startswith("fixed_") and r["events_to_target"] >= 0),
-                     default=-1)
-    best_adaptive = min((r["events_to_target"] for n, r in results.items()
-                         if n in adaptive and r["events_to_target"] >= 0),
-                        default=-1)
-    if best_fixed > 0 and best_adaptive > 0:
+    gap = best_fixed_vs_adaptive(
+        {n: r["events_to_target"] for n, r in results.items()},
+        fixed={n for n in results if n.startswith("fixed_")},
+        adaptive=set(adaptive))
+    best_fixed, best_adaptive = gap["best_fixed"], gap["best_adaptive"]
+    if gap["speedup"] is not None:
         derived = (f"adaptive={best_adaptive};fixed={best_fixed};"
-                   f"speedup={best_fixed / best_adaptive:.1f}x")
+                   f"speedup={gap['speedup']:.1f}x")
     else:
         derived = (f"adaptive={'never' if best_adaptive < 0 else best_adaptive};"
                    f"fixed={'never' if best_fixed < 0 else best_fixed}")

@@ -51,6 +51,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import clipped_summary
 from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
                         SunDengFixed, make_logreg)
 from repro.core.engine import trace_scan, sample_service_times
@@ -200,7 +201,7 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
          f"solo_rows_max_diff={solo_diff:.2e};ok={rows_ok}")
 
     # ---- clipped-horizon diagnostic now visible per cell ------------------
-    n_clipped = int(np.sum(np.asarray(res_shard.clipped) > 0))
+    n_clipped = clipped_summary(res_shard.clipped)["cells_clipped"]
     emit("mega_grid/clipped_cells", 0.0, f"cells_with_clipping={n_clipped}")
 
     # ---- PR 2 compat: the 64-cell grid must not have regressed -----------

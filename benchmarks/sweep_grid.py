@@ -26,6 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import mean_final_objective
 from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
                         SunDengFixed, make_logreg, run_piag_logreg,
                         simulate_parameter_server)
@@ -112,12 +113,10 @@ def run(n_events: int = 800, n_seeds: int = 4, n_workers: int = 8,
          f"rows={len(loop_obj)};max_obj_diff={max_obj:.2e};ok={rows_ok}")
 
     # per-policy summary: mean final objective across seeds x topologies
-    obj = np.asarray(res.objective)
-    finals = {}
-    for pn in dict.fromkeys(c.policy_name for c in grid.cells):
-        rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
-        finals[pn] = float(np.mean(obj[rows, -1]))
-        emit(f"sweep_grid/final_P/{pn}", 0.0, f"mean_P_final={finals[pn]:.5f}")
+    # (aggregated by repro.analysis, the sweeps' shared reduction layer)
+    finals = mean_final_objective(grid.cells, res.objective)
+    for pn, v in finals.items():
+        emit(f"sweep_grid/final_P/{pn}", 0.0, f"mean_P_final={v:.5f}")
 
     payload = {
         "bench": "sweep_grid",

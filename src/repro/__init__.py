@@ -1,7 +1,18 @@
 """repro: Delay-Adaptive Step-sizes for Asynchronous Learning (Wu et al.,
 ICML 2022) as a production-grade multi-pod JAX framework.
 
+The documented entry point is the declarative spec API::
+
+    from repro import api, analysis
+
+    res = api.run(api.ExperimentSpec(...))   # solo | batched | sharded
+    analysis.summarize(res)                  # per-policy aggregation
+
 Subpackages:
+  api         the unified experiment-spec API: ExperimentSpec -> run() ->
+              Results, one declarative surface over every runner below
+  analysis    sweep-level aggregation: per-policy summaries,
+              time-to-tolerance, fixed-vs-adaptive gaps, clip summaries
   core        the paper: step-size principle (8), policies, PIAG, Async-BCD,
               delay tracking, event engine, threaded runtimes, theory checks
   federated   delay-adaptive async federated learning: FedAsync/FedBuff
@@ -17,5 +28,24 @@ Subpackages:
   configs     assigned architectures + input shapes
   launch      mesh / sharding planner / dry-run / roofline / trainers
 """
+import importlib
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+# the curated public surface; submodules are imported lazily (PEP 562) so
+# `import repro` stays light and `from repro import api` works everywhere
+__all__ = ["api", "analysis", "core", "federated", "sweep", "models",
+           "optim", "data", "checkpoint", "kernels", "serving", "configs",
+           "launch"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,143 @@
+"""Sweep-level analysis (`repro.analysis`).
+
+Per-policy aggregation, time-to-tolerance, best-fixed-vs-adaptive gaps and
+clipped-horizon summaries used to be computed inline (and divergently) in
+``benchmarks/sweep_grid.py``, ``benchmarks/fig5_federated.py`` and
+``launch/sweep.py``.  This module is the single home for those reductions;
+the benchmarks, the CLI and ``api.Results`` all route through it
+(``tests/test_analysis.py`` pins the numbers against the formerly-inline
+formulas on the 64-cell fast grid).
+
+Everything operates on plain arrays + the grid's ``SweepCell`` coordinate
+list, so the functions work on ``api.Results`` columns and on raw
+``PIAGResult`` / ``BCDResult`` / ``FedResult`` leaves alike.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Mapping, NamedTuple, Optional
+
+import numpy as np
+
+__all__ = ["PolicySummary", "policy_rows", "per_policy_summary",
+           "mean_final_objective", "time_to_tolerance",
+           "best_fixed_vs_adaptive", "clipped_summary", "summarize"]
+
+
+class PolicySummary(NamedTuple):
+    """Aggregates over all cells (seeds x topologies x widths) of a policy."""
+
+    policy: str
+    n_cells: int
+    mean_final: float        # mean final objective
+    min_final: float         # best final objective
+    mean_sum_gamma: float    # mean total step-size / mixing-weight budget
+    clipped_cells: int       # cells with any horizon-clipped delay
+    clipped_events: int      # total horizon-clipped events
+
+
+def policy_rows(cells) -> Dict[str, List[int]]:
+    """Cell indices grouped by policy name, in first-seen (grid) order."""
+    rows: Dict[str, List[int]] = {}
+    for i, c in enumerate(cells):
+        rows.setdefault(c.policy_name, []).append(i)
+    return rows
+
+
+def per_policy_summary(cells, objective, gammas=None,
+                       clipped=None) -> Dict[str, PolicySummary]:
+    """The per-policy table ``launch.sweep`` prints: mean/min final
+    objective, mean summed step-size, clip counts, keyed by policy name in
+    grid order."""
+    obj = np.asarray(objective)
+    gam = None if gammas is None else np.asarray(gammas)
+    clp = None if clipped is None else np.asarray(clipped)
+    out = {}
+    for pn, rows in policy_rows(cells).items():
+        rows = np.asarray(rows)
+        out[pn] = PolicySummary(
+            policy=pn,
+            n_cells=int(rows.size),
+            mean_final=float(obj[rows, -1].mean()),
+            min_final=float(obj[rows, -1].min()),
+            mean_sum_gamma=(float(gam[rows].sum(1).mean())
+                            if gam is not None else float("nan")),
+            clipped_cells=(int(np.sum(clp[rows] > 0))
+                           if clp is not None else 0),
+            clipped_events=(int(clp[rows].sum()) if clp is not None else 0),
+        )
+    return out
+
+
+def mean_final_objective(cells, objective) -> Dict[str, float]:
+    """Mean final objective per policy (the ``benchmarks/sweep_grid.py``
+    ``mean_final_objective`` payload), keyed in grid order."""
+    obj = np.asarray(objective)
+    return {pn: float(np.mean(obj[rows, -1]))
+            for pn, rows in policy_rows(cells).items()}
+
+
+def time_to_tolerance(objective, target: float, p_star: float = 0.0):
+    """First event index where ``objective - p_star <= target``; -1 when
+    the tolerance is never reached.
+
+    1-D input -> int (the ``benchmarks/fig5_federated.py`` events-to-target
+    metric); 2-D (B, K) input -> (B,) int array, one per cell.
+    """
+    sub = np.asarray(objective) - p_star
+    hit = sub <= target
+    if sub.ndim == 1:
+        return int(np.argmax(hit)) if hit.any() else -1
+    first = np.argmax(hit, axis=-1)
+    return np.where(hit.any(axis=-1), first, -1).astype(np.int64)
+
+
+def best_fixed_vs_adaptive(events_to_target: Mapping[str, Optional[int]],
+                           fixed: Optional[Iterable[str]] = None,
+                           adaptive: Optional[Iterable[str]] = None) -> dict:
+    """The paper's headline derived metric: best (fewest events to the
+    tolerance) fixed-family policy vs best adaptive policy.
+
+    ``events_to_target`` maps policy name -> event count (-1 or None =
+    never reached).  ``fixed`` defaults to names starting with ``"fixed"``
+    plus the other worst-case-bound baselines (``sun_deng`` / ``davis`` /
+    ``constant``, the non-adaptive families of ``core.stepsize``);
+    ``adaptive`` defaults to every other name.  Returns ``best_fixed``,
+    ``best_adaptive`` (-1 = never) and ``speedup`` (fixed / adaptive; None
+    unless both reached the tolerance).
+    """
+    names = list(events_to_target)
+    fixed = set(fixed) if fixed is not None \
+        else {n for n in names
+              if n.startswith("fixed") or n in ("sun_deng", "davis",
+                                                "constant")}
+    adaptive = set(adaptive) if adaptive is not None \
+        else set(names) - fixed
+
+    def best(group):
+        vals = [int(events_to_target[n]) for n in names
+                if n in group and events_to_target[n] is not None
+                and int(events_to_target[n]) >= 0]
+        return min(vals, default=-1)
+
+    bf, ba = best(fixed), best(adaptive)
+    speedup = (bf / ba) if bf > 0 and ba > 0 else None
+    return {"best_fixed": bf, "best_adaptive": ba, "speedup": speedup}
+
+
+def clipped_summary(clipped) -> dict:
+    """Horizon-clipping across a sweep: how many cells silently truncated
+    window sums (delay > H - 1) and how badly.  ``cells_clipped > 0`` means
+    the horizon was undersized for some cells -- raise it."""
+    clp = np.asarray(clipped)
+    return {
+        "cells": int(clp.size),
+        "cells_clipped": int(np.sum(clp > 0)),
+        "events_clipped": int(clp.sum()),
+        "max_events_clipped": int(clp.max()) if clp.size else 0,
+    }
+
+
+def summarize(results) -> Dict[str, PolicySummary]:
+    """Per-policy aggregation straight off an ``api.Results`` table."""
+    return per_policy_summary(results.cells, results.objective,
+                              results.gammas, results.clipped)

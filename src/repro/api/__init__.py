@@ -1,0 +1,42 @@
+"""`repro.api` -- one declarative entry point over every runner.
+
+The paper's experiments all share one shape: (problem, solver, delay
+model / topology, step-size policy grid) -> convergence traces.  This
+package expresses that shape as data (the ``ExperimentSpec`` family) and
+provides a single ``run(spec)`` that compiles the spec down to the
+existing jitted scans -- solo per-cell runs, one-program-per-bucket
+batched sweeps, or device-sharded mega-grids -- returning one unified
+``Results`` table regardless of solver or backend.
+
+Quick taste::
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        problem=api.ProblemSpec(kind="logreg",
+                                params=dict(n_samples=800, dim=100)),
+        solver=api.SolverSpec(name="piag", horizon=4096),
+        topology=api.TopologySpec(kind="standard", n_workers=(4, 8)),
+        policies=api.PolicyGridSpec(names=("adaptive1", "adaptive2",
+                                           "fixed"),
+                                    seeds=range(4)),
+        execution=api.ExecutionSpec(backend="sharded"),
+        n_events=1000)
+    res = api.run(spec)              # Results: (B, K) traces + coordinates
+    res.per_policy()                 # repro.analysis aggregation
+
+Swap ``backend`` between ``"solo"`` / ``"batched"`` / ``"sharded"`` and the
+rows stay bitwise-identical to the runner each backend dispatches to.
+"""
+from .results import Results
+from .run import (Resolved, component_spec, resolve, run, run_components)
+from .spec import (BACKENDS, FIXED_FAMILY, SOLVERS, DelaySpec,
+                   ExecutionSpec, ExperimentSpec, PolicyGridSpec,
+                   ProblemSpec, SolverSpec, TopologySpec)
+
+__all__ = [
+    "ExperimentSpec", "ProblemSpec", "SolverSpec", "TopologySpec",
+    "DelaySpec", "PolicyGridSpec", "ExecutionSpec", "Results", "Resolved",
+    "run", "resolve", "run_components", "component_spec",
+    "SOLVERS", "BACKENDS", "FIXED_FAMILY",
+]

@@ -1,0 +1,176 @@
+"""The unified results table returned by ``repro.api.run``.
+
+``Results`` replaces the ad-hoc ``PIAGResult`` / ``BCDResult`` /
+``FedResult`` divergence at the API surface with one table of common
+columns -- objective trace, step-sizes/weights (``gammas``), delays
+(``taus``), horizon-clip counts (``clipped``), wall/virtual time, and cell
+coordinates -- while keeping the raw solver tuple available (``raw``) so
+bitwise comparisons against the underlying runners stay possible.
+Solver-specific columns (``opt_residual``, ``blocks``, ``versions``) live
+in ``extras``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Results"]
+
+
+@dataclasses.dataclass
+class Results:
+    """One row per grid cell, one column family per common output.
+
+    Attributes:
+      solver / backend: how the spec was dispatched.
+      grid:       the resolved ``sweep.SweepGrid`` (cell coordinates).
+      raw:        the underlying solver result tuple with a leading cell
+                  axis -- EXACTLY what the dispatched runner returned
+                  (``PIAGResult`` / ``BCDResult`` / ``FedResult``).
+      elapsed_s:  host wall-clock of the dispatched run (compile + execute).
+      tau_bar:    the measured worst-case delay bound, when the resolver
+                  computed one (fixed-family tuning / horizon validation).
+      spec:       the originating ``ExperimentSpec`` (None for component
+                  runs that bypassed the declarative build).
+    """
+
+    solver: str
+    backend: str
+    grid: Any
+    raw: Any
+    elapsed_s: float
+    tau_bar: Optional[int] = None
+    spec: Any = None
+
+    # ------------------------------------------------- common columns ----
+
+    @property
+    def cells(self):
+        return self.grid.cells
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.grid.cells)
+
+    @property
+    def n_events(self) -> int:
+        return int(self.grid.n_events)
+
+    @property
+    def objective(self):
+        """(B, K) objective P(x_{k+1}) after each event."""
+        return self.raw.objective
+
+    @property
+    def gammas(self):
+        """(B, K) emitted step-sizes (PIAG/BCD) or mixing weights (fed)."""
+        return self.raw.weights if "weights" in self.raw._fields \
+            else self.raw.gammas
+
+    @property
+    def taus(self):
+        """(B, K) delay fed to the policy at each event."""
+        return self.raw.taus
+
+    @property
+    def clipped(self):
+        """(B,) events whose delay exceeded the policy horizon (H - 1)."""
+        return self.raw.clipped
+
+    @property
+    def x(self):
+        """Final iterates, leading cell axis."""
+        return self.raw.x
+
+    @property
+    def extras(self) -> Dict[str, Any]:
+        """Solver-specific columns not shared across the four solvers."""
+        common = {"x", "objective", "gammas", "taus", "clipped"}
+        return {f: getattr(self.raw, f) for f in self.raw._fields
+                if f not in common and f != "weights"}
+
+    def labels(self) -> List[str]:
+        return self.grid.labels()
+
+    def __len__(self) -> int:
+        return self.n_cells
+
+    # ---------------------------------------------------- derived views ----
+
+    def final_objective(self) -> np.ndarray:
+        """(B,) final objective per cell."""
+        return np.asarray(self.objective)[:, -1]
+
+    def virtual_time(self) -> np.ndarray:
+        """(B, K) simulated wall-clock time of each event.
+
+        Recomputed from the grid's own pre-sampled randomness (the traces
+        are deterministic functions of it), via the jitted trace scans --
+        PIAG/BCD per bucket, federated per cell."""
+        import jax
+        import jax.numpy as jnp
+
+        if self.solver in ("piag", "bcd"):
+            from repro.core.engine import trace_scan
+            from repro.sweep.runners import run_bucketed
+
+            def run_bucket(b):
+                T = jnp.asarray(b.grid.service_times(b.width))
+                if b.uniform:
+                    return jax.jit(jax.vmap(
+                        lambda t: trace_scan(t).t_wall))(T)
+                act = jnp.asarray(b.grid.active_masks(b.width))
+                return jax.jit(jax.vmap(
+                    lambda t, a: trace_scan(t, active=a).t_wall))(T, act)
+
+            return np.asarray(run_bucketed(self.grid, run_bucket))
+
+        from repro.federated.events import generate_federated_trace
+        bs = 1
+        n_steps = None
+        if self.spec is not None:
+            if self.solver == "fedbuff":
+                bs = self.spec.solver.buffer_size
+            n_steps = self.spec.solver.n_steps
+        rows = [generate_federated_trace(
+            c.n_workers, self.n_events, clients=list(c.workers),
+            buffer_size=bs, seed=c.seed, n_steps=n_steps).t_wall
+            for c in self.cells]
+        return np.stack(rows)
+
+    def to_rows(self) -> List[Dict[str, Any]]:
+        """Per-cell records (the JSON shape ``launch.sweep`` emits)."""
+        obj = np.asarray(self.objective)
+        gam = np.asarray(self.gammas)
+        taus = np.asarray(self.taus)
+        clipped = np.asarray(self.clipped)
+        return [{
+            "label": lab,
+            "policy": c.policy_name,
+            "seed": c.seed,
+            "topology": c.topology_name,
+            "n_workers": c.n_workers,
+            "final_objective": float(obj[i, -1]),
+            "sum_gamma": float(gam[i].sum()),
+            "max_tau": int(taus[i].max()),
+            "clipped": int(clipped[i]),
+        } for i, (lab, c) in enumerate(zip(self.labels(), self.cells))]
+
+    # ------------------------------------------------ analysis bridges ----
+
+    def per_policy(self):
+        """Per-policy aggregation (see ``repro.analysis``)."""
+        from repro import analysis
+        return analysis.per_policy_summary(self.cells, self.objective,
+                                           self.gammas, self.clipped)
+
+    def clipped_summary(self):
+        from repro import analysis
+        return analysis.clipped_summary(self.clipped)
+
+    def time_to_tolerance(self, target: float, p_star: float = 0.0):
+        from repro import analysis
+        return analysis.time_to_tolerance(self.objective, target,
+                                          p_star=p_star)

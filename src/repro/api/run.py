@@ -1,0 +1,373 @@
+"""Compile an ``ExperimentSpec`` down to the existing runners.
+
+``resolve(spec)`` materializes the declarative axes -- problem, prox,
+policies (with the paper's tau-bar tuning protocol for the fixed family),
+topology factories, the ``SweepGrid`` -- and performs the build-time
+horizon validation.  ``run(spec)`` then dispatches on
+(solver, backend) to EXACTLY the code path that existed before the
+redesign:
+
+=========  ==========================  ===========================  =========================
+solver     solo                        batched                      sharded
+=========  ==========================  ===========================  =========================
+piag       ``core.piag.run_piag``      ``sweep.sweep_piag``         ``shard.sharded_sweep_piag``
+bcd        ``core.bcd.run_async_bcd``  ``sweep.sweep_bcd``          ``shard.sharded_sweep_bcd``
+fedasync   ``federated.run_fedasync``  ``sweep.sweep_fedasync``     ``shard.sharded_sweep_fedasync``
+fedbuff    ``federated.run_fedbuff``   ``sweep.sweep_fedbuff``      ``shard.sharded_sweep_fedbuff``
+=========  ==========================  ===========================  =========================
+
+The spec layer only routes -- argument-for-argument the calls match what
+the legacy conveniences (``sweep_piag_logreg`` etc.) made, so spec-routed
+rows are bitwise-identical to the runner they dispatch to
+(``tests/test_api.py`` pins all twelve combinations).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcd import run_async_bcd, sample_blocks
+from repro.core.engine import generate_trace, sample_service_times
+from repro.core.piag import run_piag
+from repro.core.problems import make_lasso, make_logreg
+from repro.core.prox import make_prox
+from repro.core.stepsize import make_policy
+from repro.federated.events import (generate_federated_trace,
+                                    heterogeneous_clients)
+from repro.federated.server import (_problem_pieces, run_fedasync,
+                                    run_fedbuff)
+from repro.sweep.grid import (SweepGrid, make_grid, measure_tau_bar,
+                              standard_topology_factories)
+from repro.sweep.runners import (sweep_bcd, sweep_fedasync, sweep_fedbuff,
+                                 sweep_piag)
+from repro.sweep.shard import (cell_mesh, sharded_sweep_bcd,
+                               sharded_sweep_fedasync,
+                               sharded_sweep_fedbuff, sharded_sweep_piag)
+
+from .results import Results
+from .spec import (FIXED_FAMILY, ExecutionSpec, ExperimentSpec, ProblemSpec,
+                   SolverSpec, check_horizon)
+
+__all__ = ["Resolved", "resolve", "run", "run_components", "component_spec"]
+
+_tmap = jax.tree_util.tree_map
+
+
+class Resolved(NamedTuple):
+    """The concrete objects a spec compiles to (pre-dispatch)."""
+
+    spec: ExperimentSpec
+    problem: Any
+    prox: Any
+    grid: SweepGrid
+    tau_bar: Optional[int]
+
+
+# -------------------------------------------------------------- resolve ----
+
+def _build_problem(spec: ExperimentSpec):
+    ps = spec.problem
+    if ps.problem is not None:
+        return ps.problem
+    maker = make_logreg if ps.kind == "logreg" else make_lasso
+    kwargs = dict(ps.params)
+    kwargs.setdefault("n_workers", spec.topology.width_max)
+    return maker(**kwargs)
+
+
+def _build_prox(spec: ExperimentSpec, problem):
+    ps = spec.problem
+    if ps.prox_op is not None:
+        return ps.prox_op
+    kwargs = dict(ps.prox_params)
+    if ps.prox == "l1":
+        kwargs.setdefault("lam", problem.lam1)
+    return make_prox(ps.prox, **kwargs)
+
+
+def _build_topologies(spec: ExperimentSpec) -> Dict[str, Any]:
+    ts = spec.topology
+    if ts.kind == "custom":
+        topos = dict(ts.topologies)
+    elif ts.kind == "edge":
+        params = dict(ts.params)
+        seed = params.pop("seed", ts.seed)  # params may pin its own seed
+        topos = {"edge": lambda n, _p=params: heterogeneous_clients(
+            n, seed=seed, **_p)}
+    else:
+        topos = standard_topology_factories(ts.seed)
+    if ts.names is not None:
+        unknown = set(ts.names) - set(topos)
+        if unknown:
+            raise ValueError(f"unknown topology names {sorted(unknown)}; "
+                             f"available: {sorted(topos)}")
+        topos = {n: topos[n] for n in ts.names}
+    return topos
+
+
+def _auto_gamma_prime(spec: ExperimentSpec, problem) -> float:
+    if spec.solver.name == "piag":
+        return 0.99 / problem.L
+    if spec.solver.name == "bcd":
+        return 0.99 / problem.block_smoothness(spec.solver.m)
+    return 0.6  # federated base mixing weight alpha
+
+
+def _measure_tau_bar(spec: ExperimentSpec, topos) -> int:
+    """Worst-case trace delay over every (topology, width, seed) cell --
+    the paper's protocol for tuning the fixed family, reused for horizon
+    validation.  Worker traces only (federated staleness is not a
+    service-time trace property)."""
+    ts = spec.topology
+    if ts.n_workers is not None:
+        menu = {f"{tn}/w{int(w)}": f(int(w))
+                for tn, f in topos.items() for w in ts.n_workers}
+    else:
+        menu = {tn: ws for tn, ws in topos.items()}
+    return measure_tau_bar(menu, list(spec.policies.seeds), spec.n_events)
+
+
+def _build_policies(spec: ExperimentSpec, problem, tau_bar: Optional[int]):
+    pg = spec.policies
+    if pg.policies is not None:
+        return dict(pg.policies)
+    gp = pg.gamma_prime if pg.gamma_prime is not None \
+        else _auto_gamma_prime(spec, problem)
+    out = {}
+    for name in pg.names:
+        kwargs = dict(pg.policy_kwargs.get(name, {}))
+        if name in FIXED_FAMILY and "tau_bound" not in kwargs:
+            bound = pg.tau_bound if pg.tau_bound is not None else tau_bar
+            if bound is None:
+                raise ValueError(
+                    f"policy {name!r} needs a worst-case delay bound: set "
+                    "PolicyGridSpec.tau_bound or enable DelaySpec.measure")
+            kwargs["tau_bound"] = int(bound)
+        out[name] = make_policy(name, gp, **kwargs)
+    return out
+
+
+def _validate_horizon(spec: ExperimentSpec, tau_bar: Optional[int]) -> None:
+    exp = spec.delay.expected_max_delay
+    check_horizon(spec.solver.horizon, tau_bar if exp is None else exp)
+
+
+def resolve(spec: ExperimentSpec) -> Resolved:
+    """Materialize problem, prox, policies and grid; validate the horizon.
+
+    Fixed-family policies without an explicit ``tau_bound`` trigger a
+    tau-bar measurement over the grid's own traces; so does horizon
+    validation for PIAG/BCD when no ``expected_max_delay`` is declared
+    (one measurement serves both).
+    """
+    problem = _build_problem(spec)
+    prox = _build_prox(spec, problem)
+
+    if spec.grid is not None:
+        tau_bar = None
+        if spec.validate_horizon:
+            _validate_horizon(spec, tau_bar)
+        return Resolved(spec, problem, prox, spec.grid, tau_bar)
+
+    topos = _build_topologies(spec)
+    pg = spec.policies
+    needs_bound = (pg.policies is None and pg.tau_bound is None
+                   and any(n in FIXED_FAMILY for n in pg.names))
+    worker_solver = not spec.solver.federated
+    needs_measure = worker_solver and (
+        (needs_bound and spec.delay.measure)
+        or (spec.validate_horizon and spec.delay.measure
+            and spec.delay.expected_max_delay is None))
+    tau_bar = _measure_tau_bar(spec, topos) if needs_measure else None
+    if spec.solver.federated:
+        tau_bar = 0  # fixed baselines are not the federated story
+    elif needs_bound and tau_bar is None:
+        raise ValueError(
+            "fixed-family policies need tau_bound (or DelaySpec.measure)")
+
+    policies = _build_policies(spec, problem, tau_bar)
+    grid = make_grid(policies, list(pg.seeds), topos, spec.n_events,
+                     n_workers=(list(spec.topology.n_workers)
+                                if spec.topology.n_workers is not None
+                                else None))
+    if spec.validate_horizon and worker_solver:
+        _validate_horizon(spec, tau_bar)
+    elif spec.validate_horizon:
+        _validate_horizon(spec, None)  # declared bound only
+    return Resolved(spec, problem, prox, grid, tau_bar)
+
+
+# ------------------------------------------------------------- dispatch ----
+
+def _slice_rows(tree, n: int):
+    return _tmap(lambda leaf: leaf[:n], tree)
+
+
+def _stack_results(rows):
+    return _tmap(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *rows)
+
+
+def _mesh_for(spec: ExperimentSpec):
+    ex = spec.execution
+    if ex.mesh is not None:
+        return ex.mesh
+    if ex.devices is not None:
+        return cell_mesh(jax.devices()[:int(ex.devices)])
+    return cell_mesh()
+
+
+def _piag_pieces(r: Resolved):
+    problem = r.problem
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    return (lambda x, A, b: problem.worker_loss(x, A, b)), x0, (Aw, bw)
+
+
+def _run_piag(r: Resolved):
+    spec = r.spec
+    loss, x0, wd = _piag_pieces(r)
+    h, utm = spec.solver.horizon, spec.delay.use_tau_max
+    bw = spec.execution.bucket_widths
+    backend = spec.execution.backend
+    if backend == "batched":
+        return sweep_piag(loss, x0, wd, r.grid, r.prox,
+                          objective=r.problem.P, horizon=h, use_tau_max=utm,
+                          bucket_widths=bw)
+    if backend == "sharded":
+        return sharded_sweep_piag(loss, x0, wd, r.grid, r.prox,
+                                  objective=r.problem.P, horizon=h,
+                                  use_tau_max=utm, mesh=_mesh_for(spec),
+                                  bucket_widths=bw)
+    rows = []
+    for c in r.grid.cells:
+        T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
+        tr = generate_trace(T)
+        rows.append(run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
+                             c.policy, r.prox, objective=r.problem.P,
+                             horizon=h, use_tau_max=utm))
+    return _stack_results(rows)
+
+
+def _run_bcd(r: Resolved):
+    spec = r.spec
+    problem, m, h = r.problem, spec.solver.m, spec.solver.horizon
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    bw = spec.execution.bucket_widths
+    backend = spec.execution.backend
+    if backend == "batched":
+        return sweep_bcd(problem.grad_f, problem.P, x0, m, r.grid, r.prox,
+                         horizon=h, bucket_widths=bw)
+    if backend == "sharded":
+        return sharded_sweep_bcd(problem.grad_f, problem.P, x0, m, r.grid,
+                                 r.prox, horizon=h, mesh=_mesh_for(spec),
+                                 bucket_widths=bw)
+    rows = []
+    for c in r.grid.cells:
+        T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
+        tr = generate_trace(T, kind="shared_memory")
+        blocks = sample_blocks(m, r.grid.n_events, seed=c.seed)
+        rows.append(run_async_bcd(problem.grad_f, problem.P, x0, m, tr,
+                                  blocks, c.policy, r.prox, horizon=h))
+    return _stack_results(rows)
+
+
+def _run_fed(r: Resolved):
+    spec = r.spec
+    sv = spec.solver
+    update, x0, data = _problem_pieces(r.problem, r.prox, sv.local_lr)
+    h, n_steps = sv.horizon, sv.n_steps
+    bs = sv.buffer_size if sv.name == "fedbuff" else 1
+    bw = spec.execution.bucket_widths
+    backend = spec.execution.backend
+    if backend == "batched":
+        if sv.name == "fedasync":
+            return sweep_fedasync(update, x0, data, r.grid,
+                                  objective=r.problem.P, horizon=h,
+                                  reference=spec.execution.reference,
+                                  n_steps=n_steps, bucket_widths=bw)
+        return sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
+                             buffer_size=bs, objective=r.problem.P,
+                             horizon=h, reference=spec.execution.reference,
+                             n_steps=n_steps, bucket_widths=bw)
+    if backend == "sharded":
+        mesh = _mesh_for(spec)
+        if sv.name == "fedasync":
+            return sharded_sweep_fedasync(update, x0, data, r.grid,
+                                          objective=r.problem.P,
+                                          buffer_size=1, horizon=h,
+                                          n_steps=n_steps, mesh=mesh,
+                                          bucket_widths=bw)
+        return sharded_sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
+                                     buffer_size=bs, objective=r.problem.P,
+                                     horizon=h, n_steps=n_steps, mesh=mesh,
+                                     bucket_widths=bw)
+    rows = []
+    for c in r.grid.cells:
+        tr = generate_federated_trace(c.n_workers, r.grid.n_events,
+                                      clients=list(c.workers),
+                                      buffer_size=bs, seed=c.seed,
+                                      n_steps=n_steps)
+        cd = _slice_rows(data, c.n_workers)
+        if sv.name == "fedasync":
+            rows.append(run_fedasync(update, x0, cd, tr, c.policy,
+                                     objective=r.problem.P, horizon=h))
+        else:
+            rows.append(run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
+                                    buffer_size=bs, objective=r.problem.P,
+                                    horizon=h))
+    return _stack_results(rows)
+
+
+_SOLVER_DISPATCH: Dict[str, Callable[[Resolved], Any]] = {
+    "piag": _run_piag,
+    "bcd": _run_bcd,
+    "fedasync": _run_fed,
+    "fedbuff": _run_fed,
+}
+
+
+def run(spec: ExperimentSpec) -> Results:
+    """The single entry point: resolve the spec, dispatch to the runner for
+    (solver, backend), return the unified ``Results`` table."""
+    r = resolve(spec)
+    t0 = time.perf_counter()
+    raw = jax.block_until_ready(_SOLVER_DISPATCH[spec.solver.name](r))
+    elapsed = time.perf_counter() - t0
+    return Results(solver=spec.solver.name, backend=spec.execution.backend,
+                   grid=r.grid, raw=raw, elapsed_s=elapsed,
+                   tau_bar=r.tau_bar, spec=spec)
+
+
+# -------------------------------------------------- component escape ----
+
+def component_spec(solver: str, backend: str, *, problem, grid, prox,
+                   mesh=None, reference: bool = False,
+                   **solver_kwargs) -> ExperimentSpec:
+    """A spec from prebuilt components (problem + grid + prox), bypassing
+    the declarative build.  This is the form the legacy shims use; horizon
+    validation and tau-bar measurement are off so shim behavior matches the
+    pre-redesign runners exactly (including deliberate tiny-horizon runs).
+    """
+    from .spec import DelaySpec
+    return ExperimentSpec(
+        problem=ProblemSpec(kind="custom", problem=problem, prox_op=prox),
+        solver=SolverSpec(name=solver, **solver_kwargs),
+        execution=ExecutionSpec(backend=backend, mesh=mesh,
+                                reference=reference),
+        delay=DelaySpec(measure=False),
+        n_events=grid.n_events,
+        grid=grid,
+        validate_horizon=False,
+    )
+
+
+def run_components(solver: str, backend: str, *, problem, grid, prox,
+                   mesh=None, reference: bool = False,
+                   **solver_kwargs) -> Results:
+    """``run`` over prebuilt components (see ``component_spec``)."""
+    return run(component_spec(solver, backend, problem=problem, grid=grid,
+                              prox=prox, mesh=mesh, reference=reference,
+                              **solver_kwargs))

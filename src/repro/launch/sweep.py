@@ -1,5 +1,9 @@
-"""CLI driver for vectorized policy x seed x topology (x worker-count)
-sweeps, optionally sharded across devices.
+"""Spec-driven CLI for policy x seed x topology (x worker-count) sweeps.
+
+Flags build a ``repro.api.ExperimentSpec`` (or ``--spec`` loads one from a
+Python file), ``repro.api.run`` executes it on the requested backend, and
+the per-policy summary comes from ``repro.analysis`` -- no solver- or
+backend-specific code lives here anymore.
 
     PYTHONPATH=src python -m repro.launch.sweep \
         --solver piag --policies adaptive1,adaptive2,fixed \
@@ -8,54 +12,93 @@ sweeps, optionally sharded across devices.
     # ragged worker-count axis + device sharding (forced host devices need
     # XLA_FLAGS=--xla_force_host_platform_device_count=N in the environment)
     PYTHONPATH=src python -m repro.launch.sweep \
-        --solver piag --n-workers 4,8,16 --shard
+        --solver piag --n-workers 4,8,16 --backend sharded
+
+    # per-cell solo runs (the pre-sweep reference path)
+    PYTHONPATH=src python -m repro.launch.sweep --solver bcd --backend solo
 
     # federated sweeps (fused jitted trace generation + server scan)
     PYTHONPATH=src python -m repro.launch.sweep \
         --solver fedbuff --policies hinge,poly,constant --buffer-size 4
 
-Builds a ``repro.sweep.SweepGrid`` over the requested policies, seeds and
-the standard worker/client topologies, runs the whole grid as one batched
-program per bucket (sharded over all devices with ``--shard``), and prints a
-per-policy summary (mean/min final objective, step-size integral, horizon-
-clip counts).  The paper's figures fall out of grids like these; see
-``benchmarks/sweep_grid.py`` and ``benchmarks/mega_grid.py`` for the timed
-comparisons.
+    # a spec file: any Python file defining SPEC (an ExperimentSpec) or
+    # make_spec() -> ExperimentSpec; flags are ignored except --json
+    PYTHONPATH=src python -m repro.launch.sweep --spec examples/spec_sweep.py
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
+import runpy
 from pathlib import Path
-
-import numpy as np
 
 import jax
 
-from repro.core import L1, make_logreg, make_policy
-from repro.federated.events import heterogeneous_clients
-from repro.sweep import (make_grid, measure_tau_bar,
-                         sharded_sweep_piag_logreg,
-                         standard_topology_factories, sweep_bcd_logreg,
-                         sweep_fedasync_problem, sweep_fedbuff_problem,
-                         sweep_piag_logreg)
-
-FIXED_FAMILY = ("fixed", "sun_deng", "davis")
+from repro import analysis, api
 
 
-def build_policies(names, gp: float, tau_bar: int):
-    out = {}
-    for name in names:
-        kwargs = {"tau_bound": tau_bar} if name in FIXED_FAMILY else {}
-        out[name] = make_policy(name, gp, **kwargs)
-    return out
+def load_spec(path: str) -> api.ExperimentSpec:
+    """Load an ``ExperimentSpec`` from a Python file: either a module-level
+    ``SPEC`` or a ``make_spec()`` factory."""
+    ns = runpy.run_path(path)
+    spec = ns.get("SPEC")
+    if spec is None and callable(ns.get("make_spec")):
+        spec = ns["make_spec"]()
+    if not isinstance(spec, api.ExperimentSpec):
+        raise SystemExit(
+            f"{path} must define SPEC (an api.ExperimentSpec) or "
+            "make_spec() returning one")
+    return spec
+
+
+def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
+    federated = a.solver in ("fedasync", "fedbuff")
+    policy_names = tuple((a.policies or
+                          ("hinge,poly,constant" if federated
+                           else "adaptive1,adaptive2,fixed")).split(","))
+    widths = tuple(int(w) for w in a.n_workers.split(",")) \
+        if a.n_workers else (a.workers,)
+    return api.ExperimentSpec(
+        problem=api.ProblemSpec(
+            kind="logreg",
+            params=dict(n_samples=a.samples, dim=a.dim, seed=0)),
+        solver=api.SolverSpec(name=a.solver, horizon=a.horizon, m=a.blocks,
+                              eta=a.eta, buffer_size=a.buffer_size),
+        topology=api.TopologySpec(kind="edge" if federated else "standard",
+                                  n_workers=widths),
+        # the federated base mixing weight (0.6) and the worker gamma' =
+        # 0.99/L defaults are the resolver's auto rule; fixed-family
+        # baselines are tuned from the measured tau-bar (worker solvers) or
+        # pinned at 0 (federated -- not the federated story)
+        policies=api.PolicyGridSpec(names=policy_names,
+                                    seeds=tuple(range(a.seeds))),
+        execution=api.ExecutionSpec(backend=a.backend),
+        n_events=a.events)
+
+
+def print_summary(res: api.Results) -> None:
+    summaries = analysis.summarize(res)
+    clip = analysis.clipped_summary(res.clipped)
+    if clip["cells_clipped"]:
+        print(f"WARNING: {clip['cells_clipped']} cells clipped delays at "
+              "the policy horizon (H - 1); raise --horizon")
+    print(f"{'policy':<16} {'mean P_final':>12} {'min P_final':>12} "
+          f"{'mean sum(gamma)':>16} {'clipped':>8}")
+    for pn, s in summaries.items():
+        print(f"{pn:<16} {s.mean_final:>12.5f} {s.min_final:>12.5f} "
+              f"{s.mean_sum_gamma:>16.3f} {s.clipped_events:>8}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--solver", choices=["piag", "bcd", "fedasync", "fedbuff"],
-                    default="piag")
+    ap.add_argument("--spec", default=None,
+                    help="Python file defining SPEC or make_spec(); "
+                    "overrides every flag except --json")
+    ap.add_argument("--solver", choices=list(api.SOLVERS), default="piag")
+    ap.add_argument("--backend", choices=list(api.BACKENDS),
+                    default="batched")
+    ap.add_argument("--shard", action="store_true",
+                    help="alias for --backend sharded (back-compat)")
     ap.add_argument("--policies", default=None,
                     help="comma-separated names from core.stepsize.POLICIES "
                     "(default: adaptive1,adaptive2,fixed; federated: "
@@ -66,100 +109,43 @@ def main() -> None:
     ap.add_argument("--n-workers", default=None,
                     help="comma-separated worker counts: grows the ragged "
                     "n_workers grid axis (overrides --workers)")
-    ap.add_argument("--shard", action="store_true",
-                    help="shard the cell axis across all devices "
-                    "(piag only for now)")
     ap.add_argument("--samples", type=int, default=800)
     ap.add_argument("--dim", type=int, default=100)
     ap.add_argument("--blocks", type=int, default=20, help="bcd only")
+    ap.add_argument("--eta", type=float, default=0.5,
+                    help="fedbuff server rate")
     ap.add_argument("--buffer-size", type=int, default=1,
                     help="fedbuff |R| (fedasync forces 1)")
     ap.add_argument("--horizon", type=int, default=4096,
                     help="step-size window-sum horizon H (largest "
-                    "representable delay is H - 1; raise when cells clip)")
+                    "representable delay is H - 1; specs whose measured "
+                    "delay bound exceeds it fail fast)")
     ap.add_argument("--json", default=None, help="write per-cell results here")
     a = ap.parse_args()
+    if a.shard:
+        a.backend = "sharded"
 
-    federated = a.solver in ("fedasync", "fedbuff")
-    policy_names = (a.policies or
-                    ("hinge,poly,constant" if federated
-                     else "adaptive1,adaptive2,fixed")).split(",")
-    widths = ([int(w) for w in a.n_workers.split(",")]
-              if a.n_workers else [a.workers])
-    w_max = max(widths)
+    spec = load_spec(a.spec) if a.spec else spec_from_flags(a)
 
-    prob = make_logreg(a.samples, a.dim, n_workers=w_max, seed=0)
-    prox = L1(lam=prob.lam1)
-
-    if federated:
-        gp = 0.6
-        factories = {"edge": lambda n: heterogeneous_clients(n, seed=0)}
-        tau_bar = 0  # fixed-family baselines are not the federated story
-        grid = make_grid(build_policies(policy_names, gp, tau_bar),
-                         list(range(a.seeds)), factories, a.events,
-                         n_workers=widths)
-    else:
-        gp = 0.99 / (prob.L if a.solver == "piag"
-                     else prob.block_smoothness(a.blocks))
-        factories = standard_topology_factories()
-        tau_bar = measure_tau_bar(
-            {f"{tn}/w{w}": f(w) for tn, f in factories.items()
-             for w in widths},
-            list(range(a.seeds)), a.events)
-        grid = make_grid(build_policies(policy_names, gp, tau_bar),
-                         list(range(a.seeds)), factories, a.events,
-                         n_workers=widths)
-
-    n_dev = len(jax.devices())
-    print(f"sweep: {len(grid)} cells ({','.join(policy_names)} x {a.seeds} "
-          f"seeds x {len(factories)} topologies x widths {widths}), "
-          f"{a.events} events, tau_bar={tau_bar}, devices={n_dev}"
-          f"{' [sharded]' if a.shard else ''}")
-
-    t0 = time.perf_counter()
-    if a.solver == "piag":
-        run = sharded_sweep_piag_logreg if a.shard else sweep_piag_logreg
-        res = jax.block_until_ready(run(prob, grid, prox, horizon=a.horizon))
-    elif a.solver == "bcd":
-        res = jax.block_until_ready(sweep_bcd_logreg(prob, grid, prox,
-                                                     m=a.blocks,
-                                                     horizon=a.horizon))
-    elif a.solver == "fedasync":
-        res = jax.block_until_ready(sweep_fedasync_problem(
-            prob, grid, prox, horizon=a.horizon))
-    else:
-        res = jax.block_until_ready(sweep_fedbuff_problem(
-            prob, grid, prox, eta=0.5, buffer_size=a.buffer_size,
-            horizon=a.horizon))
-    dt = time.perf_counter() - t0
-    obj = np.asarray(res.objective)
-    gam = np.asarray(res.weights if federated else res.gammas)
-    clipped = np.asarray(res.clipped)
-    print(f"one batched program per bucket: {dt:.2f}s "
-          f"({dt / len(grid) * 1e3:.1f} ms/cell incl. compile)")
-    if np.any(clipped > 0):
-        print(f"WARNING: {int(np.sum(clipped > 0))} cells clipped delays at "
-              "the policy horizon (H - 1); raise --horizon")
-
-    print(f"{'policy':<16} {'mean P_final':>12} {'min P_final':>12} "
-          f"{'mean sum(gamma)':>16} {'clipped':>8}")
-    for pn in dict.fromkeys(c.policy_name for c in grid.cells):
-        rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
-        print(f"{pn:<16} {obj[rows, -1].mean():>12.5f} "
-              f"{obj[rows, -1].min():>12.5f} {gam[rows].sum(1).mean():>16.3f} "
-              f"{int(clipped[rows].sum()):>8}")
+    res = api.run(spec)
+    grid, n_dev = res.grid, len(jax.devices())
+    policy_names = list(dict.fromkeys(c.policy_name for c in grid.cells))
+    widths = sorted({c.n_workers for c in grid.cells})
+    print(f"sweep[{res.solver}/{res.backend}]: {len(grid)} cells "
+          f"({','.join(policy_names)} x "
+          f"{len({c.seed for c in grid.cells})} seeds x widths {widths}), "
+          f"{grid.n_events} events, tau_bar={res.tau_bar}, devices={n_dev}")
+    print(f"{res.backend} backend: {res.elapsed_s:.2f}s "
+          f"({res.elapsed_s / len(grid) * 1e3:.1f} ms/cell incl. compile)")
+    print_summary(res)
 
     if a.json:
-        cells = [{"label": lab, "final_objective": float(obj[i, -1]),
-                  "sum_gamma": float(gam[i].sum()),
-                  "max_tau": int(np.asarray(res.taus)[i].max()),
-                  "clipped": int(clipped[i]),
-                  "n_workers": grid.cells[i].n_workers}
-                 for i, lab in enumerate(grid.labels())]
         Path(a.json).write_text(json.dumps(
-            {"solver": a.solver, "events": a.events, "tau_bar": tau_bar,
-             "devices": n_dev, "sharded": bool(a.shard), "seconds": dt,
-             "cells": cells}, indent=2) + "\n")
+            {"solver": res.solver, "backend": res.backend,
+             "events": grid.n_events, "tau_bar": res.tau_bar,
+             "devices": n_dev, "seconds": res.elapsed_s,
+             "clipped": analysis.clipped_summary(res.clipped),
+             "cells": res.to_rows()}, indent=2) + "\n")
         print(f"wrote {a.json}")
 
 

@@ -28,6 +28,7 @@ axis across devices.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -54,6 +55,16 @@ __all__ = ["make_sweep_piag", "sweep_piag", "sweep_piag_logreg",
 
 
 # ------------------------------------------------------------- plumbing ----
+
+def _warn_legacy(name: str) -> None:
+    """The problem-level conveniences are shims over ``repro.api`` now; the
+    spec API is the documented entry point.  Rows stay bitwise-equal (the
+    shim routes to the exact same runner), only the surface is deprecated."""
+    warnings.warn(
+        f"repro.sweep.{name} is deprecated; build an "
+        "api.ExperimentSpec (or api.component_spec) and call repro.api.run "
+        "instead", DeprecationWarning, stacklevel=3)
+
 
 def run_bucketed(grid: SweepGrid, run_bucket: Callable,
                  bucket_widths: Optional[Sequence[int]] = None):
@@ -123,9 +134,11 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
 
 def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                prox: ProxOp, objective: Optional[Callable] = None,
-               horizon: int = 4096, use_tau_max: bool = True) -> PIAGResult:
+               horizon: int = 4096, use_tau_max: bool = True,
+               bucket_widths: Optional[Sequence[int]] = None) -> PIAGResult:
     """Run PIAG on every cell of ``grid`` in one batched program per
-    bucket (a homogeneous grid is exactly one program)."""
+    bucket (a homogeneous grid is exactly one program).  ``bucket_widths``
+    overrides the ragged grid's padded-width menu (``SweepGrid.buckets``)."""
 
     def run_bucket(b: SweepBucket):
         wd = _slice_workers(worker_data, b.width)
@@ -138,21 +151,23 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
             return fn(T, pp)
         return fn(T, jnp.asarray(b.grid.active_masks(b.width)), pp)
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
                       horizon: int = 4096) -> PIAGResult:
-    """Grid analogue of ``core.piag.run_piag_logreg`` (the Fig. 2 cell).
+    """DEPRECATED shim over ``repro.api`` (grid analogue of
+    ``core.piag.run_piag_logreg``); rows are bitwise-equal to the
+    spec-routed run, which dispatches back to ``sweep_piag`` with the same
+    arguments.
 
     For ragged grids the problem must be built with ``n_workers`` >= the
     grid's widest cell; a cell with ``w`` workers runs on the first ``w``
     shards of that fixed partition (worker-participation semantics)."""
-    Aw, bw = problem.worker_slices()
-    x0 = jnp.zeros((problem.dim,), jnp.float32)
-    return sweep_piag(lambda x, A, b: problem.worker_loss(x, A, b), x0,
-                      (Aw, bw), grid, prox, objective=problem.P,
-                      horizon=horizon)
+    _warn_legacy("sweep_piag_logreg")
+    from repro.api import run_components
+    return run_components("piag", "batched", problem=problem, grid=grid,
+                          prox=prox, horizon=horizon).raw
 
 
 # ----------------------------------------------------------- Async-BCD ----
@@ -185,7 +200,8 @@ def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
 
 
 def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
-              grid: SweepGrid, prox: ProxOp, horizon: int = 4096) -> BCDResult:
+              grid: SweepGrid, prox: ProxOp, horizon: int = 4096,
+              bucket_widths: Optional[Sequence[int]] = None) -> BCDResult:
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
     runs."""
@@ -202,14 +218,17 @@ def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
             return fn(T, blocks, pp)
         return fn(T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp)
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 def sweep_bcd_logreg(problem, grid: SweepGrid, prox: ProxOp, m: int = 20,
                      horizon: int = 4096) -> BCDResult:
-    x0 = jnp.zeros((problem.dim,), jnp.float32)
-    return sweep_bcd(problem.grad_f, problem.P, x0, m, grid, prox,
-                     horizon=horizon)
+    """DEPRECATED shim over ``repro.api``; bitwise-equal rows (the spec
+    routes back to ``sweep_bcd`` with the same arguments)."""
+    _warn_legacy("sweep_bcd_logreg")
+    from repro.api import run_components
+    return run_components("bcd", "batched", problem=problem, grid=grid,
+                          prox=prox, m=m, horizon=horizon).raw
 
 
 # ------------------------------------------------- FedAsync / FedBuff ----
@@ -354,8 +373,8 @@ def _stack_fed_events(grid: SweepGrid, buffer_size: int,
 
 
 def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
-               buffer_size: int, reference: bool,
-               n_steps: Optional[int]) -> FedResult:
+               buffer_size: int, reference: bool, n_steps: Optional[int],
+               bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
     """Shared driver for ``sweep_fedasync`` / ``sweep_fedbuff``."""
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
@@ -373,14 +392,15 @@ def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
         _check_fed_diag(n_up, exhausted, K, S)
         return res
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    objective: Optional[Callable] = None,
                    buffer_size: int = 1, horizon: int = 4096,
                    reference: bool = False,
-                   n_steps: Optional[int] = None) -> FedResult:
+                   n_steps: Optional[int] = None,
+                   bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
     ``ClientModel`` lists.
 
@@ -401,14 +421,15 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                                          n_steps=S)
 
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
-                      reference, n_steps)
+                      reference, n_steps, bucket_widths=bucket_widths)
 
 
 def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                   eta: float = 1.0, buffer_size: int = 1,
                   objective: Optional[Callable] = None, horizon: int = 4096,
                   reference: bool = False,
-                  n_steps: Optional[int] = None) -> FedResult:
+                  n_steps: Optional[int] = None,
+                  bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
     """Run FedBuff on every cell: fused jitted trace generation + buffered
     delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
     program per bucket; ``reference=True`` as in ``sweep_fedasync``."""
@@ -422,19 +443,20 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                                   n_steps=S)
 
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
-                      reference, n_steps)
+                      reference, n_steps, bucket_widths=bucket_widths)
 
 
 def sweep_fedasync_problem(problem, grid: SweepGrid, prox: ProxOp,
                            local_lr: Optional[float] = None,
                            horizon: int = 4096, reference: bool = False,
                            n_steps: Optional[int] = None) -> FedResult:
-    """Grid analogue of ``federated.server.run_fedasync_problem``."""
-    from repro.federated.server import _problem_pieces
-    update, x0, data = _problem_pieces(problem, prox, local_lr)
-    return sweep_fedasync(update, x0, data, grid, objective=problem.P,
-                          horizon=horizon, reference=reference,
-                          n_steps=n_steps)
+    """DEPRECATED shim over ``repro.api`` (grid analogue of
+    ``federated.server.run_fedasync_problem``); bitwise-equal rows."""
+    _warn_legacy("sweep_fedasync_problem")
+    from repro.api import run_components
+    return run_components("fedasync", "batched", problem=problem, grid=grid,
+                          prox=prox, local_lr=local_lr, horizon=horizon,
+                          reference=reference, n_steps=n_steps).raw
 
 
 def sweep_fedbuff_problem(problem, grid: SweepGrid, prox: ProxOp,
@@ -442,10 +464,11 @@ def sweep_fedbuff_problem(problem, grid: SweepGrid, prox: ProxOp,
                           local_lr: Optional[float] = None,
                           horizon: int = 4096, reference: bool = False,
                           n_steps: Optional[int] = None) -> FedResult:
-    """Grid analogue of ``federated.server.run_fedbuff_problem``."""
-    from repro.federated.server import _problem_pieces
-    update, x0, data = _problem_pieces(problem, prox, local_lr)
-    return sweep_fedbuff(update, x0, data, grid, eta=eta,
-                         buffer_size=buffer_size, objective=problem.P,
-                         horizon=horizon, reference=reference,
-                         n_steps=n_steps)
+    """DEPRECATED shim over ``repro.api`` (grid analogue of
+    ``federated.server.run_fedbuff_problem``); bitwise-equal rows."""
+    _warn_legacy("sweep_fedbuff_problem")
+    from repro.api import run_components
+    return run_components("fedbuff", "batched", problem=problem, grid=grid,
+                          prox=prox, eta=eta, buffer_size=buffer_size,
+                          local_lr=local_lr, horizon=horizon,
+                          reference=reference, n_steps=n_steps).raw

@@ -62,16 +62,23 @@ def cell_mesh(devices: Optional[Sequence] = None) -> Mesh:
 
 
 def round_robin_pad(n_cells: int, n_devices: int) -> np.ndarray:
-    """Index map of length ``ceil(B / D) * D`` cycling through the B cells.
+    """Index map of length ``max(ceil(B / D), 2) * D`` (the 2 only on
+    multi-device meshes) cycling through the B cells.
 
     Gathering the stacked inputs through this map pads the batch to a device
     multiple with REPLAYED cells (not zeros), so every shard keeps identical
     shapes and live work; callers drop rows ``>= n_cells`` on the way out.
+
+    Multi-device meshes are padded to >= 2 cells per device: a per-shard
+    batch of exactly 1 makes XLA's sharding propagation reject the
+    ``while``-loop trace scan on jax 0.4 ("tile_assignment should have N
+    devices" on a degenerate ``devices=[0,1]`` sharding), so small grids
+    replay one extra round instead of crashing.
     """
     if n_cells < 1:
         raise ValueError("empty grid")
-    padded = -(-n_cells // n_devices) * n_devices
-    return np.arange(padded) % n_cells
+    per_dev = max(-(-n_cells // n_devices), 2 if n_devices > 1 else 1)
+    return np.arange(per_dev * n_devices) % n_cells
 
 
 def shard_cells(vmapped_fn: Callable, mesh: Mesh, n_args: int,
@@ -130,7 +137,9 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                        grid: SweepGrid, prox: ProxOp,
                        objective: Optional[Callable] = None,
                        horizon: int = 4096, use_tau_max: bool = True,
-                       mesh: Optional[Mesh] = None) -> PIAGResult:
+                       mesh: Optional[Mesh] = None,
+                       bucket_widths: Optional[Sequence[int]] = None
+                       ) -> PIAGResult:
     """``sweep_piag`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
 
@@ -144,18 +153,20 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                 (T, jnp.asarray(b.grid.active_masks(b.width)), pp))
         return _run_sharded_bucket(cell, mesh, args, len(b.grid))
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 def sharded_sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
                               horizon: int = 4096,
                               mesh: Optional[Mesh] = None) -> PIAGResult:
-    """Sharded twin of ``sweep_piag_logreg``."""
-    Aw, bw = problem.worker_slices()
-    x0 = jnp.zeros((problem.dim,), jnp.float32)
-    return sharded_sweep_piag(lambda x, A, b: problem.worker_loss(x, A, b),
-                              x0, (Aw, bw), grid, prox, objective=problem.P,
-                              horizon=horizon, mesh=mesh)
+    """DEPRECATED shim over ``repro.api`` (sharded twin of
+    ``sweep_piag_logreg``); bitwise-equal rows -- the spec routes back to
+    ``sharded_sweep_piag`` with the same arguments."""
+    from .runners import _warn_legacy
+    _warn_legacy("sharded_sweep_piag_logreg")
+    from repro.api import run_components
+    return run_components("piag", "sharded", problem=problem, grid=grid,
+                          prox=prox, horizon=horizon, mesh=mesh).raw
 
 
 # ----------------------------------------------------------- Async-BCD ----
@@ -173,7 +184,9 @@ def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
 
 def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                       grid: SweepGrid, prox: ProxOp, horizon: int = 4096,
-                      mesh: Optional[Mesh] = None) -> BCDResult:
+                      mesh: Optional[Mesh] = None,
+                      bucket_widths: Optional[Sequence[int]] = None
+                      ) -> BCDResult:
     """``sweep_bcd`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
 
@@ -189,14 +202,16 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                 (T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp))
         return _run_sharded_bucket(cell, mesh, args, len(b.grid))
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 # ------------------------------------------------- FedAsync / FedBuff ----
 
 def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
                        buffer_size: int, n_steps: Optional[int],
-                       mesh: Optional[Mesh]) -> FedResult:
+                       mesh: Optional[Mesh],
+                       bucket_widths: Optional[Sequence[int]] = None
+                       ) -> FedResult:
     mesh = cell_mesh() if mesh is None else mesh
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
@@ -211,7 +226,7 @@ def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
         _check_fed_diag(n_up, exhausted, K, S)
         return res
 
-    return run_bucketed(grid, run_bucket)
+    return run_bucketed(grid, run_bucket, bucket_widths)
 
 
 def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
@@ -219,13 +234,15 @@ def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
                            objective: Optional[Callable] = None,
                            buffer_size: int = 1, horizon: int = 4096,
                            n_steps: Optional[int] = None,
-                           mesh: Optional[Mesh] = None) -> FedResult:
+                           mesh: Optional[Mesh] = None,
+                           bucket_widths: Optional[Sequence[int]] = None
+                           ) -> FedResult:
     """``sweep_fedasync`` (fused path) with the cell axis sharded."""
     def adapter_for(cd):
         return _fedasync_scan_adapter(client_update, x0, cd, objective,
                                       horizon)
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
-                              n_steps, mesh)
+                              n_steps, mesh, bucket_widths=bucket_widths)
 
 
 def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
@@ -234,10 +251,12 @@ def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
                           objective: Optional[Callable] = None,
                           horizon: int = 4096,
                           n_steps: Optional[int] = None,
-                          mesh: Optional[Mesh] = None) -> FedResult:
+                          mesh: Optional[Mesh] = None,
+                          bucket_widths: Optional[Sequence[int]] = None
+                          ) -> FedResult:
     """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
     def adapter_for(cd):
         return _fedbuff_scan_adapter(client_update, x0, cd, objective,
                                      horizon, eta, buffer_size)
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
-                              n_steps, mesh)
+                              n_steps, mesh, bucket_widths=bucket_widths)

@@ -1,0 +1,121 @@
+"""`repro.analysis` pins: the aggregators must reproduce the numbers that
+used to be computed inline in ``benchmarks/sweep_grid.py``,
+``benchmarks/fig5_federated.py`` and ``launch/sweep.py`` -- the inline
+formulas are restated here verbatim as the expected values, evaluated on
+the 64-cell fast grid (the benchmark's policy x seed x topology shape at
+smoke-test event counts).
+"""
+import numpy as np
+import pytest
+
+from repro import analysis, api
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
+                        SunDengFixed, make_logreg)
+from repro.sweep import make_grid, standard_topologies
+
+
+@pytest.fixture(scope="module")
+def grid64_run():
+    """The benchmarks/sweep_grid.py grid (4 policies x 4 seeds x 4
+    topologies = 64 cells) at fast-test scale, run once, batched."""
+    problem = make_logreg(240, 40, n_workers=4, seed=0)
+    gp = 0.99 / problem.L
+    grid = make_grid(
+        policies={"adaptive1": Adaptive1(gamma_prime=gp),
+                  "adaptive2": Adaptive2(gamma_prime=gp),
+                  "fixed": FixedStepSize(gamma_prime=gp, tau_bound=40),
+                  "sun_deng": SunDengFixed(gamma_prime=gp, tau_bound=40)},
+        seeds=range(4),
+        topologies=standard_topologies(4),
+        n_events=120)
+    assert len(grid) == 64
+    res = api.run_components("piag", "batched", problem=problem, grid=grid,
+                             prox=L1(lam=problem.lam1))
+    return grid, res
+
+
+def test_mean_final_objective_matches_inline_benchmark_formula(grid64_run):
+    """benchmarks/sweep_grid.py used to compute
+    ``float(np.mean(obj[rows, -1]))`` per policy inline."""
+    grid, res = grid64_run
+    obj = np.asarray(res.objective)
+    finals = analysis.mean_final_objective(grid.cells, res.objective)
+    assert list(finals) == ["adaptive1", "adaptive2", "fixed", "sun_deng"]
+    for pn in finals:
+        rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
+        assert finals[pn] == float(np.mean(obj[rows, -1])), pn
+
+
+def test_per_policy_summary_matches_inline_cli_formulas(grid64_run):
+    """launch/sweep.py used to print, per policy: obj[rows, -1].mean(),
+    obj[rows, -1].min(), gam[rows].sum(1).mean(), clipped[rows].sum()."""
+    grid, res = grid64_run
+    obj = np.asarray(res.objective)
+    gam = np.asarray(res.gammas)
+    clipped = np.asarray(res.clipped)
+    summary = analysis.per_policy_summary(grid.cells, res.objective,
+                                          res.gammas, res.clipped)
+    for pn, s in summary.items():
+        rows = [i for i, c in enumerate(grid.cells) if c.policy_name == pn]
+        assert s.n_cells == 16
+        assert s.mean_final == float(obj[rows, -1].mean())
+        assert s.min_final == float(obj[rows, -1].min())
+        assert s.mean_sum_gamma == float(gam[rows].sum(1).mean())
+        assert s.clipped_events == int(clipped[rows].sum())
+        assert s.clipped_cells == int(np.sum(clipped[rows] > 0))
+
+
+def test_summarize_results_bridge(grid64_run):
+    _, res = grid64_run
+    assert analysis.summarize(res) == analysis.per_policy_summary(
+        res.cells, res.objective, res.gammas, res.clipped)
+
+
+def test_clipped_summary_counts():
+    clipped = np.asarray([0, 3, 0, 7, 1])
+    s = analysis.clipped_summary(clipped)
+    assert s == {"cells": 5, "cells_clipped": 3, "events_clipped": 11,
+                 "max_events_clipped": 7}
+
+
+def test_time_to_tolerance_matches_inline_fig5_formula():
+    """benchmarks/fig5_federated.py used
+    ``int(np.argmax(sub <= target)) if (sub <= target).any() else -1``."""
+    p_star, target = 0.25, 0.1
+    obj = np.asarray([1.0, 0.6, 0.4, 0.34, 0.36, 0.3])
+    sub = obj - p_star
+    expected = int(np.argmax(sub <= target)) if (sub <= target).any() else -1
+    assert analysis.time_to_tolerance(obj, target, p_star=p_star) == expected == 3
+    # never reached
+    assert analysis.time_to_tolerance(obj, 0.01, p_star=p_star) == -1
+    # already at tolerance from event 0
+    assert analysis.time_to_tolerance(np.full(4, 0.2), target,
+                                      p_star=p_star) == 0
+
+
+def test_time_to_tolerance_batched_rows():
+    obj = np.asarray([[1.0, 0.5, 0.2], [1.0, 0.9, 0.8]])
+    hits = analysis.time_to_tolerance(obj, 0.3)
+    np.testing.assert_array_equal(hits, [2, -1])
+
+
+def test_best_fixed_vs_adaptive_matches_inline_fig5_formula():
+    events = {"hinge": 82, "poly": 120, "fixed_taubound": 292,
+              "fixed_taubound_sqrt": -1, "fixed_taubound_x4": 310,
+              "fedbuff4_poly": 40}
+    gap = analysis.best_fixed_vs_adaptive(
+        events, fixed={n for n in events if n.startswith("fixed_")},
+        adaptive={"hinge", "poly"})
+    # the inline formula: min over events >= 0 within each family
+    assert gap["best_fixed"] == 292
+    assert gap["best_adaptive"] == 82
+    assert gap["speedup"] == 292 / 82
+
+
+def test_best_fixed_vs_adaptive_handles_never_and_defaults():
+    gap = analysis.best_fixed_vs_adaptive(
+        {"fixed_a": -1, "fixed_b": None, "adaptive1": 50})
+    assert gap == {"best_fixed": -1, "best_adaptive": 50, "speedup": None}
+    # default split: names starting with "fixed" vs the rest
+    gap = analysis.best_fixed_vs_adaptive({"fixed": 10, "adaptive1": 5})
+    assert gap["speedup"] == 2.0
