@@ -1,0 +1,190 @@
+"""Lean-carry engine benchmark: measured-delay horizons + decimated
+recording + executable reuse vs. the seed configuration, on the PR 2
+64-cell policy x seed x topology PIAG grid.
+
+Two spec-driven configurations over the SAME cells (same traces, same
+policies, same tau-bar tuning protocol):
+
+* ``seed`` -- the status quo: ``horizon=4096`` (the worst-case default
+  every run used to carry) and ``record_every=1`` (every event's objective
+  materialized).
+* ``opt``  -- ``horizon='auto'`` (the buffer sized to
+  ``next_pow2(measured tau-bar + 1)`` -- 4096/H x smaller scan carry,
+  bitwise-identical rows) and ``record_every=s`` (only every s-th
+  objective/gamma/tau sample computed + materialized; recorded rows
+  bitwise-equal to the stride-1 slices).
+
+Each configuration runs ``api.run`` twice: cold (compile + execute) and
+warm -- and because value-equal specs now resolve to memoized components
+and cached executables (``repro.sweep.cache``), the warm pass measures
+EXECUTION, not rebuild+retrace, for both configurations alike.
+
+Equivalence gates (hard failures):
+* auto-horizon rows at stride 1 are BITWISE-equal to the seed rows
+  (objective, gammas, and -- explicitly -- taus);
+* decimated rows are bitwise the stride-s slices of the seed rows.
+
+Perf gate: >= 1.5x warm speedup, or >= 4x scan-carry reduction at parity
+(<= 1.1x warm time).  Emits ``BENCH_engine_opt.json``.
+
+    PYTHONPATH=src python -m benchmarks.engine_opt [--events N]
+        [--seeds N] [--workers N] [--record-every S] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+
+from repro import api
+from repro.core.stepsize import DEFAULT_HORIZON
+from repro.sweep import clear_program_cache, program_cache_stats
+
+from .common import emit
+
+POLICY_NAMES = ("adaptive1", "adaptive2", "fixed", "sun_deng")
+
+
+def build_spec(n_events: int, n_seeds: int, n_workers: int,
+               horizon, record_every: int) -> api.ExperimentSpec:
+    """The PR 2 64-cell grid as a declarative spec: 4 policies x n_seeds x
+    the 4 standard topology regimes, fixed family tuned from the measured
+    tau-bar (the resolver's protocol, same as the old inline build)."""
+    return api.ExperimentSpec(
+        problem=api.ProblemSpec(kind="logreg",
+                                params=dict(n_samples=800, dim=100, seed=0)),
+        solver=api.SolverSpec(name="piag", horizon=horizon),
+        topology=api.TopologySpec(kind="standard", n_workers=(n_workers,)),
+        policies=api.PolicyGridSpec(names=POLICY_NAMES,
+                                    seeds=tuple(range(n_seeds))),
+        execution=api.ExecutionSpec(backend="batched",
+                                    record_every=record_every),
+        n_events=n_events)
+
+
+def timed_runs(spec: api.ExperimentSpec):
+    t0 = time.perf_counter()
+    res = api.run(spec)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = api.run(spec)
+    warm = time.perf_counter() - t0
+    return cold, warm, res
+
+
+def run(n_events: int = 800, n_seeds: int = 4, n_workers: int = 8,
+        record_every: int = 8, out: str = "BENCH_engine_opt.json") -> dict:
+    clear_program_cache()
+    seed_spec = build_spec(n_events, n_seeds, n_workers, 4096, 1)
+    opt_spec = build_spec(n_events, n_seeds, n_workers, "auto", record_every)
+
+    cold_seed, warm_seed, res_seed = timed_runs(seed_spec)
+    B = res_seed.n_cells
+    emit("engine_opt/seed", cold_seed * 1e6,
+         f"warm_us={warm_seed * 1e6:.1f};cells={B};horizon=4096;stride=1")
+
+    cold_opt, warm_opt, res_opt = timed_runs(opt_spec)
+    H = res_opt.horizon
+    carry_reduction = DEFAULT_HORIZON / H
+    emit("engine_opt/opt", cold_opt * 1e6,
+         f"warm_us={warm_opt * 1e6:.1f};horizon={H};stride={record_every};"
+         f"carry_reduction={carry_reduction:.1f}x")
+    speedup_cold = cold_seed / cold_opt
+    speedup_warm = warm_seed / warm_opt
+    emit("engine_opt/speedup", 0.0,
+         f"cold={speedup_cold:.2f}x;warm={speedup_warm:.2f}x")
+    emit("engine_opt/cache", 0.0,
+         ";".join(f"{k}={v}" for k, v in program_cache_stats().items()))
+
+    # ---- equivalence: auto-horizon bitwise at stride 1 -------------------
+    auto1_spec = build_spec(n_events, n_seeds, n_workers, "auto", 1)
+    res_auto1 = api.run(auto1_spec)
+    obj_s = np.asarray(res_seed.objective)
+    auto_bitwise = {
+        "objective": bool(np.array_equal(obj_s,
+                                         np.asarray(res_auto1.objective))),
+        "gammas": bool(np.array_equal(np.asarray(res_seed.gammas),
+                                      np.asarray(res_auto1.gammas))),
+        "taus": bool(np.array_equal(np.asarray(res_seed.taus),
+                                    np.asarray(res_auto1.taus))),
+    }
+    # ---- equivalence: decimated rows are the bitwise stride-s slices -----
+    s = record_every
+    dec_bitwise = {
+        "objective": bool(np.array_equal(obj_s[:, s - 1::s],
+                                         np.asarray(res_opt.objective))),
+        "gammas": bool(np.array_equal(np.asarray(res_seed.gammas)[:, s - 1::s],
+                                      np.asarray(res_opt.gammas))),
+        "taus": bool(np.array_equal(np.asarray(res_seed.taus)[:, s - 1::s],
+                                    np.asarray(res_opt.taus))),
+        "x": bool(np.array_equal(np.asarray(res_seed.x),
+                                 np.asarray(res_opt.x))),
+        "clipped": bool(np.array_equal(np.asarray(res_seed.clipped),
+                                       np.asarray(res_opt.clipped))),
+    }
+    rows_ok = all(auto_bitwise.values()) and all(dec_bitwise.values())
+    emit("engine_opt/equivalence", 0.0,
+         f"auto_bitwise={all(auto_bitwise.values())};"
+         f"decimated_bitwise={all(dec_bitwise.values())};ok={rows_ok}")
+
+    parity = warm_opt <= 1.1 * warm_seed
+    perf_ok = bool(speedup_warm >= 1.5
+                   or (carry_reduction >= 4.0 and parity))
+
+    payload = {
+        "bench": "engine_opt",
+        "cells": B,
+        "n_events": n_events,
+        "n_workers": n_workers,
+        "tau_bar": res_opt.tau_bar,
+        "devices": len(jax.devices()),
+        "seed_config": {"horizon": 4096, "record_every": 1,
+                        "seconds_cold": cold_seed, "seconds_warm": warm_seed},
+        "opt_config": {"horizon": H, "horizon_mode": "auto",
+                       "record_every": record_every,
+                       "seconds_cold": cold_opt, "seconds_warm": warm_opt},
+        "speedup_cold": speedup_cold,
+        "speedup_warm": speedup_warm,
+        "carry_reduction": carry_reduction,
+        "recorded_samples": res_opt.n_samples,
+        "program_cache": program_cache_stats(),
+        "equivalence": {"auto_horizon_bitwise": auto_bitwise,
+                        "decimated_bitwise": dec_bitwise,
+                        "ok": rows_ok},
+        "perf_gate": {"warm_speedup_target": 1.5,
+                      "carry_reduction_target": 4.0,
+                      "parity": parity, "ok": perf_ok},
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}: {B} cells, auto horizon {H} "
+          f"({carry_reduction:.0f}x leaner carry), stride {record_every}, "
+          f"warm speedup {speedup_warm:.2f}x, equivalence ok={rows_ok}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--events", type=int, default=800)
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--record-every", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_engine_opt.json")
+    a = ap.parse_args()
+    payload = run(n_events=a.events, n_seeds=a.seeds, n_workers=a.workers,
+                  record_every=a.record_every, out=a.out)
+    if not payload["equivalence"]["ok"]:
+        raise SystemExit("bitwise equivalence failed")
+    if not payload["perf_gate"]["ok"]:
+        raise SystemExit(
+            f"perf gate failed: warm speedup "
+            f"{payload['speedup_warm']:.2f}x < 1.5x and carry reduction "
+            f"{payload['carry_reduction']:.1f}x not at parity")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.analysis import best_fixed_vs_adaptive, time_to_tolerance
 from repro.core import L1, make_logreg, make_policy, solve_centralized
+from repro.core.stepsize import auto_horizon
 from repro.federated import (heterogeneous_clients, run_fedasync_problem,
                              run_fedbuff_problem, simulate_federated)
 
@@ -75,16 +76,21 @@ def run() -> dict:
         emit(f"fig5/logreg/{name}", 0.0,
              f"final_subopt={sub[-1]:.5f};events_to_target={hit}")
 
+    # horizon='auto': the weight-policy buffer is sized from each trace's
+    # own measured staleness (bitwise-identical rows -- the tau_max above is
+    # ~2 orders of magnitude below the 4096 worst-case carry these runs
+    # used to pay; pinned in tests/test_engine_opt.py)
     for name, pol in {**adaptive, **fixed}.items():
         us, res = timeit(lambda p=pol: run_fedasync_problem(
-            prob, trace, p, prox, local_lr=0.5 / prob.L), repeats=1)
+            prob, trace, p, prox, local_lr=0.5 / prob.L, horizon="auto"),
+            repeats=1)
         record(name, res)
         results[name]["us_per_run"] = us
 
     # FedBuff |R|=4 with the adaptive weight (writes = uploads / 4)
     us, res = timeit(lambda: run_fedbuff_problem(
         prob, trace_b4, make_policy("poly", 1.0, a=0.3), prox, eta=ALPHA,
-        buffer_size=4, local_lr=0.5 / prob.L), repeats=1)
+        buffer_size=4, local_lr=0.5 / prob.L, horizon="auto"), repeats=1)
     sub = np.asarray(res.objective) - p_star
     hit = time_to_tolerance(res.objective, target, p_star=p_star)
     results["fedbuff4_poly"] = {
@@ -113,6 +119,11 @@ def run() -> dict:
         "workload": "logreg_federated_stragglers",
         "uploads": UPLOADS, "n_clients": N_CLIENTS, "alpha": ALPHA,
         "tau_max": int(tau_max),
+        # the horizon each horizon='auto' run actually used, per trace (the
+        # fedbuff trace's staleness distribution differs from fedasync's)
+        "horizon_auto": int(auto_horizon(int(np.max(np.asarray(trace.tau))))),
+        "horizon_auto_fedbuff": int(auto_horizon(
+            int(np.max(np.asarray(trace_b4.tau))))),
         "tau_p50": float(np.percentile(trace.tau, 50)),
         "tau_p90": float(np.percentile(trace.tau, 90)),
         "p_star": p_star, "initial_gap": gap0, "target_subopt": target,

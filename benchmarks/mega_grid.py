@@ -56,6 +56,7 @@ from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
                         SunDengFixed, make_logreg)
 from repro.core.engine import trace_scan, sample_service_times
 from repro.core.piag import piag_scan
+from repro.core.stepsize import auto_horizon
 from repro.sweep import (cell_mesh, make_grid, make_sharded_sweep_piag,
                          make_sweep_piag, measure_tau_bar, round_robin_pad,
                          run_bucketed, standard_topology_factories)
@@ -88,9 +89,14 @@ class BucketedRunner:
     """Pre-built per-bucket programs + pre-stacked inputs, so repeated calls
     time execution (warm) instead of rebuild+retrace.  ``mesh=None`` is the
     plain single-device path; otherwise shard_map over the mesh (inputs are
-    re-uploaded per call because the sharded program donates them)."""
+    re-uploaded per call because the sharded program donates them).
 
-    def __init__(self, problem, grid, prox, mesh=None):
+    ``horizon`` is the step-size window-buffer size: the mega-grid now runs
+    on the measured-delay sizing (``auto_horizon(tau_bar)``) -- rows stay
+    bitwise-equal to the old 4096 default (no delay exceeds the measured
+    bound by construction), with a 4096/H x leaner per-cell scan carry."""
+
+    def __init__(self, problem, grid, prox, mesh=None, horizon=4096):
         Aw, bw = problem.worker_slices()
         x0 = jnp.zeros((problem.dim,), jnp.float32)
         loss = lambda x, A, b: problem.worker_loss(x, A, b)
@@ -101,12 +107,13 @@ class BucketedRunner:
             masked = not b.uniform
             if mesh is None:
                 fn = make_sweep_piag(loss, x0, wd, prox, objective=problem.P,
-                                     masked=masked)
+                                     masked=masked, horizon=horizon)
                 idx = None
             else:
                 fn = make_sharded_sweep_piag(loss, x0, wd, prox,
                                              objective=problem.P,
-                                             masked=masked, mesh=mesh)
+                                             masked=masked, mesh=mesh,
+                                             horizon=horizon)
                 idx = round_robin_pad(len(b.grid), mesh.devices.size)
             T = b.grid.service_times(b.width)
             act = b.grid.active_masks(b.width)
@@ -149,21 +156,24 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
     prox = L1(lam=prob.lam1)
     grid, tau_bar = build_mega_grid(widths, n_seeds, n_events, gp)
     B = len(grid)
+    horizon = auto_horizon(tau_bar)  # measured-delay sizing, bitwise rows
     emit("mega_grid/config", 0.0,
          f"cells={B};events={n_events};widths={list(widths)};"
-         f"devices={n_dev};tau_bar={tau_bar}")
+         f"devices={n_dev};tau_bar={tau_bar};horizon={horizon}")
 
-    single = BucketedRunner(prob, grid, prox, mesh=None)
+    single = BucketedRunner(prob, grid, prox, mesh=None, horizon=horizon)
     cold_1, warm_1, res_single = _time(single)
     emit("mega_grid/single_device", cold_1 * 1e6, f"warm_us={warm_1 * 1e6:.1f}")
 
     sharded1 = BucketedRunner(prob, grid, prox,
-                              mesh=cell_mesh(jax.devices()[:1]))
+                              mesh=cell_mesh(jax.devices()[:1]),
+                              horizon=horizon)
     cold_s1, warm_s1, _ = _time(sharded1)
     emit("mega_grid/sharded_1dev", cold_s1 * 1e6,
          f"warm_us={warm_s1 * 1e6:.1f}")
 
-    shardedN = BucketedRunner(prob, grid, prox, mesh=cell_mesh())
+    shardedN = BucketedRunner(prob, grid, prox, mesh=cell_mesh(),
+                              horizon=horizon)
     cold_sN, warm_sN, res_shard = _time(shardedN)
     speedup_cold = cold_1 / cold_sN
     speedup_warm = warm_1 / warm_sN
@@ -248,6 +258,7 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
         "buckets": [{"width": b.width, "cells": len(b.grid)}
                     for b in grid.buckets()],
         "tau_bar": tau_bar,
+        "horizon": horizon,
         "single_device_seconds_cold": cold_1,
         "single_device_seconds_warm": warm_1,
         "sharded_1dev_seconds_cold": cold_s1,

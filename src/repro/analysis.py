@@ -47,7 +47,13 @@ def per_policy_summary(cells, objective, gammas=None,
                        clipped=None) -> Dict[str, PolicySummary]:
     """The per-policy table ``launch.sweep`` prints: mean/min final
     objective, mean summed step-size, clip counts, keyed by policy name in
-    grid order."""
+    grid order.
+
+    Stride-aware by construction: final objective and clip counts are exact
+    under decimated recording (the last event is always recorded and
+    ``clipped`` comes from the scan carry); ``mean_sum_gamma`` sums the
+    RECORDED gamma samples, i.e. ~1/s of the full-budget value at stride s
+    -- comparable within a sweep, not across strides."""
     obj = np.asarray(objective)
     gam = None if gammas is None else np.asarray(gammas)
     clp = None if clipped is None else np.asarray(clipped)
@@ -76,18 +82,28 @@ def mean_final_objective(cells, objective) -> Dict[str, float]:
             for pn, rows in policy_rows(cells).items()}
 
 
-def time_to_tolerance(objective, target: float, p_star: float = 0.0):
+def time_to_tolerance(objective, target: float, p_star: float = 0.0,
+                      record_every: int = 1):
     """First event index where ``objective - p_star <= target``; -1 when
     the tolerance is never reached.
 
     1-D input -> int (the ``benchmarks/fig5_federated.py`` events-to-target
     metric); 2-D (B, K) input -> (B,) int array, one per cell.
+
+    ``record_every=s`` declares the input as a DECIMATED trajectory
+    (columns are events ``s-1, 2s-1, ...``, see ``ExecutionSpec``): the
+    returned index is mapped back to event units, ``j*s + s - 1`` for the
+    first hit column j, so thresholds stay comparable across strides (a
+    decimated run can only report a hit at or after the stride-1 event).
     """
+    s = int(record_every)
+    if s < 1:
+        raise ValueError(f"record_every must be >= 1, got {record_every}")
     sub = np.asarray(objective) - p_star
     hit = sub <= target
     if sub.ndim == 1:
-        return int(np.argmax(hit)) if hit.any() else -1
-    first = np.argmax(hit, axis=-1)
+        return (int(np.argmax(hit)) * s + (s - 1)) if hit.any() else -1
+    first = np.argmax(hit, axis=-1) * s + (s - 1)
     return np.where(hit.any(axis=-1), first, -1).astype(np.int64)
 
 

@@ -34,6 +34,11 @@ class Results:
                   computed one (fixed-family tuning / horizon validation).
       spec:       the originating ``ExperimentSpec`` (None for component
                   runs that bypassed the declarative build).
+      horizon:    the CONCRETE window-buffer size the run used -- the
+                  resolved value when the spec said ``'auto'``.
+      record_every: the trace-recording stride s: objective/gammas/taus
+                  columns hold rows ``s-1, 2s-1, ...`` of the event
+                  trajectory ((B, K // s) leaves).
     """
 
     solver: str
@@ -43,6 +48,8 @@ class Results:
     elapsed_s: float
     tau_bar: Optional[int] = None
     spec: Any = None
+    horizon: Optional[int] = None
+    record_every: int = 1
 
     # ------------------------------------------------- common columns ----
 
@@ -59,8 +66,19 @@ class Results:
         return int(self.grid.n_events)
 
     @property
+    def n_samples(self) -> int:
+        """Recorded samples per cell: n_events // record_every."""
+        return self.n_events // int(self.record_every)
+
+    def sample_events(self) -> np.ndarray:
+        """(n_samples,) event index of each recorded column: with stride s,
+        column j holds event ``j*s + s - 1``."""
+        s = int(self.record_every)
+        return np.arange(self.n_samples) * s + (s - 1)
+
+    @property
     def objective(self):
-        """(B, K) objective P(x_{k+1}) after each event."""
+        """(B, K // record_every) objective P(x_{k+1}) at recorded events."""
         return self.raw.objective
 
     @property
@@ -104,7 +122,8 @@ class Results:
         return np.asarray(self.objective)[:, -1]
 
     def virtual_time(self) -> np.ndarray:
-        """(B, K) simulated wall-clock time of each event.
+        """(B, K // record_every) simulated wall-clock time of each RECORDED
+        event (stride-aware: column j is event ``j*s + s - 1``).
 
         Recomputed from the grid's own pre-sampled randomness (the traces
         are deterministic functions of it), via the jitted trace scans --
@@ -119,26 +138,29 @@ class Results:
             def run_bucket(b):
                 T = jnp.asarray(b.grid.service_times(b.width))
                 if b.uniform:
-                    return jax.jit(jax.vmap(
+                    vt = jax.jit(jax.vmap(
                         lambda t: trace_scan(t).t_wall))(T)
-                act = jnp.asarray(b.grid.active_masks(b.width))
-                return jax.jit(jax.vmap(
-                    lambda t, a: trace_scan(t, active=a).t_wall))(T, act)
+                else:
+                    act = jnp.asarray(b.grid.active_masks(b.width))
+                    vt = jax.jit(jax.vmap(
+                        lambda t, a: trace_scan(t, active=a).t_wall))(T, act)
+                return vt
 
-            return np.asarray(run_bucketed(self.grid, run_bucket))
-
-        from repro.federated.events import generate_federated_trace
-        bs = 1
-        n_steps = None
-        if self.spec is not None:
-            if self.solver == "fedbuff":
-                bs = self.spec.solver.buffer_size
-            n_steps = self.spec.solver.n_steps
-        rows = [generate_federated_trace(
-            c.n_workers, self.n_events, clients=list(c.workers),
-            buffer_size=bs, seed=c.seed, n_steps=n_steps).t_wall
-            for c in self.cells]
-        return np.stack(rows)
+            full = np.asarray(run_bucketed(self.grid, run_bucket))
+        else:
+            from repro.federated.events import generate_federated_trace
+            bs = 1
+            n_steps = None
+            if self.spec is not None:
+                if self.solver == "fedbuff":
+                    bs = self.spec.solver.buffer_size
+                n_steps = self.spec.solver.n_steps
+            full = np.stack([generate_federated_trace(
+                c.n_workers, self.n_events, clients=list(c.workers),
+                buffer_size=bs, seed=c.seed, n_steps=n_steps).t_wall
+                for c in self.cells])
+        s = int(self.record_every)
+        return full if s == 1 else full[:, s - 1::s]
 
     def to_rows(self) -> List[Dict[str, Any]]:
         """Per-cell records (the JSON shape ``launch.sweep`` emits)."""
@@ -171,6 +193,9 @@ class Results:
         return analysis.clipped_summary(self.clipped)
 
     def time_to_tolerance(self, target: float, p_star: float = 0.0):
+        """First EVENT index reaching the tolerance (stride-aware: recorded
+        column j maps back to event ``j*s + s - 1``; -1 = never)."""
         from repro import analysis
         return analysis.time_to_tolerance(self.objective, target,
-                                          p_star=p_star)
+                                          p_star=p_star,
+                                          record_every=self.record_every)

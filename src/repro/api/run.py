@@ -39,10 +39,11 @@ from repro.federated.events import (generate_federated_trace,
                                     heterogeneous_clients)
 from repro.federated.server import (_problem_pieces, run_fedasync,
                                     run_fedbuff)
+from repro.sweep.cache import LRU, IdKey
 from repro.sweep.grid import (SweepGrid, make_grid, measure_tau_bar,
                               standard_topology_factories)
-from repro.sweep.runners import (sweep_bcd, sweep_fedasync, sweep_fedbuff,
-                                 sweep_piag)
+from repro.sweep.runners import (resolve_grid_horizon, sweep_bcd,
+                                 sweep_fedasync, sweep_fedbuff, sweep_piag)
 from repro.sweep.shard import (cell_mesh, sharded_sweep_bcd,
                                sharded_sweep_fedasync,
                                sharded_sweep_fedbuff, sharded_sweep_piag)
@@ -55,15 +56,28 @@ __all__ = ["Resolved", "resolve", "run", "run_components", "component_spec"]
 
 _tmap = jax.tree_util.tree_map
 
+# resolve-time memoization: repeated api.run calls of value-equal specs
+# reuse the SAME problem/prox/runner-piece objects, which is what lets the
+# sweep-program cache (repro.sweep.cache) recognize the executables as
+# identical instead of re-tracing per call
+_PROBLEM_MEMO = LRU(16)
+_PROX_MEMO = LRU(32)
+_PIECES_MEMO = LRU(32)
+
 
 class Resolved(NamedTuple):
-    """The concrete objects a spec compiles to (pre-dispatch)."""
+    """The concrete objects a spec compiles to (pre-dispatch).
+
+    ``horizon`` is the CONCRETE window-buffer size the dispatch uses: the
+    spec's integer horizon verbatim, or -- for ``horizon='auto'`` -- the
+    measured-delay sizing ``next_pow2(bound + slack)``."""
 
     spec: ExperimentSpec
     problem: Any
     prox: Any
     grid: SweepGrid
     tau_bar: Optional[int]
+    horizon: int
 
 
 # -------------------------------------------------------------- resolve ----
@@ -75,7 +89,12 @@ def _build_problem(spec: ExperimentSpec):
     maker = make_logreg if ps.kind == "logreg" else make_lasso
     kwargs = dict(ps.params)
     kwargs.setdefault("n_workers", spec.topology.width_max)
-    return maker(**kwargs)
+    try:
+        key = (ps.kind, tuple(sorted(kwargs.items())))
+        hash(key)
+    except TypeError:  # exotic params: build fresh, skip memoization
+        return maker(**kwargs)
+    return _PROBLEM_MEMO.get(key, lambda: maker(**kwargs))
 
 
 def _build_prox(spec: ExperimentSpec, problem):
@@ -85,7 +104,12 @@ def _build_prox(spec: ExperimentSpec, problem):
     kwargs = dict(ps.prox_params)
     if ps.prox == "l1":
         kwargs.setdefault("lam", problem.lam1)
-    return make_prox(ps.prox, **kwargs)
+    try:
+        key = (ps.prox, tuple(sorted(kwargs.items())))
+        hash(key)
+    except TypeError:
+        return make_prox(ps.prox, **kwargs)
+    return _PROX_MEMO.get(key, lambda: make_prox(ps.prox, **kwargs))
 
 
 def _build_topologies(spec: ExperimentSpec) -> Dict[str, Any]:
@@ -155,13 +179,32 @@ def _validate_horizon(spec: ExperimentSpec, tau_bar: Optional[int]) -> None:
     check_horizon(spec.solver.horizon, tau_bar if exp is None else exp)
 
 
+def _resolve_horizon(spec: ExperimentSpec, grid: SweepGrid,
+                     tau_bar: Optional[int]) -> int:
+    """The concrete window-buffer size for the dispatch.
+
+    A thin adapter over the one shared rule
+    (``sweep.runners.resolve_grid_horizon``): integer horizons pass through
+    verbatim, ``'auto'`` sizes from the declared ``expected_max_delay`` or
+    the already-measured worker tau-bar when available (a fresh
+    measurement otherwise), with the spec's ``DelaySpec.horizon_slack``."""
+    sv = spec.solver
+    bound = spec.delay.expected_max_delay
+    if bound is None and not sv.federated:
+        bound = tau_bar  # reuse the fixed-family/validation measurement
+    return resolve_grid_horizon(
+        sv.horizon, grid, fed=sv.federated,
+        buffer_size=sv.buffer_size if sv.name == "fedbuff" else 1,
+        n_steps=sv.n_steps, slack=spec.delay.horizon_slack, bound=bound)
+
+
 def resolve(spec: ExperimentSpec) -> Resolved:
     """Materialize problem, prox, policies and grid; validate the horizon.
 
     Fixed-family policies without an explicit ``tau_bound`` trigger a
-    tau-bar measurement over the grid's own traces; so does horizon
-    validation for PIAG/BCD when no ``expected_max_delay`` is declared
-    (one measurement serves both).
+    tau-bar measurement over the grid's own traces; so do horizon
+    validation for PIAG/BCD when no ``expected_max_delay`` is declared and
+    ``horizon='auto'`` sizing (one measurement serves all three).
     """
     problem = _build_problem(spec)
     prox = _build_prox(spec, problem)
@@ -170,17 +213,20 @@ def resolve(spec: ExperimentSpec) -> Resolved:
         tau_bar = None
         if spec.validate_horizon:
             _validate_horizon(spec, tau_bar)
-        return Resolved(spec, problem, prox, spec.grid, tau_bar)
+        horizon = _resolve_horizon(spec, spec.grid, tau_bar)
+        return Resolved(spec, problem, prox, spec.grid, tau_bar, horizon)
 
     topos = _build_topologies(spec)
     pg = spec.policies
     needs_bound = (pg.policies is None and pg.tau_bound is None
                    and any(n in FIXED_FAMILY for n in pg.names))
     worker_solver = not spec.solver.federated
+    auto = spec.solver.horizon == "auto"
     needs_measure = worker_solver and (
         (needs_bound and spec.delay.measure)
         or (spec.validate_horizon and spec.delay.measure
-            and spec.delay.expected_max_delay is None))
+            and spec.delay.expected_max_delay is None)
+        or (auto and spec.delay.expected_max_delay is None))
     tau_bar = _measure_tau_bar(spec, topos) if needs_measure else None
     if spec.solver.federated:
         tau_bar = 0  # fixed baselines are not the federated story
@@ -197,7 +243,9 @@ def resolve(spec: ExperimentSpec) -> Resolved:
         _validate_horizon(spec, tau_bar)
     elif spec.validate_horizon:
         _validate_horizon(spec, None)  # declared bound only
-    return Resolved(spec, problem, prox, grid, tau_bar)
+    horizon = _resolve_horizon(
+        spec, grid, tau_bar if worker_solver else None)
+    return Resolved(spec, problem, prox, grid, tau_bar, horizon)
 
 
 # ------------------------------------------------------------- dispatch ----
@@ -220,90 +268,120 @@ def _mesh_for(spec: ExperimentSpec):
 
 
 def _piag_pieces(r: Resolved):
+    """(loss, x0, worker_data, objective) for PIAG, memoized per problem so
+    repeated runs hand the sweep-program cache identical captured objects."""
     problem = r.problem
-    Aw, bw = problem.worker_slices()
-    x0 = jnp.zeros((problem.dim,), jnp.float32)
-    return (lambda x, A, b: problem.worker_loss(x, A, b)), x0, (Aw, bw)
+
+    def build():
+        Aw, bw = problem.worker_slices()
+        x0 = jnp.zeros((problem.dim,), jnp.float32)
+        loss = lambda x, A, b: problem.worker_loss(x, A, b)
+        return loss, x0, (Aw, bw), problem.P
+
+    return _PIECES_MEMO.get(("piag", IdKey(problem)), build)
+
+
+def _bcd_pieces(problem):
+    def build():
+        return (problem.grad_f, problem.P,
+                jnp.zeros((problem.dim,), jnp.float32))
+
+    return _PIECES_MEMO.get(("bcd", IdKey(problem)), build)
+
+
+def _fed_pieces(problem, prox, local_lr):
+    def build():
+        update, x0, data = _problem_pieces(problem, prox, local_lr)
+        return update, x0, data, problem.P
+
+    return _PIECES_MEMO.get(("fed", IdKey(problem), IdKey(prox), local_lr),
+                            build)
 
 
 def _run_piag(r: Resolved):
     spec = r.spec
-    loss, x0, wd = _piag_pieces(r)
-    h, utm = spec.solver.horizon, spec.delay.use_tau_max
+    loss, x0, wd, objective = _piag_pieces(r)
+    h, utm = r.horizon, spec.delay.use_tau_max
     bw = spec.execution.bucket_widths
+    s = spec.execution.record_every
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_piag(loss, x0, wd, r.grid, r.prox,
-                          objective=r.problem.P, horizon=h, use_tau_max=utm,
-                          bucket_widths=bw)
+                          objective=objective, horizon=h, use_tau_max=utm,
+                          bucket_widths=bw, record_every=s)
     if backend == "sharded":
         return sharded_sweep_piag(loss, x0, wd, r.grid, r.prox,
-                                  objective=r.problem.P, horizon=h,
+                                  objective=objective, horizon=h,
                                   use_tau_max=utm, mesh=_mesh_for(spec),
-                                  bucket_widths=bw)
+                                  bucket_widths=bw, record_every=s)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
         tr = generate_trace(T)
         rows.append(run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
-                             c.policy, r.prox, objective=r.problem.P,
-                             horizon=h, use_tau_max=utm))
+                             c.policy, r.prox, objective=objective,
+                             horizon=h, use_tau_max=utm, record_every=s))
     return _stack_results(rows)
 
 
 def _run_bcd(r: Resolved):
     spec = r.spec
-    problem, m, h = r.problem, spec.solver.m, spec.solver.horizon
-    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    problem, m, h = r.problem, spec.solver.m, r.horizon
+    grad_f, objective, x0 = _bcd_pieces(problem)
     bw = spec.execution.bucket_widths
+    s = spec.execution.record_every
     backend = spec.execution.backend
     if backend == "batched":
-        return sweep_bcd(problem.grad_f, problem.P, x0, m, r.grid, r.prox,
-                         horizon=h, bucket_widths=bw)
+        return sweep_bcd(grad_f, objective, x0, m, r.grid, r.prox,
+                         horizon=h, bucket_widths=bw, record_every=s)
     if backend == "sharded":
-        return sharded_sweep_bcd(problem.grad_f, problem.P, x0, m, r.grid,
+        return sharded_sweep_bcd(grad_f, objective, x0, m, r.grid,
                                  r.prox, horizon=h, mesh=_mesh_for(spec),
-                                 bucket_widths=bw)
+                                 bucket_widths=bw, record_every=s)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
         tr = generate_trace(T, kind="shared_memory")
         blocks = sample_blocks(m, r.grid.n_events, seed=c.seed)
-        rows.append(run_async_bcd(problem.grad_f, problem.P, x0, m, tr,
-                                  blocks, c.policy, r.prox, horizon=h))
+        rows.append(run_async_bcd(grad_f, objective, x0, m, tr,
+                                  blocks, c.policy, r.prox, horizon=h,
+                                  record_every=s))
     return _stack_results(rows)
 
 
 def _run_fed(r: Resolved):
     spec = r.spec
     sv = spec.solver
-    update, x0, data = _problem_pieces(r.problem, r.prox, sv.local_lr)
-    h, n_steps = sv.horizon, sv.n_steps
+    update, x0, data, objective = _fed_pieces(r.problem, r.prox, sv.local_lr)
+    h, n_steps = r.horizon, sv.n_steps
     bs = sv.buffer_size if sv.name == "fedbuff" else 1
     bw = spec.execution.bucket_widths
+    s = spec.execution.record_every
     backend = spec.execution.backend
     if backend == "batched":
         if sv.name == "fedasync":
             return sweep_fedasync(update, x0, data, r.grid,
-                                  objective=r.problem.P, horizon=h,
+                                  objective=objective, horizon=h,
                                   reference=spec.execution.reference,
-                                  n_steps=n_steps, bucket_widths=bw)
+                                  n_steps=n_steps, bucket_widths=bw,
+                                  record_every=s)
         return sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
-                             buffer_size=bs, objective=r.problem.P,
+                             buffer_size=bs, objective=objective,
                              horizon=h, reference=spec.execution.reference,
-                             n_steps=n_steps, bucket_widths=bw)
+                             n_steps=n_steps, bucket_widths=bw,
+                             record_every=s)
     if backend == "sharded":
         mesh = _mesh_for(spec)
         if sv.name == "fedasync":
             return sharded_sweep_fedasync(update, x0, data, r.grid,
-                                          objective=r.problem.P,
+                                          objective=objective,
                                           buffer_size=1, horizon=h,
                                           n_steps=n_steps, mesh=mesh,
-                                          bucket_widths=bw)
+                                          bucket_widths=bw, record_every=s)
         return sharded_sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
-                                     buffer_size=bs, objective=r.problem.P,
+                                     buffer_size=bs, objective=objective,
                                      horizon=h, n_steps=n_steps, mesh=mesh,
-                                     bucket_widths=bw)
+                                     bucket_widths=bw, record_every=s)
     rows = []
     for c in r.grid.cells:
         tr = generate_federated_trace(c.n_workers, r.grid.n_events,
@@ -313,11 +391,12 @@ def _run_fed(r: Resolved):
         cd = _slice_rows(data, c.n_workers)
         if sv.name == "fedasync":
             rows.append(run_fedasync(update, x0, cd, tr, c.policy,
-                                     objective=r.problem.P, horizon=h))
+                                     objective=objective, horizon=h,
+                                     record_every=s))
         else:
             rows.append(run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
-                                    buffer_size=bs, objective=r.problem.P,
-                                    horizon=h))
+                                    buffer_size=bs, objective=objective,
+                                    horizon=h, record_every=s))
     return _stack_results(rows)
 
 
@@ -338,13 +417,15 @@ def run(spec: ExperimentSpec) -> Results:
     elapsed = time.perf_counter() - t0
     return Results(solver=spec.solver.name, backend=spec.execution.backend,
                    grid=r.grid, raw=raw, elapsed_s=elapsed,
-                   tau_bar=r.tau_bar, spec=spec)
+                   tau_bar=r.tau_bar, spec=spec, horizon=r.horizon,
+                   record_every=spec.execution.record_every)
 
 
 # -------------------------------------------------- component escape ----
 
 def component_spec(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
+                   record_every: int = 1,
                    **solver_kwargs) -> ExperimentSpec:
     """A spec from prebuilt components (problem + grid + prox), bypassing
     the declarative build.  This is the form the legacy shims use; horizon
@@ -356,7 +437,8 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
         problem=ProblemSpec(kind="custom", problem=problem, prox_op=prox),
         solver=SolverSpec(name=solver, **solver_kwargs),
         execution=ExecutionSpec(backend=backend, mesh=mesh,
-                                reference=reference),
+                                reference=reference,
+                                record_every=record_every),
         delay=DelaySpec(measure=False),
         n_events=grid.n_events,
         grid=grid,
@@ -366,8 +448,9 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
 
 def run_components(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
+                   record_every: int = 1,
                    **solver_kwargs) -> Results:
     """``run`` over prebuilt components (see ``component_spec``)."""
     return run(component_spec(solver, backend, problem=problem, grid=grid,
                               prox=prox, mesh=mesh, reference=reference,
-                              **solver_kwargs))
+                              record_every=record_every, **solver_kwargs))

@@ -33,7 +33,7 @@ instead of relying on the post-hoc per-row ``clipped`` counter.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional, Tuple
+from typing import Any, Mapping, Optional, Tuple, Union
 
 __all__ = ["ProblemSpec", "SolverSpec", "TopologySpec", "DelaySpec",
            "PolicyGridSpec", "ExecutionSpec", "ExperimentSpec",
@@ -51,11 +51,15 @@ def _freeze(seq) -> Tuple:
     return tuple(seq) if seq is not None else None
 
 
-def check_horizon(horizon: int, expected_max_delay: Optional[int]) -> None:
+def check_horizon(horizon, expected_max_delay: Optional[int]) -> None:
     """The one home of the horizon-representability rule: ``window_sum``
     caps delays at H - 1, so an expected max delay beyond that silently
     truncates window sums.  Shared by spec construction (declared bounds)
-    and resolve (measured tau-bar)."""
+    and resolve (measured tau-bar).  ``horizon='auto'`` is exempt: the
+    resolver sizes it FROM the measured/declared bound, so it represents
+    every expected delay by construction."""
+    if horizon == "auto":
+        return
     exp = expected_max_delay
     if exp is not None and exp > horizon - 1:
         raise ValueError(
@@ -103,11 +107,14 @@ class SolverSpec:
     ``local_lr`` is the federated clients' local prox-SGD rate (``None`` ->
     ``0.9 / L``); ``n_steps`` is the federated trace-scan pop budget
     (``None`` -> ``default_fed_steps``).  ``horizon`` is the step-size
-    window-sum horizon H -- the largest representable delay is H - 1.
+    window-sum horizon H -- the largest representable delay is H - 1 --
+    or ``'auto'``: size H to ``next_pow2(measured tau-bar + slack)`` at
+    resolve time (``DelaySpec.horizon_slack``), bitwise-identical to the
+    4096 default whenever delays fit, at a fraction of the scan carry.
     """
 
     name: str = "piag"
-    horizon: int = 4096
+    horizon: Union[int, str] = 4096
     m: int = 20
     eta: float = 1.0
     buffer_size: int = 1
@@ -117,7 +124,12 @@ class SolverSpec:
     def __post_init__(self):
         if self.name not in SOLVERS:
             raise ValueError(f"unknown solver {self.name!r}; one of {SOLVERS}")
-        if self.horizon < 2:
+        if isinstance(self.horizon, str):
+            if self.horizon != "auto":
+                raise ValueError(
+                    f"horizon must be an int >= 2 or 'auto', "
+                    f"got {self.horizon!r}")
+        elif self.horizon < 2:
             raise ValueError(f"horizon must be >= 2, got {self.horizon}")
         if self.buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
@@ -192,11 +204,20 @@ class DelaySpec:
     ``measure``:           when no bound is declared, measure tau-bar from
                            the grid's own traces at resolve time (PIAG/BCD)
                            and validate the horizon against it.
+    ``horizon_slack``:     headroom (>= 1) added to the measured/declared
+                           bound when ``SolverSpec.horizon='auto'`` sizes
+                           the window buffer (``stepsize.auto_horizon``).
     """
 
     use_tau_max: bool = True
     expected_max_delay: Optional[int] = None
     measure: bool = True
+    horizon_slack: int = 1
+
+    def __post_init__(self):
+        if self.horizon_slack < 1:
+            raise ValueError(
+                f"horizon_slack must be >= 1, got {self.horizon_slack}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +265,11 @@ class ExecutionSpec:
     ``bucket_widths``: explicit ragged-bucket width menu (None = pow-2).
     ``reference``: federated sweeps only -- route trace generation through
                  the Python heapq reference twin instead of the fused scan.
+    ``record_every``: decimated trace recording -- materialize (and compute
+                 the objective for) only every s-th event row; stride 1 is
+                 bitwise today's behavior, stride s keeps bitwise rows
+                 ``s-1, 2s-1, ...`` and shrinks the (B, K) outputs by s.
+                 Must divide ``n_events``.
     """
 
     backend: str = "batched"
@@ -251,11 +277,15 @@ class ExecutionSpec:
     mesh: Any = None
     bucket_widths: Optional[Tuple[int, ...]] = None
     reference: bool = False
+    record_every: int = 1
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if self.record_every < 1:
+            raise ValueError(
+                f"record_every must be >= 1, got {self.record_every}")
         object.__setattr__(self, "bucket_widths", _freeze(self.bucket_widths))
 
 
@@ -289,6 +319,10 @@ class ExperimentSpec:
             raise ValueError(
                 "reference=True (heapq twin) cannot shard; use backend="
                 "'batched'")
+        if self.n_events % self.execution.record_every:
+            raise ValueError(
+                f"record_every={self.execution.record_every} must divide "
+                f"n_events={self.n_events}")
         check_horizon(self.solver.horizon, self.delay.expected_max_delay)
 
     def validate(self) -> "ExperimentSpec":

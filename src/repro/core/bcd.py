@@ -22,9 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import EventTrace
+from .engine import EventTrace, strided_scan
 from .prox import ProxOp
-from .stepsize import StepsizePolicy, clipped_count
+from .stepsize import StepsizePolicy, auto_horizon, clipped_count
 
 __all__ = ["BCDResult", "bcd_scan", "run_async_bcd", "run_bcd_logreg",
            "sample_blocks"]
@@ -58,10 +58,13 @@ def bcd_scan(
     policy: StepsizePolicy,
     prox: ProxOp,
     horizon: int = 4096,
+    record_every: int = 1,
 ) -> BCDResult:
     """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
     shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
-    ``repro.sweep.sweep_bcd`` batch.
+    ``repro.sweep.sweep_bcd`` batch.  ``record_every=s`` materializes (and
+    computes the objective for) only every s-th event row, bitwise rows
+    ``s-1, 2s-1, ...`` of the stride-1 run (see ``engine.strided_scan``).
 
     Ragged worker-count buckets need NO active-worker mask here (unlike
     ``piag_scan``): there is no cross-worker reduction -- each event touches
@@ -78,21 +81,27 @@ def bcd_scan(
     # snapshots each worker last read (consistent-but-stale reads)
     x_read0 = jnp.broadcast_to(xb0, (n_workers,) + xb0.shape)
 
-    def step(carry, event):
-        xb, x_read, ss = carry
-        w, tau, j = event
-        xhat = x_read[w]                                   # Algorithm 2 line 4
-        g = grad_f(unpad(xhat))                            # grad at the stale read
-        gpad = jnp.pad(g, (0, m * db - d)).reshape(m, db)
-        gj = gpad[j]                                       # grad_j f(xhat)
-        gamma, ss = policy.step(ss, tau)                   # line 6 (delay-adaptive)
-        xj_new = prox.prox(xb[j] - gamma * gj, gamma)      # line 7, Eq. (5)
-        xb_new = xb.at[j].set(xj_new)                      # line 8 (atomic write)
-        x_read = x_read.at[w].set(xb_new)                  # line 10 (re-read)
-        return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma, tau, j)
+    def make_step(emit):
+        def step(carry, event):
+            xb, x_read, ss = carry
+            w, tau, j = event
+            xhat = x_read[w]                                 # Algorithm 2 line 4
+            g = grad_f(unpad(xhat))                          # grad at the stale read
+            gpad = jnp.pad(g, (0, m * db - d)).reshape(m, db)
+            gj = gpad[j]                                     # grad_j f(xhat)
+            gamma, ss = policy.step(ss, tau)                 # line 6 (delay-adaptive)
+            xj_new = prox.prox(xb[j] - gamma * gj, gamma)    # line 7, Eq. (5)
+            xb_new = xb.at[j].set(xj_new)                    # line 8 (atomic write)
+            x_read = x_read.at[w].set(xb_new)                # line 10 (re-read)
+            if not emit:
+                return (xb_new, x_read, ss), None
+            return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma,
+                                          tau, j)
+        return step
 
     carry0 = (xb0, x_read0, policy.init(horizon))
-    (xb_fin, _, ss_fin), (obj, gam, taus, blk) = jax.lax.scan(step, carry0, events)
+    (xb_fin, _, ss_fin), (obj, gam, taus, blk) = strided_scan(
+        make_step, carry0, events, record_every)
     return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus,
                      blocks=blk, clipped=clipped_count(ss_fin))
 
@@ -106,9 +115,12 @@ def run_async_bcd(
     blocks: np.ndarray,         # (K,) int32 block choices (uniform at random)
     policy: StepsizePolicy,
     prox: ProxOp,
-    horizon: int = 4096,
+    horizon: int | str = 4096,
+    record_every: int = 1,
 ) -> BCDResult:
     n = int(trace.worker.max()) + 1 if trace.n_events else 1
+    if horizon == "auto":  # measured-delay sizing off the trace itself
+        horizon = auto_horizon(int(np.max(trace.tau, initial=0)))
     events = (
         jnp.asarray(trace.worker, jnp.int32),
         jnp.asarray(trace.tau, jnp.int32),
@@ -118,7 +130,7 @@ def run_async_bcd(
     @jax.jit
     def run(events):
         return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
-                        horizon=horizon)
+                        horizon=horizon, record_every=record_every)
 
     return run(events)
 

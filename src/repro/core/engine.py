@@ -53,7 +53,46 @@ import numpy as np
 
 __all__ = ["WorkerModel", "EventTrace", "EventHeap", "simulate_parameter_server",
            "simulate_shared_memory", "sample_service_times", "trace_scan",
-           "generate_trace"]
+           "generate_trace", "strided_scan"]
+
+
+def strided_scan(make_step, carry, xs, record_every: int = 1):
+    """``lax.scan`` with decimated recording: keep every s-th output.
+
+    ``make_step(emit)`` returns the scan step; with ``emit=False`` it must
+    return ``(new_carry, None)`` and may SKIP output-only work (objective
+    evaluations, residual norms) -- the carry evolution must be identical
+    either way, which is what makes the recorded samples of a strided run
+    bitwise-equal to the corresponding rows of a stride-1 run.
+
+    ``record_every=1`` is exactly ``lax.scan(make_step(True), ...)`` (same
+    program, bitwise).  For s > 1 the trace is processed in chunks of s
+    events: the first s-1 advance the carry silently, the s-th emits, so the
+    recorded rows are events ``s-1, 2s-1, ..., K-1`` and output buffers
+    shrink by s.  ``K`` must be a multiple of s.
+    """
+    every = int(record_every)
+    if every < 1:
+        raise ValueError(f"record_every must be >= 1, got {record_every}")
+    if every == 1:
+        return jax.lax.scan(make_step(True), carry, xs)
+    tmap = jax.tree_util.tree_map
+    K = int(jax.tree_util.tree_leaves(xs)[0].shape[0])
+    if K % every:
+        raise ValueError(
+            f"record_every={every} must divide the trace length {K}")
+    xs_r = tmap(lambda e: e.reshape((K // every, every) + e.shape[1:]), xs)
+    silent, loud = make_step(False), make_step(True)
+
+    def chunk(c, xc):
+        def drop(cc, e):
+            cc, _ = silent(cc, e)
+            return cc, None
+
+        c, _ = jax.lax.scan(drop, c, tmap(lambda e: e[:every - 1], xc))
+        return loud(c, tmap(lambda e: e[every - 1], xc))
+
+    return jax.lax.scan(chunk, carry, xs_r)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,9 +23,12 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .engine import EventTrace
+import numpy as np
+
+from .engine import EventTrace, strided_scan
 from .prox import ProxOp
-from .stepsize import StepsizePolicy, StepsizeState, clipped_count as _clipped_of
+from .stepsize import (StepsizePolicy, StepsizeState, auto_horizon,
+                       clipped_count as _clipped_of)
 
 __all__ = ["PIAGResult", "piag_scan", "run_piag", "run_piag_logreg"]
 
@@ -52,6 +55,7 @@ def piag_scan(
     objective: Callable | None = None,  # P(x); defaults to mean worker loss + R
     horizon: int = 4096,
     active: jnp.ndarray | None = None,  # (n,) bool; ragged-bucket worker mask
+    record_every: int = 1,
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -68,6 +72,14 @@ def piag_scan(
     ``worker_data`` rows therefore only need to be finite).  The trace must
     be masked consistently (``engine.trace_scan(T, active=...)``) so padded
     workers never appear in ``events`` either.
+
+    ``record_every=s`` decimates the recorded trajectory: only every s-th
+    event's (objective, gamma, tau, residual) row is materialized -- and the
+    objective/residual are only COMPUTED on those events -- so big sweeps
+    stop paying an O(K) objective evaluation and an O(B, K) output for
+    trajectories they will subsample anyway.  The iterate path is unchanged
+    (recorded rows are bitwise rows ``s-1, 2s-1, ...`` of a stride-1 run);
+    K must be a multiple of s.
     """
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     grad_i = jax.grad(worker_loss)
@@ -100,29 +112,34 @@ def piag_scan(
     g_table = jax.vmap(init_grad)(jnp.arange(n))
     x_read0 = jax.tree_util.tree_map(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
-    def step(carry, event):
-        x, gtab, x_read, ss = carry
-        w, tau = event
-        # worker w returns grad f_w(x_read[w])  (Algorithm 1 line 12)
-        xw = jax.tree_util.tree_map(lambda leaf: leaf[w], x_read)
-        gw = grad_i(xw, *jax.tree_util.tree_leaves(data_at(w)))
-        gtab = jax.tree_util.tree_map(lambda buf, gnew: buf.at[w].set(gnew), gtab, gw)
-        # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
-        g = jax.tree_util.tree_map(aggregate, gtab)
-        gamma, ss = policy.step(ss, tau)
-        x_new = prox.prox(
-            jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
-        # line 20: hand x_{k+1} to the returning worker
-        x_read = jax.tree_util.tree_map(
-            lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
-        dx = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
-            jax.tree_util.tree_leaves(x_new), jax.tree_util.tree_leaves(x))))
-        res = jnp.where(gamma > 0, dx / jnp.maximum(gamma, 1e-30), 0.0)
-        out = (objective(x_new), gamma, tau, res)
-        return (x_new, gtab, x_read, ss), out
+    def make_step(emit):
+        def step(carry, event):
+            x, gtab, x_read, ss = carry
+            w, tau = event
+            # worker w returns grad f_w(x_read[w])  (Algorithm 1 line 12)
+            xw = jax.tree_util.tree_map(lambda leaf: leaf[w], x_read)
+            gw = grad_i(xw, *jax.tree_util.tree_leaves(data_at(w)))
+            gtab = jax.tree_util.tree_map(lambda buf, gnew: buf.at[w].set(gnew), gtab, gw)
+            # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
+            g = jax.tree_util.tree_map(aggregate, gtab)
+            gamma, ss = policy.step(ss, tau)
+            x_new = prox.prox(
+                jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
+            # line 20: hand x_{k+1} to the returning worker
+            x_read = jax.tree_util.tree_map(
+                lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            if not emit:  # decimated step: carry advances, nothing recorded
+                return (x_new, gtab, x_read, ss), None
+            dx = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                jax.tree_util.tree_leaves(x_new), jax.tree_util.tree_leaves(x))))
+            res = jnp.where(gamma > 0, dx / jnp.maximum(gamma, 1e-30), 0.0)
+            out = (objective(x_new), gamma, tau, res)
+            return (x_new, gtab, x_read, ss), out
+        return step
 
     carry0 = (x0, g_table, x_read0, policy.init(horizon))
-    (x_fin, _, _, ss_fin), (obj, gam, taus, res) = jax.lax.scan(step, carry0, events)
+    (x_fin, _, _, ss_fin), (obj, gam, taus, res) = strided_scan(
+        make_step, carry0, events, record_every)
     return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
                       opt_residual=res, clipped=_clipped_of(ss_fin))
 
@@ -135,19 +152,28 @@ def run_piag(
     policy: StepsizePolicy,
     prox: ProxOp,
     objective: Callable | None = None,
-    horizon: int = 4096,
+    horizon: int | str = 4096,
     use_tau_max: bool = True,
+    record_every: int = 1,
 ) -> PIAGResult:
-    """Run PIAG over a write-event trace; everything under one jit."""
+    """Run PIAG over a write-event trace; everything under one jit.
+
+    ``horizon='auto'`` sizes the step-size window buffer from the trace's
+    own measured delays (``auto_horizon``) instead of the 4096 worst-case
+    default -- bitwise-identical output, a fraction of the scan carry."""
+    taus = trace.tau_max if use_tau_max else trace.tau
+    if horizon == "auto":
+        horizon = auto_horizon(int(np.max(taus, initial=0)))
     events = (
         jnp.asarray(trace.worker, jnp.int32),
-        jnp.asarray(trace.tau_max if use_tau_max else trace.tau, jnp.int32),
+        jnp.asarray(taus, jnp.int32),
     )
 
     @jax.jit
     def run(events):
         return piag_scan(worker_loss, x0, worker_data, events, policy, prox,
-                         objective=objective, horizon=horizon)
+                         objective=objective, horizon=horizon,
+                         record_every=record_every)
 
     return run(events)
 

@@ -39,6 +39,31 @@ import jax.numpy as jnp
 DEFAULT_HORIZON = 4096
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def auto_horizon(tau_bar: int, slack: int = 1) -> int:
+    """Measured-delay horizon sizing: the smallest power-of-two buffer that
+    represents every observed delay with ``slack`` headroom.
+
+    The largest delay ``window_sum`` can represent is ``H - 1``, so any
+    ``H >= tau_bar + 1`` reproduces the default ``DEFAULT_HORIZON = 4096``
+    run *bitwise* (the circular cumulative-sum buffer reads the same
+    ``S_{k-tau}`` values whenever no delay clips).  Sizing by the measured
+    tau-bar instead of the worst-case default is the engine-level analogue of
+    the paper's thesis -- pay for the delays you *measure*, not the bound you
+    fear -- and shrinks the per-cell scan carry by ``4096 / H``.
+
+    ``slack`` (>= 1) is headroom above the measurement; the ``clipped``
+    counter stays as the runtime safety net for delays beyond it.
+    """
+    if slack < 1:
+        raise ValueError(f"auto-horizon slack must be >= 1, got {slack}")
+    return max(2, next_pow2(int(tau_bar) + int(slack)))
+
+
 class StepsizeState(NamedTuple):
     """Carry for a step-size policy inside ``lax.scan``/``jit``.
 
@@ -114,9 +139,12 @@ def _push(state: StepsizeState, gamma: jnp.ndarray, was_clipped: jnp.ndarray) ->
     new_total = state.total + gamma
     if state.cumbuf.ndim == 1:
         cumbuf = state.cumbuf.at[state.k % H].set(new_total)
-    else:  # batched state: scatter each cell's slot
-        slot = jnp.arange(H) == (state.k % H)[..., None]
-        cumbuf = jnp.where(slot, new_total[..., None], state.cumbuf)
+    else:  # batched state: indexed scatter of each cell's slot, mirroring
+        # the take_along_axis gather in window_sum (a boolean-mask + where
+        # here would materialize an O(H) write per step)
+        cumbuf = jnp.put_along_axis(
+            state.cumbuf, (state.k % H)[..., None], new_total[..., None],
+            axis=-1, inplace=False)
     return StepsizeState(
         k=state.k + 1,
         total=new_total,

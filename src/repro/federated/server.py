@@ -25,9 +25,11 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.engine import strided_scan
 from repro.core.prox import ProxOp
-from repro.core.stepsize import StepsizePolicy, clipped_count
+from repro.core.stepsize import StepsizePolicy, auto_horizon, clipped_count
 
 from .events import FederatedTrace
 
@@ -96,12 +98,15 @@ def fedasync_scan(
     policy: StepsizePolicy,
     objective: Optional[Callable] = None,
     horizon: int = 4096,
+    record_every: int = 1,
 ) -> FedResult:
     """The traceable FedAsync core: one ``lax.scan`` over upload events.
 
     Shared verbatim by the solo ``run_fedasync`` jit and the vmapped
     ``repro.sweep.sweep_fedasync`` batch (events and policy parameters get a
-    leading grid dimension there)."""
+    leading grid dimension there).  ``record_every=s`` materializes (and
+    evaluates the objective for) only every s-th upload row -- bitwise rows
+    ``s-1, 2s-1, ...`` of the stride-1 run (``engine.strided_scan``)."""
     n = _leaves(client_data)[0].shape[0]
     x_read0 = _tmap(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
@@ -110,20 +115,25 @@ def fedasync_scan(
 
     obj = objective if objective is not None else (lambda x: jnp.full((), jnp.nan))
 
-    def step(carry, event):
-        x, x_read, ss = carry
-        w, tau, steps, _, ver = event
-        xw = _tmap(lambda leaf: leaf[w], x_read)
-        xc = client_update(xw, steps, *_leaves(data_at(w)))
-        gamma, ss = policy.step(ss, tau)
-        # x <- (1 - alpha_t) x + alpha_t x_c
-        x_new = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
-        # the uploading client picks up the freshly-written model
-        x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
-        return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
+    def make_step(emit):
+        def step(carry, event):
+            x, x_read, ss = carry
+            w, tau, steps, _, ver = event
+            xw = _tmap(lambda leaf: leaf[w], x_read)
+            xc = client_update(xw, steps, *_leaves(data_at(w)))
+            gamma, ss = policy.step(ss, tau)
+            # x <- (1 - alpha_t) x + alpha_t x_c
+            x_new = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
+            # the uploading client picks up the freshly-written model
+            x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            if not emit:
+                return (x_new, x_read, ss), None
+            return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
+        return step
 
     carry0 = (x0, x_read0, policy.init(horizon))
-    (x_fin, _, ss_fin), (o, g, t, v) = jax.lax.scan(step, carry0, events)
+    (x_fin, _, ss_fin), (o, g, t, v) = strided_scan(
+        make_step, carry0, events, record_every)
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
                      clipped=clipped_count(ss_fin))
 
@@ -135,15 +145,22 @@ def run_fedasync(
     trace: FederatedTrace,
     policy: StepsizePolicy,     # gamma_prime = alpha; emits alpha * s(tau)
     objective: Optional[Callable] = None,   # P(x); nan if omitted
-    horizon: int = 4096,
+    horizon: int | str = 4096,
+    record_every: int = 1,
 ) -> FedResult:
-    """FedAsync: staleness-weighted model mixing, one write per upload."""
+    """FedAsync: staleness-weighted model mixing, one write per upload.
+
+    ``horizon='auto'`` sizes the weight-policy buffer from the trace's own
+    measured staleness (bitwise-identical whenever delays fit)."""
+    if horizon == "auto":
+        horizon = auto_horizon(int(np.max(np.asarray(trace.tau), initial=0)))
     _, _, events = _prep(x0, client_data, trace)
 
     @jax.jit
     def run(events):
         return fedasync_scan(client_update, x0, client_data, events, policy,
-                             objective=objective, horizon=horizon)
+                             objective=objective, horizon=horizon,
+                             record_every=record_every)
 
     return run(events)
 
@@ -158,6 +175,7 @@ def fedbuff_scan(
     buffer_size: int = 1,       # |R|; must match the trace's buffer
     objective: Optional[Callable] = None,
     horizon: int = 4096,
+    record_every: int = 1,
 ) -> FedResult:
     """The traceable FedBuff core: buffered semi-async aggregation of
     staleness-weighted deltas as one ``lax.scan`` over upload events.
@@ -178,20 +196,26 @@ def fedbuff_scan(
     obj = objective if objective is not None else (lambda x: jnp.full((), jnp.nan))
     delta0 = _tmap(jnp.zeros_like, x0)
 
-    def step(carry, event):
-        x, x_read, delta, ss = carry
-        w, tau, steps, agg, ver = event
-        xw = _tmap(lambda leaf: leaf[w], x_read)
-        xc = client_update(xw, steps, *_leaves(data_at(w)))
-        gamma, ss = policy.step(ss, tau)
-        delta = _tmap(lambda d, c, a: d + gamma * (c - a), delta, xc, xw)
-        x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d, x, delta)
-        delta = _tmap(lambda d: (1.0 - agg) * d, delta)
-        x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
-        return (x_new, x_read, delta, ss), (obj(x_new), gamma, tau, ver)
+    def make_step(emit):
+        def step(carry, event):
+            x, x_read, delta, ss = carry
+            w, tau, steps, agg, ver = event
+            xw = _tmap(lambda leaf: leaf[w], x_read)
+            xc = client_update(xw, steps, *_leaves(data_at(w)))
+            gamma, ss = policy.step(ss, tau)
+            delta = _tmap(lambda d, c, a: d + gamma * (c - a), delta, xc, xw)
+            x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d, x,
+                          delta)
+            delta = _tmap(lambda d: (1.0 - agg) * d, delta)
+            x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            if not emit:
+                return (x_new, x_read, delta, ss), None
+            return (x_new, x_read, delta, ss), (obj(x_new), gamma, tau, ver)
+        return step
 
     carry0 = (x0, x_read0, delta0, policy.init(horizon))
-    (x_fin, _, _, ss_fin), (o, g, t, v) = jax.lax.scan(step, carry0, events)
+    (x_fin, _, _, ss_fin), (o, g, t, v) = strided_scan(
+        make_step, carry0, events, record_every)
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
                      clipped=clipped_count(ss_fin))
 
@@ -205,16 +229,20 @@ def run_fedbuff(
     eta: float = 1.0,           # server learning rate applied per aggregation
     buffer_size: int = 1,       # |R|; must match the trace's buffer
     objective: Optional[Callable] = None,
-    horizon: int = 4096,
+    horizon: int | str = 4096,
+    record_every: int = 1,
 ) -> FedResult:
     """FedBuff [Nguyen et al. '22] over a simulated trace; one jit."""
+    if horizon == "auto":
+        horizon = auto_horizon(int(np.max(np.asarray(trace.tau), initial=0)))
     _, _, events = _prep(x0, client_data, trace)
 
     @jax.jit
     def run(events):
         return fedbuff_scan(client_update, x0, client_data, events, policy,
                             eta=eta, buffer_size=buffer_size,
-                            objective=objective, horizon=horizon)
+                            objective=objective, horizon=horizon,
+                            record_every=record_every)
 
     return run(events)
 

@@ -51,6 +51,11 @@ def load_spec(path: str) -> api.ExperimentSpec:
     return spec
 
 
+def parse_horizon(value: str):
+    """``'auto'`` (measured-delay sizing) or a concrete integer H."""
+    return "auto" if value == "auto" else int(value)
+
+
 def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
     federated = a.solver in ("fedasync", "fedbuff")
     policy_names = tuple((a.policies or
@@ -62,7 +67,8 @@ def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
         problem=api.ProblemSpec(
             kind="logreg",
             params=dict(n_samples=a.samples, dim=a.dim, seed=0)),
-        solver=api.SolverSpec(name=a.solver, horizon=a.horizon, m=a.blocks,
+        solver=api.SolverSpec(name=a.solver,
+                              horizon=parse_horizon(a.horizon), m=a.blocks,
                               eta=a.eta, buffer_size=a.buffer_size),
         topology=api.TopologySpec(kind="edge" if federated else "standard",
                                   n_workers=widths),
@@ -72,7 +78,8 @@ def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
         # pinned at 0 (federated -- not the federated story)
         policies=api.PolicyGridSpec(names=policy_names,
                                     seeds=tuple(range(a.seeds))),
-        execution=api.ExecutionSpec(backend=a.backend),
+        execution=api.ExecutionSpec(backend=a.backend,
+                                    record_every=a.record_every),
         n_events=a.events)
 
 
@@ -116,10 +123,16 @@ def main() -> None:
                     help="fedbuff server rate")
     ap.add_argument("--buffer-size", type=int, default=1,
                     help="fedbuff |R| (fedasync forces 1)")
-    ap.add_argument("--horizon", type=int, default=4096,
+    ap.add_argument("--horizon", default="4096",
                     help="step-size window-sum horizon H (largest "
                     "representable delay is H - 1; specs whose measured "
-                    "delay bound exceeds it fail fast)")
+                    "delay bound exceeds it fail fast), or 'auto': size H "
+                    "to next_pow2(measured tau-bar + 1) -- bitwise-equal "
+                    "results, a fraction of the scan carry")
+    ap.add_argument("--record-every", type=int, default=1,
+                    help="decimated trace recording stride s: materialize "
+                    "(and evaluate the objective at) only every s-th event "
+                    "row; must divide --events (stride 1 = record all)")
     ap.add_argument("--json", default=None, help="write per-cell results here")
     a = ap.parse_args()
     if a.shard:
@@ -131,10 +144,13 @@ def main() -> None:
     grid, n_dev = res.grid, len(jax.devices())
     policy_names = list(dict.fromkeys(c.policy_name for c in grid.cells))
     widths = sorted({c.n_workers for c in grid.cells})
+    auto = spec.solver.horizon == "auto"
     print(f"sweep[{res.solver}/{res.backend}]: {len(grid)} cells "
           f"({','.join(policy_names)} x "
           f"{len({c.seed for c in grid.cells})} seeds x widths {widths}), "
-          f"{grid.n_events} events, tau_bar={res.tau_bar}, devices={n_dev}")
+          f"{grid.n_events} events, tau_bar={res.tau_bar}, "
+          f"horizon={res.horizon}{' (auto)' if auto else ''}, "
+          f"record_every={res.record_every}, devices={n_dev}")
     print(f"{res.backend} backend: {res.elapsed_s:.2f}s "
           f"({res.elapsed_s / len(grid) * 1e3:.1f} ms/cell incl. compile)")
     print_summary(res)
@@ -143,6 +159,8 @@ def main() -> None:
         Path(a.json).write_text(json.dumps(
             {"solver": res.solver, "backend": res.backend,
              "events": grid.n_events, "tau_bar": res.tau_bar,
+             "horizon": res.horizon, "horizon_auto": auto,
+             "record_every": res.record_every,
              "devices": n_dev, "seconds": res.elapsed_s,
              "clipped": analysis.clipped_summary(res.clipped),
              "cells": res.to_rows()}, indent=2) + "\n")

@@ -41,13 +41,15 @@ Quick taste::
         n_workers=[4, 8])          # ragged: bucketed + masked automatically
     res = sweep_piag_logreg(prob, grid, L1(lam=prob.lam1))  # (128, 2000)
 """
+from .cache import (clear_program_cache, program_cache_stats)
 from .grid import (SweepBucket, SweepCell, SweepGrid, make_grid,
                    measure_tau_bar, next_pow2, standard_topologies,
                    standard_topology_factories)
 from .policies import POLICY_IDS, ParamPolicy, PolicyParams, policy_params, stack_params
 from .runners import (make_sweep_bcd, make_sweep_fedasync,
                       make_sweep_fedasync_fused, make_sweep_fedbuff,
-                      make_sweep_piag, run_bucketed, sweep_bcd,
+                      make_sweep_piag, measure_fed_tau_bar,
+                      resolve_grid_horizon, run_bucketed, sweep_bcd,
                       sweep_bcd_logreg, sweep_fedasync,
                       sweep_fedasync_problem, sweep_fedbuff,
                       sweep_fedbuff_problem, sweep_piag, sweep_piag_logreg)
@@ -60,6 +62,8 @@ from .shard import (cell_mesh, make_sharded_sweep_bcd,
 __all__ = [
     "SweepBucket", "SweepCell", "SweepGrid", "make_grid", "measure_tau_bar",
     "next_pow2", "standard_topologies", "standard_topology_factories",
+    "clear_program_cache", "program_cache_stats", "measure_fed_tau_bar",
+    "resolve_grid_horizon",
     "POLICY_IDS", "ParamPolicy", "PolicyParams", "policy_params",
     "stack_params", "make_sweep_bcd", "make_sweep_fedasync",
     "make_sweep_fedasync_fused", "make_sweep_fedbuff", "make_sweep_piag",

@@ -1,0 +1,112 @@
+"""Bounded cache of built sweep executables (`repro.sweep.cache`).
+
+Every ``sweep_*`` / ``sharded_sweep_*`` call used to rebuild its per-bucket
+cell closure and re-``jit`` it -- so a ragged grid re-traced one program per
+bucket on EVERY call, and repeated ``api.run`` invocations of the same spec
+paid the full compile again.  ``jax.jit`` caches traces per *function
+object*; the missing piece is keeping the function objects alive and keyed.
+
+``cached_program(key, build)`` is that piece: an LRU keyed on the program's
+static configuration -- ``(solver tag, bucket width, masked?, horizon,
+record_every, ... , captured objects)``.  Captured objects (loss closures,
+data pytrees, prox ops, meshes) are keyed by IDENTITY via ``IdKey``; the
+cache holds a strong reference through the key, so an id can never be
+recycled while its entry lives.  Two calls that pass the *same* objects and
+static knobs therefore reuse the same jitted callable -- and jax's own
+shape-keyed trace cache underneath it -- while different objects (or a
+mutated knob) build fresh.
+
+The cache is deliberately small and clearable: programs pin their captured
+constants (worker data!) in memory, so eviction is as important as reuse.
+
+CONTRACT: identity keying means captured arrays are treated as FROZEN --
+mutating a numpy ``worker_data`` buffer in place between sweeps would keep
+serving the executable compiled against the old contents (the same is true
+of any jit-captured constant, but before this cache each call re-traced and
+re-read).  Treat sweep inputs as immutable, or build new arrays; after an
+in-place mutation, call ``clear_program_cache()``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Tuple
+
+import jax
+
+__all__ = ["IdKey", "LRU", "tree_key", "cached_program",
+           "clear_program_cache", "program_cache_stats",
+           "PROGRAM_CACHE_MAXSIZE"]
+
+PROGRAM_CACHE_MAXSIZE = 128
+
+
+class IdKey:
+    """Identity-keyed cache handle: hashes/compares by ``id(obj)`` while
+    holding a strong reference, so the id stays valid for the entry's life."""
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: Any):
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return id(self.obj)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, IdKey) and self.obj is other.obj
+
+    def __repr__(self) -> str:
+        return f"IdKey({type(self.obj).__name__}@{id(self.obj):#x})"
+
+
+def tree_key(tree: Any) -> Tuple:
+    """Identity key of a pytree: one ``IdKey`` per leaf (None for a leafless
+    tree).  Array leaves are unhashable by design; identity is the right
+    equivalence for captured constants -- same arrays, same program."""
+    return tuple(IdKey(leaf) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class LRU:
+    """Tiny LRU keyed on hashable tuples; also reused by ``repro.api`` to
+    memoize resolve-time artifacts (problems, prox ops, runner pieces)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self.data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, build: Callable[[], Any]):
+        try:
+            val = self.data[key]
+        except KeyError:
+            self.misses += 1
+            val = build()
+            self.data[key] = val
+            while len(self.data) > self.maxsize:
+                self.data.popitem(last=False)
+            return val
+        self.hits += 1
+        self.data.move_to_end(key)
+        return val
+
+
+_PROGRAMS = LRU(PROGRAM_CACHE_MAXSIZE)
+
+
+def cached_program(key: Tuple, build: Callable[[], Any]):
+    """Return the cached executable for ``key``, building (and caching) it on
+    first use.  ``key`` must be a tuple of hashables; wrap captured objects
+    in ``IdKey`` / ``tree_key``."""
+    return _PROGRAMS.get(key, build)
+
+
+def clear_program_cache() -> None:
+    """Drop every cached executable (tests; memory pressure)."""
+    _PROGRAMS.data.clear()
+    _PROGRAMS.hits = _PROGRAMS.misses = 0
+
+
+def program_cache_stats() -> dict:
+    return {"size": len(_PROGRAMS.data), "hits": _PROGRAMS.hits,
+            "misses": _PROGRAMS.misses, "maxsize": _PROGRAMS.maxsize}

@@ -41,13 +41,18 @@ import numpy as np
 
 from repro.core.engine import (WorkerModel, heterogeneous_workers,
                                sample_service_times, trace_scan)
-from repro.core.stepsize import StepsizePolicy
+from repro.core.stepsize import StepsizePolicy, next_pow2
 
 from .policies import PolicyParams, stack_params
 
 __all__ = ["SweepCell", "SweepGrid", "SweepBucket", "make_grid",
            "measure_tau_bar", "next_pow2", "standard_topologies",
            "standard_topology_factories"]
+
+# one jitted trace-delay program for every tau-bar measurement in the repo
+# (module-level so repeated resolves/builds reuse the trace instead of
+# re-tracing an anonymous jit each call; jax re-specializes per shape)
+_tau_max_jit = jax.jit(jax.vmap(lambda T: trace_scan(T).tau_max))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,10 +68,6 @@ class SweepCell:
     @property
     def n_workers(self) -> int:
         return len(self.workers)
-
-
-def next_pow2(n: int) -> int:
-    return 1 << (max(int(n), 1) - 1).bit_length()
 
 
 class SweepBucket(NamedTuple):
@@ -98,6 +99,28 @@ class SweepGrid:
 
     def __len__(self) -> int:
         return len(self.cells)
+
+    def measure_tau_bar(self) -> int:
+        """Worst-case trace delay over the grid's own (topology, seed) cells
+        -- the measured bound ``horizon='auto'`` sizes buffers from.
+
+        Policies don't influence traces, so cells are deduplicated by
+        (topology, seed) and measured per worker-count group with the shared
+        jitted trace program (PIAG/BCD service-time grids only; federated
+        staleness is measured by ``runners.measure_fed_tau_bar``)."""
+        seen = {}
+        for c in self.cells:
+            seen.setdefault((c.topology_name, c.seed), c)
+        by_width: Dict[int, list] = {}
+        for c in seen.values():
+            by_width.setdefault(c.n_workers, []).append(c)
+        worst = 0
+        for cs in by_width.values():
+            Ts = np.stack([sample_service_times(c.workers, self.n_events + 1,
+                                                seed=c.seed) for c in cs])
+            taus = _tau_max_jit(jnp.asarray(Ts))
+            worst = max(worst, int(np.max(np.asarray(taus))))
+        return worst
 
     @property
     def is_ragged(self) -> bool:
@@ -233,8 +256,7 @@ def measure_tau_bar(topologies: Dict[str, Sequence], seeds: Sequence[int],
         Ts = np.stack([
             sample_service_times(ws, n_events + 1, seed=int(s))
             for ws in groups for s in seeds])
-        taus = jax.jit(jax.vmap(lambda T: trace_scan(T).tau_max))(
-            jnp.asarray(Ts))
+        taus = _tau_max_jit(jnp.asarray(Ts))
         worst = max(worst, int(np.max(np.asarray(taus))))
     return worst
 

@@ -29,7 +29,8 @@ axis across devices.
 from __future__ import annotations
 
 import warnings
-from typing import Callable, Optional, Sequence, Tuple
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +40,13 @@ from repro.core.bcd import BCDResult, bcd_scan, sample_blocks
 from repro.core.engine import trace_scan
 from repro.core.piag import PIAGResult, piag_scan
 from repro.core.prox import ProxOp
+from repro.core.stepsize import auto_horizon
 from repro.federated.events import (ClientRounds, client_arrays,
                                     default_fed_steps, federated_trace_scan,
                                     sample_client_rounds, simulate_federated)
 from repro.federated.server import (FedResult, fedasync_scan, fedbuff_scan)
 
+from .cache import IdKey, LRU, cached_program, tree_key
 from .grid import SweepBucket, SweepGrid
 from .policies import ParamPolicy
 
@@ -51,10 +54,53 @@ __all__ = ["make_sweep_piag", "sweep_piag", "sweep_piag_logreg",
            "make_sweep_bcd", "sweep_bcd", "sweep_bcd_logreg",
            "make_sweep_fedasync", "sweep_fedasync", "sweep_fedasync_problem",
            "make_sweep_fedbuff", "sweep_fedbuff", "sweep_fedbuff_problem",
-           "run_bucketed"]
+           "run_bucketed", "resolve_grid_horizon", "measure_fed_tau_bar"]
+
+Horizon = Union[int, str]  # a concrete H or "auto" (measured-delay sizing)
 
 
 # ------------------------------------------------------------- plumbing ----
+
+# grids are frozen dataclasses and their traces are pure functions of the
+# pre-sampled randomness, so the measured bound is memoized per grid --
+# repeated 'auto' sweeps skip the O(B*K) re-measurement, like the programs
+_TAU_BAR_MEMO = LRU(64)
+
+
+def _donate_default() -> bool:
+    """Donation of the stacked input tensors is a real memory win on
+    accelerators but a no-op plus a per-compile warning on the CPU backend
+    -- gate it (evaluated at build time, after any forced-device flags)."""
+    return jax.default_backend() != "cpu"
+
+
+def resolve_grid_horizon(horizon: Horizon, grid: SweepGrid, *,
+                         fed: bool = False, buffer_size: int = 1,
+                         n_steps: Optional[int] = None,
+                         slack: int = 1,
+                         bound: Optional[int] = None) -> int:
+    """THE one home of the ``horizon='auto'|int`` -> concrete-H rule
+    (shared by every runner here, ``.shard``, and ``api.run``'s resolver,
+    which passes its declared/already-measured ``bound`` and spec slack).
+
+    ``'auto'`` measures the grid's own worst-case delay (service-time trace
+    delays for PIAG/BCD, upload staleness for the federated servers;
+    memoized per grid) and sizes the circular window buffer to
+    ``next_pow2(bound + slack)`` -- bitwise-identical results to any larger
+    horizon, at a fraction of the scan carry (``core.stepsize.auto_horizon``).
+    """
+    if horizon != "auto":
+        return int(horizon)
+    if bound is None:
+        key = (IdKey(grid), fed, buffer_size if fed else 0,
+               n_steps if fed else None)
+        bound = _TAU_BAR_MEMO.get(
+            key,
+            lambda: (measure_fed_tau_bar(grid, buffer_size=buffer_size,
+                                         n_steps=n_steps)
+                     if fed else grid.measure_tau_bar()))
+    return auto_horizon(bound, slack)
+
 
 def _warn_legacy(name: str) -> None:
     """The problem-level conveniences are shims over ``repro.api`` now; the
@@ -96,7 +142,7 @@ def _slice_workers(worker_data, width: int):
 # ---------------------------------------------------------------- PIAG ----
 
 def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-               use_tau_max, masked):
+               use_tau_max, masked, record_every=1):
     """The per-cell program (trace generation fused with the solver scan);
     ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
     the sharded one."""
@@ -106,45 +152,61 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
             events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
-                             horizon=horizon, active=active)
+                             horizon=horizon, active=active,
+                             record_every=record_every)
     else:
         def cell(T, pp):
             tr = trace_scan(T)
             events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
-                             horizon=horizon)
+                             horizon=horizon, record_every=record_every)
     return cell
 
 
 def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
                     objective: Optional[Callable] = None, horizon: int = 4096,
-                    use_tau_max: bool = True, masked: bool = False) -> Callable:
+                    use_tau_max: bool = True, masked: bool = False,
+                    record_every: int = 1, donate: bool = False) -> Callable:
     """Build the batched PIAG program.
 
     Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
     PIAGResult`` with a leading B on every leaf; with ``masked=True`` the
     signature grows an ``active (B, n) bool`` argument between the two (the
-    ragged-bucket form).
+    ragged-bucket form).  ``donate=True`` donates the stacked service-time
+    tensor (arg 0) so its buffer is reused in place -- pass a fresh array
+    per call (the ``sweep_*`` runners do).
     """
     return jax.jit(jax.vmap(_piag_cell(
         worker_loss, x0, worker_data, prox, objective, horizon, use_tau_max,
-        masked)))
+        masked, record_every)),
+        donate_argnums=(0,) if donate else ())
 
 
 def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                prox: ProxOp, objective: Optional[Callable] = None,
-               horizon: int = 4096, use_tau_max: bool = True,
-               bucket_widths: Optional[Sequence[int]] = None) -> PIAGResult:
+               horizon: Horizon = 4096, use_tau_max: bool = True,
+               bucket_widths: Optional[Sequence[int]] = None,
+               record_every: int = 1) -> PIAGResult:
     """Run PIAG on every cell of ``grid`` in one batched program per
     bucket (a homogeneous grid is exactly one program).  ``bucket_widths``
-    overrides the ragged grid's padded-width menu (``SweepGrid.buckets``)."""
+    overrides the ragged grid's padded-width menu (``SweepGrid.buckets``).
+
+    Per-bucket executables are cached (``sweep.cache``) keyed on the static
+    configuration and the identity of the captured objects, so repeated
+    calls -- and every bucket after the first sweep of a ragged grid --
+    skip rebuild+retrace entirely.  ``horizon='auto'`` sizes the window
+    buffer from the grid's measured tau-bar (``resolve_grid_horizon``)."""
+    horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
-        wd = _slice_workers(worker_data, b.width)
-        fn = make_sweep_piag(worker_loss, x0, wd, prox, objective=objective,
-                             horizon=horizon, use_tau_max=use_tau_max,
-                             masked=not b.uniform)
+        key = ("piag", b.width, not b.uniform, horizon, use_tau_max,
+               record_every, IdKey(worker_loss), tree_key(x0),
+               tree_key(worker_data), IdKey(prox), IdKey(objective))
+        fn = cached_program(key, lambda: make_sweep_piag(
+            worker_loss, x0, _slice_workers(worker_data, b.width), prox,
+            objective=objective, horizon=horizon, use_tau_max=use_tau_max,
+            masked=not b.uniform, record_every=record_every, donate=_donate_default()))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         if b.uniform:
@@ -172,43 +234,55 @@ def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 
 # ----------------------------------------------------------- Async-BCD ----
 
-def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked):
+def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked,
+              record_every=1):
     if masked:
         def cell(T, active, blocks, pp):
             tr = trace_scan(T, active=active)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
-                            ParamPolicy(pp), prox, horizon=horizon)
+                            ParamPolicy(pp), prox, horizon=horizon,
+                            record_every=record_every)
     else:
         def cell(T, blocks, pp):
             tr = trace_scan(T)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
-                            ParamPolicy(pp), prox, horizon=horizon)
+                            ParamPolicy(pp), prox, horizon=horizon,
+                            record_every=record_every)
     return cell
 
 
 def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                    n_workers: int, prox: ProxOp, horizon: int = 4096,
-                   masked: bool = False) -> Callable:
+                   masked: bool = False, record_every: int = 1,
+                   donate: bool = False) -> Callable:
     """Build the batched Async-BCD program: jitted ``fn(service_times
     (B, n, K+1)[, active (B, n)], blocks (B, K), params (B,)) ->
     BCDResult``.  BCD has no cross-worker reduction, so the mask only
     guards the trace (see ``core.bcd.bcd_scan``)."""
     return jax.jit(jax.vmap(_bcd_cell(
-        grad_f, objective, x0, m, n_workers, prox, horizon, masked)))
+        grad_f, objective, x0, m, n_workers, prox, horizon, masked,
+        record_every)),
+        donate_argnums=(0,) if donate else ())
 
 
 def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
-              grid: SweepGrid, prox: ProxOp, horizon: int = 4096,
-              bucket_widths: Optional[Sequence[int]] = None) -> BCDResult:
+              grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
+              bucket_widths: Optional[Sequence[int]] = None,
+              record_every: int = 1) -> BCDResult:
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
-    runs."""
+    runs.  Per-bucket executables are cached; ``horizon='auto'`` sizes the
+    window buffer from the grid's measured tau-bar."""
+    horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
-        fn = make_sweep_bcd(grad_f, objective, x0, m, b.width, prox,
-                            horizon=horizon, masked=not b.uniform)
+        key = ("bcd", b.width, not b.uniform, horizon, m, record_every,
+               IdKey(grad_f), IdKey(objective), tree_key(x0), IdKey(prox))
+        fn = cached_program(key, lambda: make_sweep_bcd(
+            grad_f, objective, x0, m, b.width, prox, horizon=horizon,
+            masked=not b.uniform, record_every=record_every, donate=_donate_default()))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
@@ -287,7 +361,8 @@ def _check_fed_diag(n_up, exhausted, n_uploads: int, n_steps: int) -> None:
 
 def make_sweep_fedasync(client_update: Callable, x0, client_data,
                         objective: Optional[Callable] = None,
-                        horizon: int = 4096) -> Callable:
+                        horizon: int = 4096,
+                        record_every: int = 1) -> Callable:
     """Build the events-driven batched FedAsync program: jitted
     ``fn(events (5 x (B, K)), params (B,)) -> FedResult``.  This is the
     reference-path entry (events stacked on host, e.g. by
@@ -297,26 +372,27 @@ def make_sweep_fedasync(client_update: Callable, x0, client_data,
     def cell(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
-                             horizon=horizon)
+                             horizon=horizon, record_every=record_every)
 
     return jax.jit(jax.vmap(cell))
 
 
-def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon):
+def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon,
+                           record_every=1):
     def server_scan(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
-                             horizon=horizon)
+                             horizon=horizon, record_every=record_every)
     return server_scan
 
 
 def _fedbuff_scan_adapter(client_update, x0, client_data, objective, horizon,
-                          eta, buffer_size):
+                          eta, buffer_size, record_every=1):
     def server_scan(events, pp):
         return fedbuff_scan(client_update, x0, client_data, events,
                             ParamPolicy(pp), eta=eta,
                             buffer_size=buffer_size, objective=objective,
-                            horizon=horizon)
+                            horizon=horizon, record_every=record_every)
     return server_scan
 
 
@@ -324,30 +400,64 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
                               n_uploads: int, buffer_size: int = 1,
                               objective: Optional[Callable] = None,
                               horizon: int = 4096,
-                              n_steps: Optional[int] = None) -> Callable:
+                              n_steps: Optional[int] = None,
+                              record_every: int = 1,
+                              donate: bool = False) -> Callable:
     """Build the fused batched FedAsync program: jitted ``fn(rounds,
     cparams, active, params) -> (FedResult, n_uploads (B,), exhausted (B,))``
     with trace generation (``federated_trace_scan``) and the server scan in
-    ONE executable, like the PIAG/BCD runners."""
+    ONE executable, like the PIAG/BCD runners.  ``donate=True`` donates the
+    stacked client-rounds tensors (arg 0) -- pass fresh arrays per call."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedasync_scan_adapter(client_update, x0, client_data, objective,
-                               horizon),
-        n_uploads, buffer_size, n_steps)))
+                               horizon, record_every),
+        n_uploads, buffer_size, n_steps)),
+        donate_argnums=(0,) if donate else ())
 
 
 def make_sweep_fedbuff(client_update: Callable, x0, client_data,
                        n_uploads: int, eta: float = 1.0, buffer_size: int = 1,
                        objective: Optional[Callable] = None,
                        horizon: int = 4096,
-                       n_steps: Optional[int] = None) -> Callable:
+                       n_steps: Optional[int] = None,
+                       record_every: int = 1,
+                       donate: bool = False) -> Callable:
     """Build the fused batched FedBuff program (same shape as
     ``make_sweep_fedasync_fused`` with the buffered-delta server scan)."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedbuff_scan_adapter(client_update, x0, client_data, objective,
-                              horizon, eta, buffer_size),
-        n_uploads, buffer_size, n_steps)))
+                              horizon, eta, buffer_size, record_every),
+        n_uploads, buffer_size, n_steps)),
+        donate_argnums=(0,) if donate else ())
+
+
+@partial(jax.jit, static_argnames=("n_uploads", "buffer_size", "n_steps"))
+def _fed_taus_jit(rounds, cparams, active, n_uploads, buffer_size, n_steps):
+    def one(r, cp, a):
+        p_drop, rejoin, epochs = cp
+        return federated_trace_scan(r, p_drop, rejoin, epochs, n_uploads,
+                                    buffer_size=buffer_size, n_steps=n_steps,
+                                    active=a).tau
+    return jax.vmap(one)(rounds, cparams, active)
+
+
+def measure_fed_tau_bar(grid: SweepGrid, buffer_size: int = 1,
+                        n_steps: Optional[int] = None) -> int:
+    """Worst-case upload staleness over a federated grid's pre-sampled
+    traces -- the federated analogue of ``SweepGrid.measure_tau_bar``, and
+    what ``horizon='auto'`` sizes the weight-policy buffer from.  Runs only
+    the jitted trace scan (no client updates), one vmapped program per
+    bucket."""
+    K = grid.n_events
+    S = default_fed_steps(K) if n_steps is None else int(n_steps)
+    worst = 0
+    for b in grid.buckets():
+        rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
+        taus = _fed_taus_jit(rounds, cparams, active, K, buffer_size, S)
+        worst = max(worst, int(np.max(np.asarray(taus), initial=0)))
+    return worst
 
 
 def _stack_fed_events(grid: SweepGrid, buffer_size: int,
@@ -374,8 +484,13 @@ def _stack_fed_events(grid: SweepGrid, buffer_size: int,
 
 def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
                buffer_size: int, reference: bool, n_steps: Optional[int],
-               bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
-    """Shared driver for ``sweep_fedasync`` / ``sweep_fedbuff``."""
+               bucket_widths: Optional[Sequence[int]] = None,
+               cache_key: Optional[Tuple] = None) -> FedResult:
+    """Shared driver for ``sweep_fedasync`` / ``sweep_fedbuff``.
+
+    ``cache_key`` is the wrapper's static-configuration tuple; per-bucket
+    fused executables are cached under ``cache_key + (width,)`` so repeated
+    sweeps (and later buckets of ragged grids) skip rebuild+retrace."""
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
     if reference:
@@ -384,8 +499,10 @@ def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
                   grid.policy_params())
 
     def run_bucket(b: SweepBucket):
-        cd = _slice_workers(client_data, b.width)
-        fn = make_fused(cd, S)
+        def build():
+            return make_fused(_slice_workers(client_data, b.width), S)
+        fn = build() if cache_key is None else cached_program(
+            cache_key + (b.width, S), build)
         rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
         res, n_up, exhausted = fn(rounds, cparams, active,
                                   b.grid.policy_params())
@@ -397,10 +514,11 @@ def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
 
 def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    objective: Optional[Callable] = None,
-                   buffer_size: int = 1, horizon: int = 4096,
+                   buffer_size: int = 1, horizon: Horizon = 4096,
                    reference: bool = False,
                    n_steps: Optional[int] = None,
-                   bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
+                   bucket_widths: Optional[Sequence[int]] = None,
+                   record_every: int = 1) -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
     ``ClientModel`` lists.
 
@@ -410,40 +528,59 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
     ``reference=True`` routes trace generation through the Python heapq
     reference instead (same pre-sampled rounds, bitwise-equal events) --
     the escape hatch for validating the fused path or debugging host-side.
+    ``horizon='auto'`` sizes the weight-policy buffer from the grid's
+    measured upload staleness (``measure_fed_tau_bar``).
     """
+    horizon = resolve_grid_horizon(horizon, grid, fed=True,
+                                   buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedasync_scan_adapter(client_update, x0, client_data,
-                                     objective, horizon)
+                                     objective, horizon, record_every)
 
     def make_fused(cd, S):
         return make_sweep_fedasync_fused(client_update, x0, cd, grid.n_events,
                                          buffer_size=buffer_size,
                                          objective=objective, horizon=horizon,
-                                         n_steps=S)
+                                         n_steps=S, record_every=record_every,
+                                         donate=_donate_default())
 
+    key = ("fedasync", grid.n_events, buffer_size, horizon, record_every,
+           IdKey(client_update), tree_key(x0), tree_key(client_data),
+           IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
-                      reference, n_steps, bucket_widths=bucket_widths)
+                      reference, n_steps, bucket_widths=bucket_widths,
+                      cache_key=key)
 
 
 def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                   eta: float = 1.0, buffer_size: int = 1,
-                  objective: Optional[Callable] = None, horizon: int = 4096,
+                  objective: Optional[Callable] = None,
+                  horizon: Horizon = 4096,
                   reference: bool = False,
                   n_steps: Optional[int] = None,
-                  bucket_widths: Optional[Sequence[int]] = None) -> FedResult:
+                  bucket_widths: Optional[Sequence[int]] = None,
+                  record_every: int = 1) -> FedResult:
     """Run FedBuff on every cell: fused jitted trace generation + buffered
     delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
-    program per bucket; ``reference=True`` as in ``sweep_fedasync``."""
+    program per bucket; ``reference=True`` / ``horizon='auto'`` as in
+    ``sweep_fedasync``."""
+    horizon = resolve_grid_horizon(horizon, grid, fed=True,
+                                   buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedbuff_scan_adapter(client_update, x0, client_data, objective,
-                                    horizon, eta, buffer_size)
+                                    horizon, eta, buffer_size, record_every)
 
     def make_fused(cd, S):
         return make_sweep_fedbuff(client_update, x0, cd, grid.n_events,
                                   eta=eta, buffer_size=buffer_size,
                                   objective=objective, horizon=horizon,
-                                  n_steps=S)
+                                  n_steps=S, record_every=record_every,
+                                  donate=_donate_default())
 
+    key = ("fedbuff", grid.n_events, eta, buffer_size, horizon, record_every,
+           IdKey(client_update), tree_key(x0), tree_key(client_data),
+           IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
-                      reference, n_steps, bucket_widths=bucket_widths)
+                      reference, n_steps, bucket_widths=bucket_widths,
+                      cache_key=key)
 
 
 def sweep_fedasync_problem(problem, grid: SweepGrid, prox: ProxOp,

@@ -42,10 +42,12 @@ from repro.core.prox import ProxOp
 from repro.federated.events import default_fed_steps
 from repro.federated.server import FedResult
 
+from .cache import IdKey, cached_program, tree_key
 from .grid import SweepBucket, SweepGrid
-from .runners import (_bcd_cell, _fed_cell, _fedasync_scan_adapter,
+from .runners import (Horizon, _bcd_cell, _fed_cell, _fedasync_scan_adapter,
                       _fedbuff_scan_adapter, _piag_cell, _slice_workers,
-                      _stack_fed_rounds, _check_fed_diag, run_bucketed)
+                      _stack_fed_rounds, _check_fed_diag,
+                      resolve_grid_horizon, run_bucketed)
 
 __all__ = ["cell_mesh", "round_robin_pad", "shard_cells",
            "make_sharded_sweep_piag", "sharded_sweep_piag",
@@ -108,11 +110,18 @@ def _unpad(tree, n: int):
     return jax.tree_util.tree_map(lambda x: x[:n], tree)
 
 
-def _run_sharded_bucket(cell, mesh: Mesh, args, n_cells: int):
+def _run_sharded_bucket(cell_build, mesh: Mesh, args, n_cells: int,
+                        n_args: int, cache_key: Optional[tuple] = None):
     """Pad the stacked args to a device multiple, run the sharded program,
-    strip the padding."""
+    strip the padding.  ``cell_build()`` makes the per-cell function; the
+    wrapped executable is cached under ``cache_key`` (when given) so
+    repeated sweeps skip rebuild+retrace, exactly like the batched path."""
     idx = round_robin_pad(n_cells, mesh.devices.size)
-    fn = shard_cells(jax.vmap(cell), mesh, n_args=len(args))
+
+    def build():
+        return shard_cells(jax.vmap(cell_build()), mesh, n_args=n_args)
+
+    fn = build() if cache_key is None else cached_program(cache_key, build)
     out = fn(*(_pad_gather(a, idx) for a in args))
     return _unpad(out, n_cells)
 
@@ -123,35 +132,42 @@ def make_sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                             prox: ProxOp, objective: Optional[Callable] = None,
                             horizon: int = 4096, use_tau_max: bool = True,
                             masked: bool = False,
-                            mesh: Optional[Mesh] = None) -> Callable:
+                            mesh: Optional[Mesh] = None,
+                            record_every: int = 1) -> Callable:
     """Sharded twin of ``make_sweep_piag``: same signature and row values,
     but the batch axis is partitioned across ``mesh`` (batch size must be a
     mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-                      use_tau_max, masked)
+                      use_tau_max, masked, record_every)
     return shard_cells(jax.vmap(cell), mesh, n_args=3 if masked else 2)
 
 
 def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                        grid: SweepGrid, prox: ProxOp,
                        objective: Optional[Callable] = None,
-                       horizon: int = 4096, use_tau_max: bool = True,
+                       horizon: Horizon = 4096, use_tau_max: bool = True,
                        mesh: Optional[Mesh] = None,
-                       bucket_widths: Optional[Sequence[int]] = None
-                       ) -> PIAGResult:
+                       bucket_widths: Optional[Sequence[int]] = None,
+                       record_every: int = 1) -> PIAGResult:
     """``sweep_piag`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
+    horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
-        wd = _slice_workers(worker_data, b.width)
-        cell = _piag_cell(worker_loss, x0, wd, prox, objective, horizon,
-                          use_tau_max, not b.uniform)
+        key = ("piag/sharded", b.width, not b.uniform, horizon, use_tau_max,
+               record_every, mesh, IdKey(worker_loss), tree_key(x0),
+               tree_key(worker_data), IdKey(prox), IdKey(objective))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         args = ((T, pp) if b.uniform else
                 (T, jnp.asarray(b.grid.active_masks(b.width)), pp))
-        return _run_sharded_bucket(cell, mesh, args, len(b.grid))
+        return _run_sharded_bucket(
+            lambda: _piag_cell(worker_loss, x0,
+                               _slice_workers(worker_data, b.width), prox,
+                               objective, horizon, use_tau_max,
+                               not b.uniform, record_every),
+            mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
 
@@ -174,25 +190,28 @@ def sharded_sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                            n_workers: int, prox: ProxOp, horizon: int = 4096,
                            masked: bool = False,
-                           mesh: Optional[Mesh] = None) -> Callable:
+                           mesh: Optional[Mesh] = None,
+                           record_every: int = 1) -> Callable:
     """Sharded twin of ``make_sweep_bcd`` (batch must be a mesh multiple)."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon,
-                     masked)
+                     masked, record_every)
     return shard_cells(jax.vmap(cell), mesh, n_args=4 if masked else 3)
 
 
 def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
-                      grid: SweepGrid, prox: ProxOp, horizon: int = 4096,
+                      grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
                       mesh: Optional[Mesh] = None,
-                      bucket_widths: Optional[Sequence[int]] = None
-                      ) -> BCDResult:
+                      bucket_widths: Optional[Sequence[int]] = None,
+                      record_every: int = 1) -> BCDResult:
     """``sweep_bcd`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
+    horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
-        cell = _bcd_cell(grad_f, objective, x0, m, b.width, prox, horizon,
-                         not b.uniform)
+        key = ("bcd/sharded", b.width, not b.uniform, horizon, m,
+               record_every, mesh, IdKey(grad_f), IdKey(objective),
+               tree_key(x0), IdKey(prox))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
@@ -200,7 +219,10 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
         pp = b.grid.policy_params()
         args = ((T, blocks, pp) if b.uniform else
                 (T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp))
-        return _run_sharded_bucket(cell, mesh, args, len(b.grid))
+        return _run_sharded_bucket(
+            lambda: _bcd_cell(grad_f, objective, x0, m, b.width, prox,
+                              horizon, not b.uniform, record_every),
+            mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
 
@@ -210,19 +232,22 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
 def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
                        buffer_size: int, n_steps: Optional[int],
                        mesh: Optional[Mesh],
-                       bucket_widths: Optional[Sequence[int]] = None
-                       ) -> FedResult:
+                       bucket_widths: Optional[Sequence[int]] = None,
+                       cache_key: Optional[tuple] = None) -> FedResult:
     mesh = cell_mesh() if mesh is None else mesh
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
 
     def run_bucket(b: SweepBucket):
-        cd = _slice_workers(client_data, b.width)
-        cell = _fed_cell(adapter_for(cd), K, buffer_size, S)
+        key = None if cache_key is None else \
+            cache_key + (b.width, S, mesh)
         rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
         res, n_up, exhausted = _run_sharded_bucket(
-            cell, mesh, (rounds, cparams, active, b.grid.policy_params()),
-            len(b.grid))
+            lambda: _fed_cell(adapter_for(_slice_workers(client_data,
+                                                         b.width)),
+                              K, buffer_size, S),
+            mesh, (rounds, cparams, active, b.grid.policy_params()),
+            len(b.grid), n_args=4, cache_key=key)
         _check_fed_diag(n_up, exhausted, K, S)
         return res
 
@@ -232,31 +257,47 @@ def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
 def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
                            grid: SweepGrid,
                            objective: Optional[Callable] = None,
-                           buffer_size: int = 1, horizon: int = 4096,
+                           buffer_size: int = 1, horizon: Horizon = 4096,
                            n_steps: Optional[int] = None,
                            mesh: Optional[Mesh] = None,
-                           bucket_widths: Optional[Sequence[int]] = None
-                           ) -> FedResult:
+                           bucket_widths: Optional[Sequence[int]] = None,
+                           record_every: int = 1) -> FedResult:
     """``sweep_fedasync`` (fused path) with the cell axis sharded."""
+    horizon = resolve_grid_horizon(horizon, grid, fed=True,
+                                   buffer_size=buffer_size, n_steps=n_steps)
+
     def adapter_for(cd):
         return _fedasync_scan_adapter(client_update, x0, cd, objective,
-                                      horizon)
+                                      horizon, record_every)
+
+    key = ("fedasync/sharded", grid.n_events, buffer_size, horizon,
+           record_every, IdKey(client_update), tree_key(x0),
+           tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
-                              n_steps, mesh, bucket_widths=bucket_widths)
+                              n_steps, mesh, bucket_widths=bucket_widths,
+                              cache_key=key)
 
 
 def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
                           grid: SweepGrid, eta: float = 1.0,
                           buffer_size: int = 1,
                           objective: Optional[Callable] = None,
-                          horizon: int = 4096,
+                          horizon: Horizon = 4096,
                           n_steps: Optional[int] = None,
                           mesh: Optional[Mesh] = None,
-                          bucket_widths: Optional[Sequence[int]] = None
-                          ) -> FedResult:
+                          bucket_widths: Optional[Sequence[int]] = None,
+                          record_every: int = 1) -> FedResult:
     """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
+    horizon = resolve_grid_horizon(horizon, grid, fed=True,
+                                   buffer_size=buffer_size, n_steps=n_steps)
+
     def adapter_for(cd):
         return _fedbuff_scan_adapter(client_update, x0, cd, objective,
-                                     horizon, eta, buffer_size)
+                                     horizon, eta, buffer_size, record_every)
+
+    key = ("fedbuff/sharded", grid.n_events, eta, buffer_size, horizon,
+           record_every, IdKey(client_update), tree_key(x0),
+           tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
-                              n_steps, mesh, bucket_widths=bucket_widths)
+                              n_steps, mesh, bucket_widths=bucket_widths,
+                              cache_key=key)

@@ -1,0 +1,284 @@
+"""Lean-carry engine contracts: measured-delay horizons, decimated
+recording, and executable reuse.
+
+Three pins, each the safety net of one optimization:
+
+* ``horizon='auto'`` -- an auto-sized run is BITWISE-equal (objective,
+  gammas, taus, x, clipped) to the 4096 worst-case default for every
+  solver, and ``Results.horizon`` reports the size actually used.
+* ``record_every=s`` -- a decimated run's recorded rows are bitwise rows
+  ``s-1, 2s-1, ...`` of the stride-1 run, the final iterate and clipped
+  counter are untouched, and the stride is validated (must divide K).
+* executable reuse -- a repeated sweep (same objects, same knobs) hits the
+  program cache instead of rebuilding+retracing, across direct runner
+  calls AND repeated ``api.run`` invocations of value-equal specs.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import analysis, api
+from repro.core import Adaptive1, Adaptive2, FixedStepSize, L1, make_logreg
+from repro.core.engine import (WorkerModel, generate_trace,
+                               heterogeneous_workers, sample_service_times,
+                               strided_scan)
+from repro.core.piag import run_piag
+from repro.core.stepsize import HingeWeight, PolyWeight, auto_horizon
+from repro.federated.events import heterogeneous_clients
+from repro.sweep import (clear_program_cache, make_grid, measure_fed_tau_bar,
+                         program_cache_stats, sweep_piag)
+from repro.sweep.runners import resolve_grid_horizon
+
+import jax.numpy as jnp
+
+N_EVENTS = 96          # divisible by the strides under test
+N_EVENTS_FED = 80
+STRIDE = 4
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def prox(problem):
+    return L1(lam=problem.lam1)
+
+
+@pytest.fixture(scope="module")
+def worker_grid(problem):
+    gp = 0.99 / problem.L
+    return make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "a2": Adaptive2(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=40)},
+        seeds=[0, 1],
+        topologies={"uniform": [WorkerModel() for _ in range(4)],
+                    "hetero": heterogeneous_workers(4, seed=1)},
+        n_events=N_EVENTS)
+
+
+@pytest.fixture(scope="module")
+def fed_grid():
+    return make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6),
+                  "poly": PolyWeight(gamma_prime=0.6, a=0.5)},
+        seeds=[0, 1],
+        topologies={"edge": heterogeneous_clients(4, seed=2)},
+        n_events=N_EVENTS_FED)
+
+
+def _grid_for(solver, worker_grid, fed_grid):
+    return fed_grid if solver in ("fedasync", "fedbuff") else worker_grid
+
+
+SOLVER_KW = {"piag": {}, "bcd": {"m": 8}, "fedasync": {},
+             "fedbuff": {"eta": 0.5, "buffer_size": 2}}
+
+
+# ------------------------------------------------ auto-horizon bitwise ----
+
+@pytest.mark.parametrize("solver", api.SOLVERS)
+def test_auto_horizon_bitwise_equals_default(problem, worker_grid, fed_grid,
+                                             prox, solver):
+    grid = _grid_for(solver, worker_grid, fed_grid)
+    base = api.run_components(solver, "batched", problem=problem, grid=grid,
+                              prox=prox, horizon=4096, **SOLVER_KW[solver])
+    auto = api.run_components(solver, "batched", problem=problem, grid=grid,
+                              prox=prox, horizon="auto", **SOLVER_KW[solver])
+    assert base.horizon == 4096
+    assert auto.horizon < 4096       # the measured bound is far below 4095
+    assert auto.horizon >= 2
+    for f in base.raw._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(base.raw, f)),
+                                      np.asarray(getattr(auto.raw, f)),
+                                      err_msg=f"{solver}.{f}")
+
+
+def test_auto_horizon_matches_measured_bound(worker_grid, fed_grid):
+    h = resolve_grid_horizon("auto", worker_grid)
+    assert h == auto_horizon(worker_grid.measure_tau_bar())
+    hf = resolve_grid_horizon("auto", fed_grid, fed=True)
+    assert hf == auto_horizon(measure_fed_tau_bar(fed_grid))
+    # integers pass through verbatim
+    assert resolve_grid_horizon(512, worker_grid) == 512
+
+
+def test_solo_run_auto_horizon_bitwise(problem, prox):
+    workers = heterogeneous_workers(4, seed=1)
+    T = sample_service_times(workers, N_EVENTS + 1, seed=0)
+    tr = generate_trace(T)
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    loss = lambda x, A, b: problem.worker_loss(x, A, b)
+    pol = Adaptive1(gamma_prime=0.99 / problem.L)
+    base = run_piag(loss, x0, (Aw, bw), tr, pol, prox, objective=problem.P,
+                    horizon=4096)
+    auto = run_piag(loss, x0, (Aw, bw), tr, pol, prox, objective=problem.P,
+                    horizon="auto")
+    for f in base._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(base, f)),
+                                      np.asarray(getattr(auto, f)), err_msg=f)
+
+
+def test_declarative_auto_horizon_resolves_and_reports(problem):
+    spec = api.ExperimentSpec(
+        problem=api.ProblemSpec(kind="logreg",
+                                params=dict(n_samples=240, dim=40, seed=0)),
+        solver=api.SolverSpec(name="piag", horizon="auto"),
+        topology=api.TopologySpec(kind="standard", names=("uniform",),
+                                  n_workers=(4,)),
+        policies=api.PolicyGridSpec(names=("adaptive1",), seeds=(0,)),
+        n_events=N_EVENTS)
+    res = api.run(spec)
+    assert res.tau_bar is not None
+    assert res.horizon == auto_horizon(res.tau_bar)
+    # a declared bound overrides measurement as the sizing input
+    spec2 = spec.replace(delay=api.DelaySpec(expected_max_delay=100))
+    assert api.run(spec2).horizon == auto_horizon(100)
+
+
+def test_solver_spec_rejects_bad_horizon_strings():
+    with pytest.raises(ValueError, match="auto"):
+        api.SolverSpec(name="piag", horizon="tiny")
+
+
+# ------------------------------------------------ decimated recording ----
+
+@pytest.mark.parametrize("solver", api.SOLVERS)
+def test_record_every_rows_bitwise_slices(problem, worker_grid, fed_grid,
+                                          prox, solver):
+    grid = _grid_for(solver, worker_grid, fed_grid)
+    base = api.run_components(solver, "batched", problem=problem, grid=grid,
+                              prox=prox, horizon=4096, **SOLVER_KW[solver])
+    dec = api.run_components(solver, "batched", problem=problem, grid=grid,
+                             prox=prox, horizon=4096, record_every=STRIDE,
+                             **SOLVER_KW[solver])
+    s = STRIDE
+    assert dec.n_samples == grid.n_events // s
+    # every recorded column family is the bitwise stride-s slice
+    for name in ("objective", "gammas", "taus"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base, name))[:, s - 1::s],
+            np.asarray(getattr(dec, name)), err_msg=f"{solver}.{name}")
+    # trajectory-independent leaves are untouched
+    np.testing.assert_array_equal(np.asarray(base.x), np.asarray(dec.x))
+    np.testing.assert_array_equal(np.asarray(base.clipped),
+                                  np.asarray(dec.clipped))
+    # virtual time decimates with the same phase
+    np.testing.assert_array_equal(base.virtual_time()[:, s - 1::s],
+                                  dec.virtual_time())
+
+
+def test_record_every_must_divide_n_events(problem, worker_grid, prox):
+    with pytest.raises(ValueError, match="record_every"):
+        api.run_components("piag", "batched", problem=problem,
+                           grid=worker_grid, prox=prox, record_every=7)
+
+
+def test_execution_spec_validates_record_every():
+    with pytest.raises(ValueError, match="record_every"):
+        api.ExecutionSpec(record_every=0)
+
+
+def test_strided_scan_stride_one_is_plain_scan():
+    def make_step(emit):
+        def step(c, x):
+            c = c + x
+            return c, (c if emit else None)
+        return step
+
+    xs = jnp.arange(12, dtype=jnp.float32)
+    c1, y1 = strided_scan(make_step, jnp.float32(0), xs, 1)
+    c3, y3 = strided_scan(make_step, jnp.float32(0), xs, 3)
+    ref = jax.lax.scan(make_step(True), jnp.float32(0), xs)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(ref[1]))
+    assert float(c1) == float(c3) == float(ref[0])
+    np.testing.assert_array_equal(np.asarray(y3), np.asarray(y1)[2::3])
+    with pytest.raises(ValueError, match="divide"):
+        strided_scan(make_step, jnp.float32(0), xs, 5)
+
+
+def test_analysis_time_to_tolerance_stride_aware():
+    obj = np.array([[5.0, 4.0, 3.0, 2.0, 1.0, 0.5]])
+    # stride 1: first hit at event 3
+    assert analysis.time_to_tolerance(obj, 2.0)[0] == 3
+    # stride 2 view (events 1, 3, 5): hit at column 1 -> event 3
+    assert analysis.time_to_tolerance(obj[:, 1::2], 2.0, record_every=2)[0] == 3
+    # stride 3 view (events 2, 5): hit at column 1 -> event 5 (>= stride-1)
+    assert analysis.time_to_tolerance(obj[:, 2::3], 2.0, record_every=3)[0] == 5
+    # never reached stays -1 regardless of stride
+    assert analysis.time_to_tolerance(obj[:, 1::2], -1.0, record_every=2)[0] == -1
+    assert analysis.time_to_tolerance(obj[0], 2.0) == 3
+
+
+# ------------------------------------------------- executable reuse ----
+
+def test_repeated_sweep_hits_program_cache(problem, worker_grid, prox):
+    clear_program_cache()
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    loss = lambda x, A, b: problem.worker_loss(x, A, b)
+    wd = (Aw, bw)
+    obj = problem.P   # bind once: a fresh bound method per access would
+    # key as a different captured object (api.run memoizes this for you)
+    r1 = sweep_piag(loss, x0, wd, worker_grid, prox, objective=obj)
+    s1 = program_cache_stats()
+    r2 = sweep_piag(loss, x0, wd, worker_grid, prox, objective=obj)
+    s2 = program_cache_stats()
+    assert s1["misses"] == 1 and s2["hits"] == s1["hits"] + 1
+    assert s2["misses"] == s1["misses"]  # nothing rebuilt
+    np.testing.assert_array_equal(np.asarray(r1.objective),
+                                  np.asarray(r2.objective))
+    # a changed static knob is a different program
+    sweep_piag(loss, x0, wd, worker_grid, prox, objective=obj,
+               record_every=2)
+    assert program_cache_stats()["misses"] == s2["misses"] + 1
+
+
+def test_repeated_api_run_reuses_executables(problem):
+    """Value-equal declarative specs resolve to memoized problem/prox/piece
+    objects, so the second api.run finds its bucket programs in the cache
+    (the cross-run reuse the resolve-time memoization exists for)."""
+    spec = api.ExperimentSpec(
+        problem=api.ProblemSpec(kind="logreg",
+                                params=dict(n_samples=240, dim=40, seed=0)),
+        solver=api.SolverSpec(name="piag"),
+        topology=api.TopologySpec(kind="standard", names=("uniform",),
+                                  n_workers=(4,)),
+        policies=api.PolicyGridSpec(names=("adaptive1",), seeds=(0,)),
+        n_events=N_EVENTS)
+    clear_program_cache()
+    r1 = api.run(spec)
+    s1 = program_cache_stats()
+    r2 = api.run(spec.replace())   # a fresh, value-equal spec object
+    s2 = program_cache_stats()
+    assert s2["hits"] > s1["hits"]
+    assert s2["misses"] == s1["misses"]
+    for f in r1.raw._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(r1.raw, f)),
+                                      np.asarray(getattr(r2.raw, f)),
+                                      err_msg=f)
+
+
+def test_ragged_grid_buckets_cached_independently(problem, prox):
+    gp = 0.99 / problem.L
+    from repro.sweep import standard_topology_factories
+    facs = standard_topology_factories()
+    grid = make_grid({"a1": Adaptive1(gamma_prime=gp)}, [0, 1],
+                     {"uniform": facs["uniform"]}, 64, n_workers=[2, 3])
+    assert len(grid.buckets()) == 2
+    Aw, bw = problem.worker_slices()
+    x0 = jnp.zeros((problem.dim,), jnp.float32)
+    loss = lambda x, A, b: problem.worker_loss(x, A, b)
+    obj = problem.P
+    wd = (Aw, bw)
+    clear_program_cache()
+    sweep_piag(loss, x0, wd, grid, prox, objective=obj)
+    s1 = program_cache_stats()
+    assert s1["misses"] == 2       # one program per bucket width
+    sweep_piag(loss, x0, wd, grid, prox, objective=obj)
+    s2 = program_cache_stats()
+    assert s2["misses"] == 2 and s2["hits"] == s1["hits"] + 2

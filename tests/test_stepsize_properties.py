@@ -15,10 +15,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import POLICIES, make_delays, make_policy, window_sum
-from repro.core.stepsize import init_state
+from repro.core.stepsize import (auto_horizon, clipped_count, init_state,
+                                 next_pow2)
 
 GAMMA = 0.7
 
@@ -167,6 +169,76 @@ def test_window_sum_horizon_clipping_edge(seed):
         g, state = pol.step(state, jnp.int32(tau))
         gammas.append(float(g))
     assert int(state.clipped) == expected_clips
+
+
+def _run_with_horizon(pol, taus, horizon: int):
+    """Full gamma sequence + final clipped count for an explicit horizon
+    (``StepsizePolicy.run`` pins its own horizon, so scan manually)."""
+
+    def body(state, tau):
+        g, state = pol.step(state, tau)
+        return state, g
+
+    fin, g = jax.lax.scan(body, pol.init(horizon),
+                          jnp.asarray(taus, jnp.int32))
+    return np.asarray(g), int(clipped_count(fin))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 60),
+       st.sampled_from(["constant", "random", "burst", "markov"]))
+def test_horizon_invariance_all_policies(seed, tau_bar, model):
+    """The measured-delay horizon contract, for EVERY registered policy: a
+    run with the lean ``auto_horizon`` buffer is BITWISE-equal to the 4096
+    worst-case default whenever no delay exceeds the smaller cap (the
+    circular cumulative-sum buffer reads identical values), and neither run
+    clips.  This is what lets the sweep engine size carries by tau-bar
+    instead of paying the worst case."""
+    taus = make_delays(model, 150, tau_bar, seed=seed)
+    H_small = auto_horizon(int(np.max(taus)))
+    assert H_small >= int(np.max(taus)) + 1  # every delay representable
+    for name in POLICIES:
+        pol = _policy_for(name, tau_bar)
+        g_small, clip_small = _run_with_horizon(pol, taus, H_small)
+        g_big, clip_big = _run_with_horizon(pol, taus, 4096)
+        np.testing.assert_array_equal(g_small, g_big, err_msg=name)
+        assert clip_small == 0 and clip_big == 0, name
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_undersized_horizon_clips_loudly_not_silently(seed):
+    """When a delay DOES exceed the lean cap, the clipped counter fires on
+    the small-horizon run (and stays zero on the roomy one) -- the failure
+    mode is observable, never silent drift."""
+    rng = np.random.default_rng(seed)
+    H = 16
+    n = 80
+    # causal delays (tau_k <= k) below the small cap, so neither horizon
+    # clips on its own ...
+    taus = np.minimum(rng.integers(0, H - 1, size=n), np.arange(n))
+    k = int(rng.integers(H, n))   # late enough that min(k, H-1) == H-1
+    taus[k] = H                   # ... then one beyond the small cap only
+    for name in ("adaptive1", "adaptive2", "fixed", "hinge"):
+        pol = _policy_for(name, H - 1)
+        _, clip_small = _run_with_horizon(pol, taus, H)
+        _, clip_big = _run_with_horizon(pol, taus, 4096)
+        assert clip_small >= 1, name
+        assert clip_big == 0, name
+
+
+def test_auto_horizon_sizing():
+    """next_pow2(tau_bar + slack), floored at 2 (the smallest legal H)."""
+    assert auto_horizon(0) == 2 and auto_horizon(1) == 2
+    assert auto_horizon(2) == 4 and auto_horizon(3) == 4
+    assert auto_horizon(138) == 256   # the BENCH_sweep_grid tau-bar
+    assert auto_horizon(138, slack=200) == 512
+    assert next_pow2(1) == 1 and next_pow2(255) == 256
+    with pytest.raises(ValueError, match="slack"):
+        auto_horizon(10, slack=0)
+    # every sized horizon represents the measured bound: H - 1 >= tau_bar
+    for tb in range(0, 300, 7):
+        assert auto_horizon(tb) - 1 >= tb
 
 
 def test_batched_init_state_shapes():
