@@ -2,7 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep engine_opt mega roofline kernels]
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines.  Benchmark runs that go
+through ``repro.api.run`` also append their telemetry ``RunRecord`` to a
+``BENCH_ledger.jsonl`` next to the ``BENCH_*.json`` artifacts (override or
+disable via the ``REPRO_TELEMETRY_LEDGER`` environment variable -- set it
+empty to silence); render it with ``python -m repro.launch.report``.
 
 ``mega`` (the device-sharded mega-grid) forces multiple host devices at jax
 init -- a process-wide, irreversible setting that would split host threads
@@ -14,7 +18,12 @@ your own risk.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+# route api.run telemetry to a ledger artifact beside the BENCH_*.json
+# outputs; setdefault so an explicit env var (including "") wins
+os.environ.setdefault("REPRO_TELEMETRY_LEDGER", "BENCH_ledger.jsonl")
 
 
 def main() -> None:

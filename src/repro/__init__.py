@@ -19,6 +19,8 @@ Subpackages:
               servers driven by the same staleness-weight machinery
   sweep       vectorized experiment sweeps: policy x seed x topology grids
               as one vmapped XLA program (policies as data, jitted traces)
+  telemetry   observability: in-scan metric accumulators (bitwise-neutral),
+              host timing sinks, and the structured JSONL run ledger
   models      dense / MoE / SSM / hybrid / audio / VLM substrate
   optim       optimizers + DelayAdaptiveOptimizer composition
   data        deterministic synthetic pipelines
@@ -34,9 +36,9 @@ __version__ = "1.1.0"
 
 # the curated public surface; submodules are imported lazily (PEP 562) so
 # `import repro` stays light and `from repro import api` works everywhere
-__all__ = ["api", "analysis", "core", "federated", "sweep", "models",
-           "optim", "data", "checkpoint", "kernels", "serving", "configs",
-           "launch"]
+__all__ = ["api", "analysis", "core", "federated", "sweep", "telemetry",
+           "models", "optim", "data", "checkpoint", "kernels", "serving",
+           "configs", "launch"]
 
 
 def __getattr__(name):

@@ -20,7 +20,8 @@ import numpy as np
 
 __all__ = ["PolicySummary", "policy_rows", "per_policy_summary",
            "mean_final_objective", "time_to_tolerance",
-           "best_fixed_vs_adaptive", "clipped_summary", "summarize"]
+           "best_fixed_vs_adaptive", "clipped_summary", "summarize",
+           "delay_profile", "clip_pressure", "run_timeline"]
 
 
 class PolicySummary(NamedTuple):
@@ -157,3 +158,66 @@ def summarize(results) -> Dict[str, PolicySummary]:
     """Per-policy aggregation straight off an ``api.Results`` table."""
     return per_policy_summary(results.cells, results.objective,
                               results.gammas, results.clipped)
+
+
+# ------------------------------------------------ telemetry bridges ----
+
+def delay_profile(results) -> dict:
+    """The run's delay distribution off an ``api.Results`` table (or its
+    ``RunRecord``): histogram (last bin = overflow bucket when the source
+    is the in-scan accumulator), tau min/max/mean/std, and the source tag
+    (``"accumulator"`` = exact over every event; ``"recorded"`` = binned
+    from the recorded 1/s sample)."""
+    rec = getattr(results, "telemetry", results)
+    hist = [int(h) for h in _rec_get(rec, "delay_hist")]
+    return {
+        "hist": hist,
+        "count": int(sum(hist)),
+        "tau": dict(_rec_get(rec, "tau_stats")),
+        "gamma": dict(_rec_get(rec, "gamma_stats")),
+        "source": _rec_get(rec, "hist_source"),
+    }
+
+
+def clip_pressure(results) -> dict:
+    """Horizon-clip pressure with the run's horizon attached: the
+    ``clipped_summary`` block plus ``horizon`` and the fraction of events
+    clipped, off an ``api.Results`` table or a ledger record."""
+    rec = getattr(results, "telemetry", results)
+    clip = dict(_rec_get(rec, "clipped"))
+    total = int(_rec_get(rec, "n_cells")) * int(_rec_get(rec, "n_events"))
+    clip["horizon"] = _rec_get(rec, "horizon")
+    clip["clip_fraction"] = (clip.get("events_clipped", 0) / total
+                             if total else 0.0)
+    return clip
+
+
+def run_timeline(records) -> List[dict]:
+    """Chronological per-run timing rows from a ledger: pass an iterable of
+    record dicts / ``RunRecord`` objects, or a ledger file path.  Each row
+    carries the compile/warm split and the cache delta, so a sequence of
+    runs shows cache warm-up as compile-ms collapsing to ~0."""
+    if isinstance(records, (str, bytes)) or hasattr(records, "__fspath__"):
+        from repro.telemetry.ledger import read_ledger
+        records = read_ledger(records)
+    rows = [{
+        "ts": _rec_get(r, "ts"),
+        "fingerprint": _rec_get(r, "fingerprint"),
+        "solver": _rec_get(r, "solver"),
+        "backend": _rec_get(r, "backend"),
+        "n_cells": _rec_get(r, "n_cells"),
+        "elapsed_ms": _rec_get(r, "elapsed_ms"),
+        "compile_ms": _rec_get(r, "compile_ms"),
+        "warm_ms": _rec_get(r, "warm_ms"),
+        "cache": _rec_get(r, "cache"),
+    } for r in records]
+    rows.sort(key=lambda row: row["ts"])
+    return rows
+
+
+def _rec_get(rec, field):
+    """Field access across the three record shapes analysis accepts:
+    ``RunRecord`` dataclasses, raw ledger dicts, and ``Results`` proxies."""
+    if isinstance(rec, dict):
+        return rec[field]
+    return getattr(rec, field)

@@ -39,6 +39,12 @@ class Results:
       record_every: the trace-recording stride s: objective/gammas/taus
                   columns hold rows ``s-1, 2s-1, ...`` of the event
                   trajectory ((B, K // s) leaves).
+      telemetry:  the run's ``repro.telemetry.RunRecord`` (delay histogram,
+                  compile vs warm split, cache deltas) -- always built by
+                  ``api.run``, written to the JSONL ledger only when a
+                  ledger path is configured.
+      cache_stats: this run's ``program_cache_stats()`` hit/miss/evict
+                  delta (reset-scoped across ``clear_program_cache``).
     """
 
     solver: str
@@ -50,6 +56,8 @@ class Results:
     spec: Any = None
     horizon: Optional[int] = None
     record_every: int = 1
+    telemetry: Any = None
+    cache_stats: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------- common columns ----
 
@@ -105,7 +113,7 @@ class Results:
     @property
     def extras(self) -> Dict[str, Any]:
         """Solver-specific columns not shared across the four solvers."""
-        common = {"x", "objective", "gammas", "taus", "clipped"}
+        common = {"x", "objective", "gammas", "taus", "clipped", "telemetry"}
         return {f: getattr(self.raw, f) for f in self.raw._fields
                 if f not in common and f != "weights"}
 
@@ -127,10 +135,13 @@ class Results:
 
         Recomputed from the grid's own pre-sampled randomness (the traces
         are deterministic functions of it), via the jitted trace scans --
-        PIAG/BCD per bucket, federated per cell."""
+        PIAG/BCD per bucket, federated per cell.  The stride slice happens
+        INSIDE the jitted program (per device-resident array), so only the
+        K // s recorded columns ever cross to the host."""
         import jax
         import jax.numpy as jnp
 
+        s = int(self.record_every)
         if self.solver in ("piag", "bcd"):
             from repro.core.engine import trace_scan
             from repro.sweep.runners import run_bucketed
@@ -139,28 +150,26 @@ class Results:
                 T = jnp.asarray(b.grid.service_times(b.width))
                 if b.uniform:
                     vt = jax.jit(jax.vmap(
-                        lambda t: trace_scan(t).t_wall))(T)
+                        lambda t: trace_scan(t).t_wall[s - 1::s]))(T)
                 else:
                     act = jnp.asarray(b.grid.active_masks(b.width))
                     vt = jax.jit(jax.vmap(
-                        lambda t, a: trace_scan(t, active=a).t_wall))(T, act)
+                        lambda t, a: trace_scan(t, active=a)
+                        .t_wall[s - 1::s]))(T, act)
                 return vt
 
-            full = np.asarray(run_bucketed(self.grid, run_bucket))
-        else:
-            from repro.federated.events import generate_federated_trace
-            bs = 1
-            n_steps = None
-            if self.spec is not None:
-                if self.solver == "fedbuff":
-                    bs = self.spec.solver.buffer_size
-                n_steps = self.spec.solver.n_steps
-            full = np.stack([generate_federated_trace(
-                c.n_workers, self.n_events, clients=list(c.workers),
-                buffer_size=bs, seed=c.seed, n_steps=n_steps).t_wall
-                for c in self.cells])
-        s = int(self.record_every)
-        return full if s == 1 else full[:, s - 1::s]
+            return np.asarray(run_bucketed(self.grid, run_bucket))
+        from repro.federated.events import generate_federated_trace
+        bs = 1
+        n_steps = None
+        if self.spec is not None:
+            if self.solver == "fedbuff":
+                bs = self.spec.solver.buffer_size
+            n_steps = self.spec.solver.n_steps
+        return np.stack([np.asarray(generate_federated_trace(
+            c.n_workers, self.n_events, clients=list(c.workers),
+            buffer_size=bs, seed=c.seed, n_steps=n_steps)
+            .t_wall)[s - 1::s] for c in self.cells])
 
     def to_rows(self) -> List[Dict[str, Any]]:
         """Per-cell records (the JSON shape ``launch.sweep`` emits)."""

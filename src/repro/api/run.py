@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bcd import run_async_bcd, sample_blocks
 from repro.core.engine import generate_trace, sample_service_times
@@ -39,9 +40,13 @@ from repro.federated.events import (generate_federated_trace,
                                     heterogeneous_clients)
 from repro.federated.server import (_problem_pieces, run_fedasync,
                                     run_fedbuff)
-from repro.sweep.cache import LRU, IdKey
+from repro.sweep.cache import LRU, IdKey, program_cache_stats
 from repro.sweep.grid import (SweepGrid, make_grid, measure_tau_bar,
                               standard_topology_factories)
+from repro.telemetry.accumulators import TelemetryConfig, summarize_telemetry
+from repro.telemetry.ledger import (RunRecord, append_record, cache_delta,
+                                    estimate_carry_bytes, spec_fingerprint)
+from repro.telemetry.timing import COMPILE_EVENT_NAMES, drain_timings
 from repro.sweep.runners import (resolve_grid_horizon, sweep_bcd,
                                  sweep_fedasync, sweep_fedbuff, sweep_piag)
 from repro.sweep.shard import (cell_mesh, sharded_sweep_bcd,
@@ -298,29 +303,40 @@ def _fed_pieces(problem, prox, local_lr):
                             build)
 
 
+def _telemetry_cfg(spec: ExperimentSpec) -> Optional[TelemetryConfig]:
+    """The scan-carry accumulator config: None (exactly the pre-telemetry
+    code path) unless the spec opted in."""
+    ex = spec.execution
+    return TelemetryConfig(delay_bins=ex.telemetry_bins) \
+        if ex.telemetry else None
+
+
 def _run_piag(r: Resolved):
     spec = r.spec
     loss, x0, wd, objective = _piag_pieces(r)
     h, utm = r.horizon, spec.delay.use_tau_max
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
+    tel = _telemetry_cfg(spec)
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_piag(loss, x0, wd, r.grid, r.prox,
                           objective=objective, horizon=h, use_tau_max=utm,
-                          bucket_widths=bw, record_every=s)
+                          bucket_widths=bw, record_every=s, telemetry=tel)
     if backend == "sharded":
         return sharded_sweep_piag(loss, x0, wd, r.grid, r.prox,
                                   objective=objective, horizon=h,
                                   use_tau_max=utm, mesh=_mesh_for(spec),
-                                  bucket_widths=bw, record_every=s)
+                                  bucket_widths=bw, record_every=s,
+                                  telemetry=tel)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
         tr = generate_trace(T)
         rows.append(run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
                              c.policy, r.prox, objective=objective,
-                             horizon=h, use_tau_max=utm, record_every=s))
+                             horizon=h, use_tau_max=utm, record_every=s,
+                             telemetry=tel))
     return _stack_results(rows)
 
 
@@ -330,14 +346,17 @@ def _run_bcd(r: Resolved):
     grad_f, objective, x0 = _bcd_pieces(problem)
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
+    tel = _telemetry_cfg(spec)
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_bcd(grad_f, objective, x0, m, r.grid, r.prox,
-                         horizon=h, bucket_widths=bw, record_every=s)
+                         horizon=h, bucket_widths=bw, record_every=s,
+                         telemetry=tel)
     if backend == "sharded":
         return sharded_sweep_bcd(grad_f, objective, x0, m, r.grid,
                                  r.prox, horizon=h, mesh=_mesh_for(spec),
-                                 bucket_widths=bw, record_every=s)
+                                 bucket_widths=bw, record_every=s,
+                                 telemetry=tel)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
@@ -345,7 +364,7 @@ def _run_bcd(r: Resolved):
         blocks = sample_blocks(m, r.grid.n_events, seed=c.seed)
         rows.append(run_async_bcd(grad_f, objective, x0, m, tr,
                                   blocks, c.policy, r.prox, horizon=h,
-                                  record_every=s))
+                                  record_every=s, telemetry=tel))
     return _stack_results(rows)
 
 
@@ -357,6 +376,7 @@ def _run_fed(r: Resolved):
     bs = sv.buffer_size if sv.name == "fedbuff" else 1
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
+    tel = _telemetry_cfg(spec)
     backend = spec.execution.backend
     if backend == "batched":
         if sv.name == "fedasync":
@@ -364,12 +384,12 @@ def _run_fed(r: Resolved):
                                   objective=objective, horizon=h,
                                   reference=spec.execution.reference,
                                   n_steps=n_steps, bucket_widths=bw,
-                                  record_every=s)
+                                  record_every=s, telemetry=tel)
         return sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                              buffer_size=bs, objective=objective,
                              horizon=h, reference=spec.execution.reference,
                              n_steps=n_steps, bucket_widths=bw,
-                             record_every=s)
+                             record_every=s, telemetry=tel)
     if backend == "sharded":
         mesh = _mesh_for(spec)
         if sv.name == "fedasync":
@@ -377,11 +397,13 @@ def _run_fed(r: Resolved):
                                           objective=objective,
                                           buffer_size=1, horizon=h,
                                           n_steps=n_steps, mesh=mesh,
-                                          bucket_widths=bw, record_every=s)
+                                          bucket_widths=bw, record_every=s,
+                                          telemetry=tel)
         return sharded_sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                                      buffer_size=bs, objective=objective,
                                      horizon=h, n_steps=n_steps, mesh=mesh,
-                                     bucket_widths=bw, record_every=s)
+                                     bucket_widths=bw, record_every=s,
+                                     telemetry=tel)
     rows = []
     for c in r.grid.cells:
         tr = generate_federated_trace(c.n_workers, r.grid.n_events,
@@ -392,11 +414,12 @@ def _run_fed(r: Resolved):
         if sv.name == "fedasync":
             rows.append(run_fedasync(update, x0, cd, tr, c.policy,
                                      objective=objective, horizon=h,
-                                     record_every=s))
+                                     record_every=s, telemetry=tel))
         else:
             rows.append(run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
                                     buffer_size=bs, objective=objective,
-                                    horizon=h, record_every=s))
+                                    horizon=h, record_every=s,
+                                    telemetry=tel))
     return _stack_results(rows)
 
 
@@ -408,24 +431,104 @@ _SOLVER_DISPATCH: Dict[str, Callable[[Resolved], Any]] = {
 }
 
 
+def _build_record(spec: ExperimentSpec, r: Resolved, raw: Any,
+                  elapsed: float, cache: Dict[str, Any],
+                  timings) -> RunRecord:
+    """Fold one dispatched run into the ledger's ``RunRecord`` shape.
+
+    Host-side bookkeeping only: everything read off ``raw`` is already on
+    the host after ``block_until_ready``; nothing here re-enters jit."""
+    from repro import analysis
+
+    grid, bins = r.grid, spec.execution.telemetry_bins
+    tel = getattr(raw, "telemetry", None)
+    if tel is not None:
+        summ = summarize_telemetry(tel)
+        delay_hist, hist_source = summ["hist"], "accumulator"
+        tau_stats, gamma_stats = summ["tau"], summ["gamma"]
+    else:
+        taus = np.asarray(raw.taus).reshape(-1)
+        gam = np.asarray(raw.weights if "weights" in raw._fields
+                         else raw.gammas, np.float64).reshape(-1)
+        delay_hist = np.bincount(np.clip(taus, 0, bins - 1),
+                                 minlength=bins).astype(np.int64).tolist()
+        hist_source = "recorded"
+        tau_stats = {"min": int(taus.min()), "max": int(taus.max()),
+                     "mean": float(taus.mean()), "std": float(taus.std())}
+        gamma_stats = {"min": float(gam.min()), "max": float(gam.max()),
+                       "mean": float(gam.mean()), "std": float(gam.std())}
+
+    if spec.execution.backend == "sharded":
+        mesh = _mesh_for(spec)
+        devices, mesh_shape = int(mesh.devices.size), \
+            [int(d) for d in mesh.devices.shape]
+    else:
+        devices, mesh_shape = 1, None
+
+    compile_ms = sum(ev["ms"] for ev in timings
+                     if ev["name"] in COMPILE_EVENT_NAMES)
+    width = max(c.n_workers for c in grid.cells)
+    return RunRecord(
+        ts=time.time(),
+        fingerprint=spec_fingerprint(spec, grid),
+        solver=spec.solver.name,
+        backend=spec.execution.backend,
+        n_cells=len(grid.cells),
+        n_events=int(grid.n_events),
+        record_every=int(spec.execution.record_every),
+        horizon=int(r.horizon),
+        tau_bar=None if r.tau_bar is None else int(r.tau_bar),
+        devices=devices,
+        mesh_shape=mesh_shape,
+        carry_bytes=estimate_carry_bytes(spec.solver.name,
+                                         int(getattr(r.problem, "dim", 0)),
+                                         width, r.horizon, len(grid.cells)),
+        elapsed_ms=elapsed * 1e3,
+        compile_ms=float(compile_ms),
+        warm_ms=max(elapsed * 1e3 - compile_ms, 0.0),
+        cache=cache,
+        delay_hist=list(delay_hist),
+        hist_source=hist_source,
+        tau_stats=tau_stats,
+        gamma_stats=gamma_stats,
+        clipped=analysis.clipped_summary(raw.clipped),
+        policies=sorted({c.policy_name for c in grid.cells}),
+        timings=list(timings),
+    )
+
+
 def run(spec: ExperimentSpec) -> Results:
     """The single entry point: resolve the spec, dispatch to the runner for
-    (solver, backend), return the unified ``Results`` table."""
+    (solver, backend), return the unified ``Results`` table.
+
+    Every run also builds a ``repro.telemetry.RunRecord`` (surfaced on
+    ``Results.telemetry``; appended to the JSONL ledger when one is
+    configured): the timing buffer is drained around the dispatch so
+    compile-side events attribute to THIS run, and the program-cache
+    counters are snapshotted for a reset-scoped hit/miss delta."""
     r = resolve(spec)
+    drain_timings()  # drop events from unrelated earlier activity
+    cache_before = program_cache_stats()
     t0 = time.perf_counter()
     raw = jax.block_until_ready(_SOLVER_DISPATCH[spec.solver.name](r))
     elapsed = time.perf_counter() - t0
+    record = _build_record(
+        spec, r, raw, elapsed,
+        cache_delta(cache_before, program_cache_stats()), drain_timings())
+    append_record(record)
     return Results(solver=spec.solver.name, backend=spec.execution.backend,
                    grid=r.grid, raw=raw, elapsed_s=elapsed,
                    tau_bar=r.tau_bar, spec=spec, horizon=r.horizon,
-                   record_every=spec.execution.record_every)
+                   record_every=spec.execution.record_every,
+                   telemetry=record, cache_stats=record.cache)
 
 
 # -------------------------------------------------- component escape ----
 
 def component_spec(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
-                   record_every: int = 1,
+                   record_every: int = 1, telemetry: bool = False,
+                   telemetry_bins: int = 64,
                    **solver_kwargs) -> ExperimentSpec:
     """A spec from prebuilt components (problem + grid + prox), bypassing
     the declarative build.  This is the form the legacy shims use; horizon
@@ -438,7 +541,9 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
         solver=SolverSpec(name=solver, **solver_kwargs),
         execution=ExecutionSpec(backend=backend, mesh=mesh,
                                 reference=reference,
-                                record_every=record_every),
+                                record_every=record_every,
+                                telemetry=telemetry,
+                                telemetry_bins=telemetry_bins),
         delay=DelaySpec(measure=False),
         n_events=grid.n_events,
         grid=grid,
@@ -448,9 +553,12 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
 
 def run_components(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
-                   record_every: int = 1,
+                   record_every: int = 1, telemetry: bool = False,
+                   telemetry_bins: int = 64,
                    **solver_kwargs) -> Results:
     """``run`` over prebuilt components (see ``component_spec``)."""
     return run(component_spec(solver, backend, problem=problem, grid=grid,
                               prox=prox, mesh=mesh, reference=reference,
-                              record_every=record_every, **solver_kwargs))
+                              record_every=record_every, telemetry=telemetry,
+                              telemetry_bins=telemetry_bins,
+                              **solver_kwargs))

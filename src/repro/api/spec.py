@@ -270,6 +270,13 @@ class ExecutionSpec:
                  bitwise today's behavior, stride s keeps bitwise rows
                  ``s-1, 2s-1, ...`` and shrinks the (B, K) outputs by s.
                  Must divide ``n_events``.
+    ``telemetry``: thread the in-scan delay/step-size accumulators
+                 (``repro.telemetry``) through the solver carry.  Bitwise-
+                 neutral on every solver leaf; adds a ``DelayTelemetry``
+                 pytree on ``Results.raw.telemetry`` and exact aggregates
+                 to the run's ``RunRecord`` even under decimation.
+    ``telemetry_bins``: delay-histogram buckets (last bin = overflow,
+                 counting every ``tau >= bins - 1``).
     """
 
     backend: str = "batched"
@@ -278,6 +285,8 @@ class ExecutionSpec:
     bucket_widths: Optional[Tuple[int, ...]] = None
     reference: bool = False
     record_every: int = 1
+    telemetry: bool = False
+    telemetry_bins: int = 64
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -286,6 +295,9 @@ class ExecutionSpec:
         if self.record_every < 1:
             raise ValueError(
                 f"record_every must be >= 1, got {self.record_every}")
+        if self.telemetry_bins < 2:
+            raise ValueError(
+                f"telemetry_bins must be >= 2, got {self.telemetry_bins}")
         object.__setattr__(self, "bucket_widths", _freeze(self.bucket_widths))
 
 

@@ -16,7 +16,7 @@ threaded runtime (core.runtime.SharedMemoryBCD).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,9 @@ import numpy as np
 
 from .engine import EventTrace, strided_scan
 from .prox import ProxOp
-from .stepsize import StepsizePolicy, auto_horizon, clipped_count
+from .stepsize import StepsizePolicy, auto_horizon, clip_delta, clipped_count
+from ..telemetry.accumulators import (TelemetryConfig, init_telemetry,
+                                      observe, emit_window, finalize)
 
 __all__ = ["BCDResult", "bcd_scan", "run_async_bcd", "run_bcd_logreg",
            "sample_blocks"]
@@ -39,6 +41,7 @@ class BCDResult(NamedTuple):
     clipped: jnp.ndarray = 0  # plain-int default: no jax init at import time
     # ^ final StepsizeState.clipped: events whose delay exceeded the policy
     #   horizon (H - 1 cap); nonzero flags an undersized horizon per cell.
+    telemetry: Any = None     # DelayTelemetry when telemetry= was passed
 
 
 def _blockify(x: jnp.ndarray, m: int):
@@ -59,6 +62,7 @@ def bcd_scan(
     prox: ProxOp,
     horizon: int = 4096,
     record_every: int = 1,
+    telemetry: TelemetryConfig | None = None,
 ) -> BCDResult:
     """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
     shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
@@ -83,27 +87,40 @@ def bcd_scan(
 
     def make_step(emit):
         def step(carry, event):
-            xb, x_read, ss = carry
+            xb, x_read, ss = carry[:3]
             w, tau, j = event
             xhat = x_read[w]                                 # Algorithm 2 line 4
             g = grad_f(unpad(xhat))                          # grad at the stale read
             gpad = jnp.pad(g, (0, m * db - d)).reshape(m, db)
             gj = gpad[j]                                     # grad_j f(xhat)
+            ss_old = ss
             gamma, ss = policy.step(ss, tau)                 # line 6 (delay-adaptive)
             xj_new = prox.prox(xb[j] - gamma * gj, gamma)    # line 7, Eq. (5)
             xb_new = xb.at[j].set(xj_new)                    # line 8 (atomic write)
             x_read = x_read.at[w].set(xb_new)                # line 10 (re-read)
+            if telemetry is None:
+                if not emit:
+                    return (xb_new, x_read, ss), None
+                return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma,
+                                              tau, j)
+            tel = observe(carry[3], tau, gamma, clip_delta(ss_old, ss))
             if not emit:
-                return (xb_new, x_read, ss), None
-            return (xb_new, x_read, ss), (objective(unpad(xb_new)), gamma,
-                                          tau, j)
+                return (xb_new, x_read, ss, tel), None
+            tel, wclip = emit_window(tel)
+            return (xb_new, x_read, ss, tel), (objective(unpad(xb_new)), gamma,
+                                               tau, j, wclip)
         return step
 
     carry0 = (xb0, x_read0, policy.init(horizon))
-    (xb_fin, _, ss_fin), (obj, gam, taus, blk) = strided_scan(
-        make_step, carry0, events, record_every)
+    if telemetry is not None:
+        carry0 = carry0 + (init_telemetry(telemetry),)
+    carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
+    xb_fin, ss_fin = carry_fin[0], carry_fin[2]
+    obj, gam, taus, blk = outs[:4]
+    tel_out = finalize(carry_fin[3], outs[4]) if telemetry is not None else None
     return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus,
-                     blocks=blk, clipped=clipped_count(ss_fin))
+                     blocks=blk, clipped=clipped_count(ss_fin),
+                     telemetry=tel_out)
 
 
 def run_async_bcd(
@@ -117,6 +134,7 @@ def run_async_bcd(
     prox: ProxOp,
     horizon: int | str = 4096,
     record_every: int = 1,
+    telemetry: TelemetryConfig | None = None,
 ) -> BCDResult:
     n = int(trace.worker.max()) + 1 if trace.n_events else 1
     if horizon == "auto":  # measured-delay sizing off the trace itself
@@ -130,7 +148,8 @@ def run_async_bcd(
     @jax.jit
     def run(events):
         return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
-                        horizon=horizon, record_every=record_every)
+                        horizon=horizon, record_every=record_every,
+                        telemetry=telemetry)
 
     return run(events)
 

@@ -70,6 +70,11 @@ def strided_scan(make_step, carry, xs, record_every: int = 1):
     events: the first s-1 advance the carry silently, the s-th emits, so the
     recorded rows are events ``s-1, 2s-1, ..., K-1`` and output buffers
     shrink by s.  ``K`` must be a multiple of s.
+
+    Carry-borne accumulators (``repro.telemetry.accumulators``) update on
+    BOTH silent and loud steps -- the carry advances through every event --
+    which is why in-scan aggregate statistics stay exact under decimation
+    with no change to this function.
     """
     every = int(record_every)
     if every < 1:

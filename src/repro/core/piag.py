@@ -25,10 +25,14 @@ import jax.numpy as jnp
 
 import numpy as np
 
+from typing import Any
+
 from .engine import EventTrace, strided_scan
 from .prox import ProxOp
-from .stepsize import (StepsizePolicy, StepsizeState, auto_horizon,
+from .stepsize import (StepsizePolicy, StepsizeState, auto_horizon, clip_delta,
                        clipped_count as _clipped_of)
+from ..telemetry.accumulators import (TelemetryConfig, init_telemetry,
+                                      observe, emit_window, finalize)
 
 __all__ = ["PIAGResult", "piag_scan", "run_piag", "run_piag_logreg"]
 
@@ -43,6 +47,9 @@ class PIAGResult(NamedTuple):
     # ^ final StepsizeState.clipped: number of events whose delay exceeded the
     #   policy horizon (H - 1 cap) -- nonzero means the horizon was undersized
     #   and window sums were silently truncated; see ROADMAP.
+    telemetry: Any = None     # DelayTelemetry when telemetry= was passed
+    # ^ trailing optional field: existing positional construction and the
+    #   bitwise row-equivalence pins over the other leaves are unaffected.
 
 
 def piag_scan(
@@ -56,6 +63,7 @@ def piag_scan(
     horizon: int = 4096,
     active: jnp.ndarray | None = None,  # (n,) bool; ragged-bucket worker mask
     record_every: int = 1,
+    telemetry: TelemetryConfig | None = None,
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -80,6 +88,13 @@ def piag_scan(
     trajectories they will subsample anyway.  The iterate path is unchanged
     (recorded rows are bitwise rows ``s-1, 2s-1, ...`` of a stride-1 run);
     K must be a multiple of s.
+
+    ``telemetry=TelemetryConfig(...)`` threads an in-scan accumulator
+    (delay histogram, tau/gamma moments, per-window clip counts) through the
+    carry and returns it finalized on ``result.telemetry``.  The accumulator
+    observes EVERY event -- decimated steps included -- so its aggregates
+    are exact under any ``record_every``, and it is bitwise-neutral: no
+    solver leaf depends on it.
     """
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     grad_i = jax.grad(worker_loss)
@@ -114,7 +129,7 @@ def piag_scan(
 
     def make_step(emit):
         def step(carry, event):
-            x, gtab, x_read, ss = carry
+            x, gtab, x_read, ss = carry[:4]
             w, tau = event
             # worker w returns grad f_w(x_read[w])  (Algorithm 1 line 12)
             xw = jax.tree_util.tree_map(lambda leaf: leaf[w], x_read)
@@ -122,26 +137,42 @@ def piag_scan(
             gtab = jax.tree_util.tree_map(lambda buf, gnew: buf.at[w].set(gnew), gtab, gw)
             # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
             g = jax.tree_util.tree_map(aggregate, gtab)
+            ss_old = ss
             gamma, ss = policy.step(ss, tau)
             x_new = prox.prox(
                 jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
             # line 20: hand x_{k+1} to the returning worker
             x_read = jax.tree_util.tree_map(
                 lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
-            if not emit:  # decimated step: carry advances, nothing recorded
-                return (x_new, gtab, x_read, ss), None
+            if telemetry is None:
+                if not emit:  # decimated step: carry advances, nothing recorded
+                    return (x_new, gtab, x_read, ss), None
+            else:
+                tel = observe(carry[4], tau, gamma, clip_delta(ss_old, ss))
+                if not emit:
+                    return (x_new, gtab, x_read, ss, tel), None
+                tel, wclip = emit_window(tel)
             dx = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
                 jax.tree_util.tree_leaves(x_new), jax.tree_util.tree_leaves(x))))
             res = jnp.where(gamma > 0, dx / jnp.maximum(gamma, 1e-30), 0.0)
             out = (objective(x_new), gamma, tau, res)
-            return (x_new, gtab, x_read, ss), out
+            if telemetry is None:
+                return (x_new, gtab, x_read, ss), out
+            return (x_new, gtab, x_read, ss, tel), out + (wclip,)
         return step
 
     carry0 = (x0, g_table, x_read0, policy.init(horizon))
-    (x_fin, _, _, ss_fin), (obj, gam, taus, res) = strided_scan(
-        make_step, carry0, events, record_every)
+    if telemetry is not None:
+        carry0 = carry0 + (init_telemetry(telemetry),)
+    carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
+    x_fin, ss_fin = carry_fin[0], carry_fin[3]
+    obj, gam, taus, res = outs[:4]
+    tel_out = None
+    if telemetry is not None:
+        tel_out = finalize(carry_fin[4], outs[4])
     return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
-                      opt_residual=res, clipped=_clipped_of(ss_fin))
+                      opt_residual=res, clipped=_clipped_of(ss_fin),
+                      telemetry=tel_out)
 
 
 def run_piag(
@@ -155,6 +186,7 @@ def run_piag(
     horizon: int | str = 4096,
     use_tau_max: bool = True,
     record_every: int = 1,
+    telemetry: TelemetryConfig | None = None,
 ) -> PIAGResult:
     """Run PIAG over a write-event trace; everything under one jit.
 
@@ -173,7 +205,7 @@ def run_piag(
     def run(events):
         return piag_scan(worker_loss, x0, worker_data, events, policy, prox,
                          objective=objective, horizon=horizon,
-                         record_every=record_every)
+                         record_every=record_every, telemetry=telemetry)
 
     return run(events)
 

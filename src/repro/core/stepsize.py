@@ -375,6 +375,17 @@ def clipped_count(state) -> jnp.ndarray:
     return state.clipped
 
 
+def clip_delta(old, new) -> jnp.ndarray:
+    """Per-event horizon-clip flag: 1 iff the ``policy.step`` transition
+    ``old -> new`` clipped its window sum at H - 1 (int32 scalar, traceable).
+
+    The clip counter is monotone and bumps at most once per step, so the
+    delta IS the flag; the telemetry accumulators fold it into their
+    per-window clip counts (``repro.telemetry.accumulators.observe``).
+    """
+    return clipped_count(new) - clipped_count(old)
+
+
 POLICIES = {
     "fixed": FixedStepSize,
     "constant": FixedStepSize,   # tau_bound=0 -> gamma_k = gamma' (FedAvg mixing)

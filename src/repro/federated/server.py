@@ -29,7 +29,10 @@ import numpy as np
 
 from repro.core.engine import strided_scan
 from repro.core.prox import ProxOp
-from repro.core.stepsize import StepsizePolicy, auto_horizon, clipped_count
+from repro.core.stepsize import (StepsizePolicy, auto_horizon, clip_delta,
+                                 clipped_count)
+from repro.telemetry.accumulators import (TelemetryConfig, init_telemetry,
+                                          observe, emit_window, finalize)
 
 from .events import FederatedTrace
 
@@ -49,6 +52,7 @@ class FedResult(NamedTuple):
     clipped: jnp.ndarray = 0  # plain-int default: no jax init at import time
     # ^ final StepsizeState.clipped: uploads whose staleness exceeded the
     #   weight-policy horizon (H - 1 cap); nonzero flags undersized horizons.
+    telemetry: Any = None     # DelayTelemetry when telemetry= was passed
 
 
 def _tmap(fn, *ts):
@@ -99,6 +103,7 @@ def fedasync_scan(
     objective: Optional[Callable] = None,
     horizon: int = 4096,
     record_every: int = 1,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> FedResult:
     """The traceable FedAsync core: one ``lax.scan`` over upload events.
 
@@ -117,25 +122,37 @@ def fedasync_scan(
 
     def make_step(emit):
         def step(carry, event):
-            x, x_read, ss = carry
+            x, x_read, ss = carry[:3]
             w, tau, steps, _, ver = event
             xw = _tmap(lambda leaf: leaf[w], x_read)
             xc = client_update(xw, steps, *_leaves(data_at(w)))
+            ss_old = ss
             gamma, ss = policy.step(ss, tau)
             # x <- (1 - alpha_t) x + alpha_t x_c
             x_new = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
             # the uploading client picks up the freshly-written model
             x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            if telemetry is None:
+                if not emit:
+                    return (x_new, x_read, ss), None
+                return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
+            tel = observe(carry[3], tau, gamma, clip_delta(ss_old, ss))
             if not emit:
-                return (x_new, x_read, ss), None
-            return (x_new, x_read, ss), (obj(x_new), gamma, tau, ver)
+                return (x_new, x_read, ss, tel), None
+            tel, wclip = emit_window(tel)
+            return (x_new, x_read, ss, tel), (obj(x_new), gamma, tau, ver,
+                                              wclip)
         return step
 
     carry0 = (x0, x_read0, policy.init(horizon))
-    (x_fin, _, ss_fin), (o, g, t, v) = strided_scan(
-        make_step, carry0, events, record_every)
+    if telemetry is not None:
+        carry0 = carry0 + (init_telemetry(telemetry),)
+    carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
+    x_fin, ss_fin = carry_fin[0], carry_fin[2]
+    o, g, t, v = outs[:4]
+    tel_out = finalize(carry_fin[3], outs[4]) if telemetry is not None else None
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
-                     clipped=clipped_count(ss_fin))
+                     clipped=clipped_count(ss_fin), telemetry=tel_out)
 
 
 def run_fedasync(
@@ -147,6 +164,7 @@ def run_fedasync(
     objective: Optional[Callable] = None,   # P(x); nan if omitted
     horizon: int | str = 4096,
     record_every: int = 1,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> FedResult:
     """FedAsync: staleness-weighted model mixing, one write per upload.
 
@@ -160,7 +178,7 @@ def run_fedasync(
     def run(events):
         return fedasync_scan(client_update, x0, client_data, events, policy,
                              objective=objective, horizon=horizon,
-                             record_every=record_every)
+                             record_every=record_every, telemetry=telemetry)
 
     return run(events)
 
@@ -176,6 +194,7 @@ def fedbuff_scan(
     objective: Optional[Callable] = None,
     horizon: int = 4096,
     record_every: int = 1,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> FedResult:
     """The traceable FedBuff core: buffered semi-async aggregation of
     staleness-weighted deltas as one ``lax.scan`` over upload events.
@@ -198,26 +217,39 @@ def fedbuff_scan(
 
     def make_step(emit):
         def step(carry, event):
-            x, x_read, delta, ss = carry
+            x, x_read, delta, ss = carry[:4]
             w, tau, steps, agg, ver = event
             xw = _tmap(lambda leaf: leaf[w], x_read)
             xc = client_update(xw, steps, *_leaves(data_at(w)))
+            ss_old = ss
             gamma, ss = policy.step(ss, tau)
             delta = _tmap(lambda d, c, a: d + gamma * (c - a), delta, xc, xw)
             x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d, x,
                           delta)
             delta = _tmap(lambda d: (1.0 - agg) * d, delta)
             x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            if telemetry is None:
+                if not emit:
+                    return (x_new, x_read, delta, ss), None
+                return (x_new, x_read, delta, ss), (obj(x_new), gamma, tau,
+                                                    ver)
+            tel = observe(carry[4], tau, gamma, clip_delta(ss_old, ss))
             if not emit:
-                return (x_new, x_read, delta, ss), None
-            return (x_new, x_read, delta, ss), (obj(x_new), gamma, tau, ver)
+                return (x_new, x_read, delta, ss, tel), None
+            tel, wclip = emit_window(tel)
+            return (x_new, x_read, delta, ss, tel), (obj(x_new), gamma, tau,
+                                                     ver, wclip)
         return step
 
     carry0 = (x0, x_read0, delta0, policy.init(horizon))
-    (x_fin, _, _, ss_fin), (o, g, t, v) = strided_scan(
-        make_step, carry0, events, record_every)
+    if telemetry is not None:
+        carry0 = carry0 + (init_telemetry(telemetry),)
+    carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
+    x_fin, ss_fin = carry_fin[0], carry_fin[3]
+    o, g, t, v = outs[:4]
+    tel_out = finalize(carry_fin[4], outs[4]) if telemetry is not None else None
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
-                     clipped=clipped_count(ss_fin))
+                     clipped=clipped_count(ss_fin), telemetry=tel_out)
 
 
 def run_fedbuff(
@@ -231,6 +263,7 @@ def run_fedbuff(
     objective: Optional[Callable] = None,
     horizon: int | str = 4096,
     record_every: int = 1,
+    telemetry: Optional[TelemetryConfig] = None,
 ) -> FedResult:
     """FedBuff [Nguyen et al. '22] over a simulated trace; one jit."""
     if horizon == "auto":
@@ -242,7 +275,7 @@ def run_fedbuff(
         return fedbuff_scan(client_update, x0, client_data, events, policy,
                             eta=eta, buffer_size=buffer_size,
                             objective=objective, horizon=horizon,
-                            record_every=record_every)
+                            record_every=record_every, telemetry=telemetry)
 
     return run(events)
 

@@ -34,7 +34,7 @@ from pathlib import Path
 
 import jax
 
-from repro import analysis, api
+from repro import analysis, api, telemetry
 
 
 def load_spec(path: str) -> api.ExperimentSpec:
@@ -79,16 +79,21 @@ def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
         policies=api.PolicyGridSpec(names=policy_names,
                                     seeds=tuple(range(a.seeds))),
         execution=api.ExecutionSpec(backend=a.backend,
-                                    record_every=a.record_every),
+                                    record_every=a.record_every,
+                                    telemetry=a.telemetry,
+                                    telemetry_bins=a.telemetry_bins),
         n_events=a.events)
 
 
 def print_summary(res: api.Results) -> None:
     summaries = analysis.summarize(res)
     clip = analysis.clipped_summary(res.clipped)
-    if clip["cells_clipped"]:
-        print(f"WARNING: {clip['cells_clipped']} cells clipped delays at "
-              "the policy horizon (H - 1); raise --horizon")
+    # THE clip-pressure path: a real RuntimeWarning (visible to -W filters
+    # and log collectors, not just the console) whose message also lands in
+    # the printed output and -- via clipped_summary -- in --json
+    msg = telemetry.warn_clip_pressure(clip, horizon=res.horizon)
+    if msg:
+        print(f"WARNING: {msg}")
     print(f"{'policy':<16} {'mean P_final':>12} {'min P_final':>12} "
           f"{'mean sum(gamma)':>16} {'clipped':>8}")
     for pn, s in summaries.items():
@@ -133,10 +138,21 @@ def main() -> None:
                     help="decimated trace recording stride s: materialize "
                     "(and evaluate the objective at) only every s-th event "
                     "row; must divide --events (stride 1 = record all)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="ride the in-scan delay/step-size accumulators in "
+                    "the solver carry (bitwise-neutral; exact histogram "
+                    "even under --record-every decimation)")
+    ap.add_argument("--telemetry-bins", type=int, default=64,
+                    help="delay-histogram buckets (last bin = overflow)")
+    ap.add_argument("--ledger", default=None,
+                    help="append this run's RunRecord to a JSONL ledger "
+                    "file (also honored with --spec; see launch/report.py)")
     ap.add_argument("--json", default=None, help="write per-cell results here")
     a = ap.parse_args()
     if a.shard:
         a.backend = "sharded"
+    if a.ledger:
+        telemetry.set_ledger_path(a.ledger)
 
     spec = load_spec(a.spec) if a.spec else spec_from_flags(a)
 
@@ -151,9 +167,19 @@ def main() -> None:
           f"{grid.n_events} events, tau_bar={res.tau_bar}, "
           f"horizon={res.horizon}{' (auto)' if auto else ''}, "
           f"record_every={res.record_every}, devices={n_dev}")
+    rec = res.telemetry
     print(f"{res.backend} backend: {res.elapsed_s:.2f}s "
-          f"({res.elapsed_s / len(grid) * 1e3:.1f} ms/cell incl. compile)")
+          f"({res.elapsed_s / len(grid) * 1e3:.1f} ms/cell incl. compile; "
+          f"compile {rec.compile_ms:.0f}ms / warm {rec.warm_ms:.0f}ms, "
+          f"cache {rec.cache['hits']}h/{rec.cache['misses']}m)")
     print_summary(res)
+    if spec.execution.telemetry:
+        dp = analysis.delay_profile(res)
+        print(f"delay profile ({dp['source']}): {dp['count']} events, "
+              f"tau in [{dp['tau']['min']}, {dp['tau']['max']}], "
+              f"mean {dp['tau']['mean']:.2f} +/- {dp['tau']['std']:.2f}")
+    if a.ledger:
+        print(f"appended RunRecord to {a.ledger}")
 
     if a.json:
         Path(a.json).write_text(json.dumps(
@@ -163,6 +189,11 @@ def main() -> None:
              "record_every": res.record_every,
              "devices": n_dev, "seconds": res.elapsed_s,
              "clipped": analysis.clipped_summary(res.clipped),
+             "clipped_summary": analysis.clip_pressure(res),
+             "telemetry": {"compile_ms": rec.compile_ms,
+                           "warm_ms": rec.warm_ms, "cache": rec.cache,
+                           "delay_hist": rec.delay_hist,
+                           "hist_source": rec.hist_source},
              "cells": res.to_rows()}, indent=2) + "\n")
         print(f"wrote {a.json}")
 

@@ -28,10 +28,13 @@ in-place mutation, call ``clear_program_cache()``.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Tuple
 
 import jax
+
+from repro.telemetry.timing import record_timing
 
 __all__ = ["IdKey", "LRU", "tree_key", "cached_program",
            "clear_program_cache", "program_cache_stats",
@@ -75,6 +78,7 @@ class LRU:
         self.data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key, build: Callable[[], Any]):
         try:
@@ -85,6 +89,7 @@ class LRU:
             self.data[key] = val
             while len(self.data) > self.maxsize:
                 self.data.popitem(last=False)
+                self.evictions += 1
             return val
         self.hits += 1
         self.data.move_to_end(key)
@@ -93,20 +98,66 @@ class LRU:
 
 _PROGRAMS = LRU(PROGRAM_CACHE_MAXSIZE)
 
+# bumped by clear_program_cache(); snapshot consumers (api.run's per-call
+# cache deltas) compare generations to detect that the absolute counters
+# were reset between their snapshots
+_GENERATION = 0
+
+
+class _TimedFirstCall:
+    """Callable proxy recording the first dispatch of a freshly built
+    program as a ``program_first_call`` timing event -- on CPU, jax compiles
+    synchronously inside that call, so its wall time is the per-key compile
+    cost the run ledger attributes.  Subsequent calls go straight through."""
+
+    __slots__ = ("fn", "tag", "pending")
+
+    def __init__(self, fn: Callable, tag: str):
+        self.fn = fn
+        self.tag = tag
+        self.pending = True
+
+    def __call__(self, *args, **kwargs):
+        if not self.pending:
+            return self.fn(*args, **kwargs)
+        self.pending = False
+        t0 = time.perf_counter()
+        out = self.fn(*args, **kwargs)
+        record_timing("program_first_call",
+                      (time.perf_counter() - t0) * 1e3, key=self.tag)
+        return out
+
 
 def cached_program(key: Tuple, build: Callable[[], Any]):
     """Return the cached executable for ``key``, building (and caching) it on
     first use.  ``key`` must be a tuple of hashables; wrap captured objects
-    in ``IdKey`` / ``tree_key``."""
-    return _PROGRAMS.get(key, build)
+    in ``IdKey`` / ``tree_key``.
+
+    Misses are instrumented: ``build()`` wall time lands in the telemetry
+    timing buffer as ``program_build``, and callable programs come back
+    wrapped so their first dispatch records ``program_first_call``."""
+
+    def timed_build():
+        tag = str(key[0]) if key else "?"
+        t0 = time.perf_counter()
+        val = build()
+        record_timing("program_build", (time.perf_counter() - t0) * 1e3,
+                      key=tag)
+        return _TimedFirstCall(val, tag) if callable(val) else val
+
+    return _PROGRAMS.get(key, timed_build)
 
 
 def clear_program_cache() -> None:
-    """Drop every cached executable (tests; memory pressure)."""
+    """Drop every cached executable (tests; memory pressure).  Bumps the
+    stats generation so per-call deltas can reset-scope correctly."""
+    global _GENERATION
     _PROGRAMS.data.clear()
-    _PROGRAMS.hits = _PROGRAMS.misses = 0
+    _PROGRAMS.hits = _PROGRAMS.misses = _PROGRAMS.evictions = 0
+    _GENERATION += 1
 
 
 def program_cache_stats() -> dict:
     return {"size": len(_PROGRAMS.data), "hits": _PROGRAMS.hits,
-            "misses": _PROGRAMS.misses, "maxsize": _PROGRAMS.maxsize}
+            "misses": _PROGRAMS.misses, "evictions": _PROGRAMS.evictions,
+            "maxsize": _PROGRAMS.maxsize, "generation": _GENERATION}

@@ -46,6 +46,8 @@ from repro.federated.events import (ClientRounds, client_arrays,
                                     sample_client_rounds, simulate_federated)
 from repro.federated.server import (FedResult, fedasync_scan, fedbuff_scan)
 
+from repro.telemetry.timing import timed
+
 from .cache import IdKey, LRU, cached_program, tree_key
 from .grid import SweepBucket, SweepGrid
 from .policies import ParamPolicy
@@ -118,7 +120,12 @@ def run_bucketed(grid: SweepGrid, run_bucket: Callable,
     bucket of ``grid`` and stitch rows back into grid cell order.  Shared by
     the single-device runners here and the sharded runners in ``.shard``."""
     buckets = grid.buckets(bucket_widths)
-    parts = [run_bucket(b) for b in buckets]
+    parts = []
+    for b in buckets:
+        # telemetry: per-bucket dispatch wall time (build + trace + enqueue;
+        # execution may still be async -- api.run's block covers that)
+        with timed("bucket_dispatch", width=b.width, cells=len(b.index)):
+            parts.append(run_bucket(b))
     if len(parts) == 1:
         return parts[0]
     order = np.concatenate([b.index for b in buckets])
@@ -142,7 +149,7 @@ def _slice_workers(worker_data, width: int):
 # ---------------------------------------------------------------- PIAG ----
 
 def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-               use_tau_max, masked, record_every=1):
+               use_tau_max, masked, record_every=1, telemetry=None):
     """The per-cell program (trace generation fused with the solver scan);
     ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
     the sharded one."""
@@ -153,21 +160,23 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, active=active,
-                             record_every=record_every)
+                             record_every=record_every, telemetry=telemetry)
     else:
         def cell(T, pp):
             tr = trace_scan(T)
             events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
-                             horizon=horizon, record_every=record_every)
+                             horizon=horizon, record_every=record_every,
+                             telemetry=telemetry)
     return cell
 
 
 def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
                     objective: Optional[Callable] = None, horizon: int = 4096,
                     use_tau_max: bool = True, masked: bool = False,
-                    record_every: int = 1, donate: bool = False) -> Callable:
+                    record_every: int = 1, donate: bool = False,
+                    telemetry=None) -> Callable:
     """Build the batched PIAG program.
 
     Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
@@ -179,7 +188,7 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
     """
     return jax.jit(jax.vmap(_piag_cell(
         worker_loss, x0, worker_data, prox, objective, horizon, use_tau_max,
-        masked, record_every)),
+        masked, record_every, telemetry)),
         donate_argnums=(0,) if donate else ())
 
 
@@ -187,7 +196,7 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                prox: ProxOp, objective: Optional[Callable] = None,
                horizon: Horizon = 4096, use_tau_max: bool = True,
                bucket_widths: Optional[Sequence[int]] = None,
-               record_every: int = 1) -> PIAGResult:
+               record_every: int = 1, telemetry=None) -> PIAGResult:
     """Run PIAG on every cell of ``grid`` in one batched program per
     bucket (a homogeneous grid is exactly one program).  ``bucket_widths``
     overrides the ragged grid's padded-width menu (``SweepGrid.buckets``).
@@ -201,12 +210,13 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
 
     def run_bucket(b: SweepBucket):
         key = ("piag", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, IdKey(worker_loss), tree_key(x0),
+               record_every, telemetry, IdKey(worker_loss), tree_key(x0),
                tree_key(worker_data), IdKey(prox), IdKey(objective))
         fn = cached_program(key, lambda: make_sweep_piag(
             worker_loss, x0, _slice_workers(worker_data, b.width), prox,
             objective=objective, horizon=horizon, use_tau_max=use_tau_max,
-            masked=not b.uniform, record_every=record_every, donate=_donate_default()))
+            masked=not b.uniform, record_every=record_every,
+            donate=_donate_default(), telemetry=telemetry))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         if b.uniform:
@@ -235,42 +245,42 @@ def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 # ----------------------------------------------------------- Async-BCD ----
 
 def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-              record_every=1):
+              record_every=1, telemetry=None):
     if masked:
         def cell(T, active, blocks, pp):
             tr = trace_scan(T, active=active)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
                             ParamPolicy(pp), prox, horizon=horizon,
-                            record_every=record_every)
+                            record_every=record_every, telemetry=telemetry)
     else:
         def cell(T, blocks, pp):
             tr = trace_scan(T)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
                             ParamPolicy(pp), prox, horizon=horizon,
-                            record_every=record_every)
+                            record_every=record_every, telemetry=telemetry)
     return cell
 
 
 def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                    n_workers: int, prox: ProxOp, horizon: int = 4096,
                    masked: bool = False, record_every: int = 1,
-                   donate: bool = False) -> Callable:
+                   donate: bool = False, telemetry=None) -> Callable:
     """Build the batched Async-BCD program: jitted ``fn(service_times
     (B, n, K+1)[, active (B, n)], blocks (B, K), params (B,)) ->
     BCDResult``.  BCD has no cross-worker reduction, so the mask only
     guards the trace (see ``core.bcd.bcd_scan``)."""
     return jax.jit(jax.vmap(_bcd_cell(
         grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-        record_every)),
+        record_every, telemetry)),
         donate_argnums=(0,) if donate else ())
 
 
 def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
               grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
               bucket_widths: Optional[Sequence[int]] = None,
-              record_every: int = 1) -> BCDResult:
+              record_every: int = 1, telemetry=None) -> BCDResult:
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
     runs.  Per-bucket executables are cached; ``horizon='auto'`` sizes the
@@ -279,10 +289,12 @@ def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
 
     def run_bucket(b: SweepBucket):
         key = ("bcd", b.width, not b.uniform, horizon, m, record_every,
-               IdKey(grad_f), IdKey(objective), tree_key(x0), IdKey(prox))
+               telemetry, IdKey(grad_f), IdKey(objective), tree_key(x0),
+               IdKey(prox))
         fn = cached_program(key, lambda: make_sweep_bcd(
             grad_f, objective, x0, m, b.width, prox, horizon=horizon,
-            masked=not b.uniform, record_every=record_every, donate=_donate_default()))
+            masked=not b.uniform, record_every=record_every,
+            donate=_donate_default(), telemetry=telemetry))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
@@ -362,7 +374,7 @@ def _check_fed_diag(n_up, exhausted, n_uploads: int, n_steps: int) -> None:
 def make_sweep_fedasync(client_update: Callable, x0, client_data,
                         objective: Optional[Callable] = None,
                         horizon: int = 4096,
-                        record_every: int = 1) -> Callable:
+                        record_every: int = 1, telemetry=None) -> Callable:
     """Build the events-driven batched FedAsync program: jitted
     ``fn(events (5 x (B, K)), params (B,)) -> FedResult``.  This is the
     reference-path entry (events stacked on host, e.g. by
@@ -372,27 +384,30 @@ def make_sweep_fedasync(client_update: Callable, x0, client_data,
     def cell(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
-                             horizon=horizon, record_every=record_every)
+                             horizon=horizon, record_every=record_every,
+                             telemetry=telemetry)
 
     return jax.jit(jax.vmap(cell))
 
 
 def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon,
-                           record_every=1):
+                           record_every=1, telemetry=None):
     def server_scan(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
-                             horizon=horizon, record_every=record_every)
+                             horizon=horizon, record_every=record_every,
+                             telemetry=telemetry)
     return server_scan
 
 
 def _fedbuff_scan_adapter(client_update, x0, client_data, objective, horizon,
-                          eta, buffer_size, record_every=1):
+                          eta, buffer_size, record_every=1, telemetry=None):
     def server_scan(events, pp):
         return fedbuff_scan(client_update, x0, client_data, events,
                             ParamPolicy(pp), eta=eta,
                             buffer_size=buffer_size, objective=objective,
-                            horizon=horizon, record_every=record_every)
+                            horizon=horizon, record_every=record_every,
+                            telemetry=telemetry)
     return server_scan
 
 
@@ -402,7 +417,7 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
                               horizon: int = 4096,
                               n_steps: Optional[int] = None,
                               record_every: int = 1,
-                              donate: bool = False) -> Callable:
+                              donate: bool = False, telemetry=None) -> Callable:
     """Build the fused batched FedAsync program: jitted ``fn(rounds,
     cparams, active, params) -> (FedResult, n_uploads (B,), exhausted (B,))``
     with trace generation (``federated_trace_scan``) and the server scan in
@@ -411,7 +426,7 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedasync_scan_adapter(client_update, x0, client_data, objective,
-                               horizon, record_every),
+                               horizon, record_every, telemetry),
         n_uploads, buffer_size, n_steps)),
         donate_argnums=(0,) if donate else ())
 
@@ -422,13 +437,14 @@ def make_sweep_fedbuff(client_update: Callable, x0, client_data,
                        horizon: int = 4096,
                        n_steps: Optional[int] = None,
                        record_every: int = 1,
-                       donate: bool = False) -> Callable:
+                       donate: bool = False, telemetry=None) -> Callable:
     """Build the fused batched FedBuff program (same shape as
     ``make_sweep_fedasync_fused`` with the buffered-delta server scan)."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedbuff_scan_adapter(client_update, x0, client_data, objective,
-                              horizon, eta, buffer_size, record_every),
+                              horizon, eta, buffer_size, record_every,
+                              telemetry),
         n_uploads, buffer_size, n_steps)),
         donate_argnums=(0,) if donate else ())
 
@@ -518,7 +534,7 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    reference: bool = False,
                    n_steps: Optional[int] = None,
                    bucket_widths: Optional[Sequence[int]] = None,
-                   record_every: int = 1) -> FedResult:
+                   record_every: int = 1, telemetry=None) -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
     ``ClientModel`` lists.
 
@@ -534,18 +550,20 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedasync_scan_adapter(client_update, x0, client_data,
-                                     objective, horizon, record_every)
+                                     objective, horizon, record_every,
+                                     telemetry)
 
     def make_fused(cd, S):
         return make_sweep_fedasync_fused(client_update, x0, cd, grid.n_events,
                                          buffer_size=buffer_size,
                                          objective=objective, horizon=horizon,
                                          n_steps=S, record_every=record_every,
-                                         donate=_donate_default())
+                                         donate=_donate_default(),
+                                         telemetry=telemetry)
 
     key = ("fedasync", grid.n_events, buffer_size, horizon, record_every,
-           IdKey(client_update), tree_key(x0), tree_key(client_data),
-           IdKey(objective))
+           telemetry, IdKey(client_update), tree_key(x0),
+           tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,
                       cache_key=key)
@@ -558,7 +576,7 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                   reference: bool = False,
                   n_steps: Optional[int] = None,
                   bucket_widths: Optional[Sequence[int]] = None,
-                  record_every: int = 1) -> FedResult:
+                  record_every: int = 1, telemetry=None) -> FedResult:
     """Run FedBuff on every cell: fused jitted trace generation + buffered
     delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
     program per bucket; ``reference=True`` / ``horizon='auto'`` as in
@@ -566,18 +584,20 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedbuff_scan_adapter(client_update, x0, client_data, objective,
-                                    horizon, eta, buffer_size, record_every)
+                                    horizon, eta, buffer_size, record_every,
+                                    telemetry)
 
     def make_fused(cd, S):
         return make_sweep_fedbuff(client_update, x0, cd, grid.n_events,
                                   eta=eta, buffer_size=buffer_size,
                                   objective=objective, horizon=horizon,
                                   n_steps=S, record_every=record_every,
-                                  donate=_donate_default())
+                                  donate=_donate_default(),
+                                  telemetry=telemetry)
 
     key = ("fedbuff", grid.n_events, eta, buffer_size, horizon, record_every,
-           IdKey(client_update), tree_key(x0), tree_key(client_data),
-           IdKey(objective))
+           telemetry, IdKey(client_update), tree_key(x0),
+           tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,
                       cache_key=key)

@@ -42,6 +42,8 @@ from repro.core.prox import ProxOp
 from repro.federated.events import default_fed_steps
 from repro.federated.server import FedResult
 
+from repro.telemetry.timing import timed
+
 from .cache import IdKey, cached_program, tree_key
 from .grid import SweepBucket, SweepGrid
 from .runners import (Horizon, _bcd_cell, _fed_cell, _fedasync_scan_adapter,
@@ -122,7 +124,11 @@ def _run_sharded_bucket(cell_build, mesh: Mesh, args, n_cells: int,
         return shard_cells(jax.vmap(cell_build()), mesh, n_args=n_args)
 
     fn = build() if cache_key is None else cached_program(cache_key, build)
-    out = fn(*(_pad_gather(a, idx) for a in args))
+    # telemetry: dispatch wall time across the mesh (per-device skew shows
+    # up as dispatch >> cells/devices * per-cell cost on the warm path)
+    with timed("sharded_dispatch", devices=int(mesh.devices.size),
+               cells=int(n_cells)):
+        out = fn(*(_pad_gather(a, idx) for a in args))
     return _unpad(out, n_cells)
 
 
@@ -133,13 +139,13 @@ def make_sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                             horizon: int = 4096, use_tau_max: bool = True,
                             masked: bool = False,
                             mesh: Optional[Mesh] = None,
-                            record_every: int = 1) -> Callable:
+                            record_every: int = 1, telemetry=None) -> Callable:
     """Sharded twin of ``make_sweep_piag``: same signature and row values,
     but the batch axis is partitioned across ``mesh`` (batch size must be a
     mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-                      use_tau_max, masked, record_every)
+                      use_tau_max, masked, record_every, telemetry)
     return shard_cells(jax.vmap(cell), mesh, n_args=3 if masked else 2)
 
 
@@ -149,15 +155,16 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                        horizon: Horizon = 4096, use_tau_max: bool = True,
                        mesh: Optional[Mesh] = None,
                        bucket_widths: Optional[Sequence[int]] = None,
-                       record_every: int = 1) -> PIAGResult:
+                       record_every: int = 1, telemetry=None) -> PIAGResult:
     """``sweep_piag`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
         key = ("piag/sharded", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, mesh, IdKey(worker_loss), tree_key(x0),
-               tree_key(worker_data), IdKey(prox), IdKey(objective))
+               record_every, telemetry, mesh, IdKey(worker_loss),
+               tree_key(x0), tree_key(worker_data), IdKey(prox),
+               IdKey(objective))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         args = ((T, pp) if b.uniform else
@@ -166,7 +173,7 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
             lambda: _piag_cell(worker_loss, x0,
                                _slice_workers(worker_data, b.width), prox,
                                objective, horizon, use_tau_max,
-                               not b.uniform, record_every),
+                               not b.uniform, record_every, telemetry),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
@@ -191,11 +198,11 @@ def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                            n_workers: int, prox: ProxOp, horizon: int = 4096,
                            masked: bool = False,
                            mesh: Optional[Mesh] = None,
-                           record_every: int = 1) -> Callable:
+                           record_every: int = 1, telemetry=None) -> Callable:
     """Sharded twin of ``make_sweep_bcd`` (batch must be a mesh multiple)."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon,
-                     masked, record_every)
+                     masked, record_every, telemetry)
     return shard_cells(jax.vmap(cell), mesh, n_args=4 if masked else 3)
 
 
@@ -203,15 +210,15 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                       grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
                       mesh: Optional[Mesh] = None,
                       bucket_widths: Optional[Sequence[int]] = None,
-                      record_every: int = 1) -> BCDResult:
+                      record_every: int = 1, telemetry=None) -> BCDResult:
     """``sweep_bcd`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
         key = ("bcd/sharded", b.width, not b.uniform, horizon, m,
-               record_every, mesh, IdKey(grad_f), IdKey(objective),
-               tree_key(x0), IdKey(prox))
+               record_every, telemetry, mesh, IdKey(grad_f),
+               IdKey(objective), tree_key(x0), IdKey(prox))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
@@ -221,7 +228,8 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                 (T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp))
         return _run_sharded_bucket(
             lambda: _bcd_cell(grad_f, objective, x0, m, b.width, prox,
-                              horizon, not b.uniform, record_every),
+                              horizon, not b.uniform, record_every,
+                              telemetry),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
@@ -261,17 +269,17 @@ def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
                            n_steps: Optional[int] = None,
                            mesh: Optional[Mesh] = None,
                            bucket_widths: Optional[Sequence[int]] = None,
-                           record_every: int = 1) -> FedResult:
+                           record_every: int = 1, telemetry=None) -> FedResult:
     """``sweep_fedasync`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
 
     def adapter_for(cd):
         return _fedasync_scan_adapter(client_update, x0, cd, objective,
-                                      horizon, record_every)
+                                      horizon, record_every, telemetry)
 
     key = ("fedasync/sharded", grid.n_events, buffer_size, horizon,
-           record_every, IdKey(client_update), tree_key(x0),
+           record_every, telemetry, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,
@@ -286,17 +294,18 @@ def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
                           n_steps: Optional[int] = None,
                           mesh: Optional[Mesh] = None,
                           bucket_widths: Optional[Sequence[int]] = None,
-                          record_every: int = 1) -> FedResult:
+                          record_every: int = 1, telemetry=None) -> FedResult:
     """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
 
     def adapter_for(cd):
         return _fedbuff_scan_adapter(client_update, x0, cd, objective,
-                                     horizon, eta, buffer_size, record_every)
+                                     horizon, eta, buffer_size, record_every,
+                                     telemetry)
 
     key = ("fedbuff/sharded", grid.n_events, eta, buffer_size, horizon,
-           record_every, IdKey(client_update), tree_key(x0),
+           record_every, telemetry, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,

@@ -1,0 +1,200 @@
+"""In-scan metric accumulators (`repro.telemetry.accumulators`).
+
+Jit-compatible aggregate statistics that ride in the solver scan carries:
+a fixed-bucket delay histogram (in-carry bincount), running min/max and
+Welford mean/M2 moments for the delay tau and the emitted step-size gamma,
+and a per-recording-window horizon-clip counter.  Because the accumulator
+updates on EVERY event -- silent decimated steps included (see
+``core.engine.strided_scan``) -- the aggregates are exact even when
+``record_every=s`` drops s-1 of every s trajectory rows.
+
+The contract that makes the layer safe to leave on in sweeps is
+**bitwise neutrality**: accumulator state is an extra, data-independent
+carry element; no solver value ever depends on it, so solver outputs with
+telemetry on are bitwise-equal to telemetry off (pinned in
+``tests/test_telemetry.py`` for all four solvers and all three backends).
+
+This module imports only jax/numpy (no repro.core) so the solver scans can
+depend on it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TelemetryConfig", "TelemetryState", "DelayTelemetry",
+           "init_telemetry", "observe", "emit_window", "finalize",
+           "summarize_telemetry"]
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static accumulator configuration.
+
+    Frozen + hashable by design: the config participates in the sweep
+    program-cache keys (``repro.sweep.cache``), so a telemetry-on build can
+    never be served a telemetry-off executable or vice versa.
+
+    ``delay_bins``: histogram buckets.  Bin ``i < delay_bins - 1`` counts
+    events with ``tau == i``; the LAST bin is the overflow bucket counting
+    every ``tau >= delay_bins - 1`` (delays are never dropped, only
+    coarsened -- the histogram always sums to the event count).
+    """
+
+    delay_bins: int = 64
+
+    def __post_init__(self):
+        if self.delay_bins < 2:
+            raise ValueError(
+                f"delay_bins must be >= 2, got {self.delay_bins}")
+
+
+class TelemetryState(NamedTuple):
+    """The in-carry accumulator (all leaves scalar except ``hist``)."""
+
+    hist: jnp.ndarray      # (delay_bins,) int32 delay histogram
+    count: jnp.ndarray     # () int32 events observed
+    tau_min: jnp.ndarray   # () int32 (INT32_MAX before any event)
+    tau_max: jnp.ndarray   # () int32 (-1 before any event)
+    tau_mean: jnp.ndarray  # () float32 Welford running mean
+    tau_m2: jnp.ndarray    # () float32 Welford sum of squared deviations
+    g_min: jnp.ndarray     # () float32 (+inf before any event)
+    g_max: jnp.ndarray     # () float32 (-inf before any event)
+    g_mean: jnp.ndarray    # () float32
+    g_m2: jnp.ndarray      # () float32
+    win_clip: jnp.ndarray  # () int32 horizon clips since the last emit
+
+
+class DelayTelemetry(NamedTuple):
+    """Finalized per-cell aggregates, returned on the solver result's
+    ``telemetry`` field (leading cell axis under vmap/shard_map).
+
+    ``window_clips`` is the per-recorded-window clip column (K // s,): at
+    stride 1 it is the per-event clip flag sequence; at stride s, entry j
+    counts horizon-clipped delays in the window ending at recorded event
+    ``j*s + s - 1`` -- decimation loses nothing, the counts just batch up.
+    """
+
+    hist: jnp.ndarray
+    count: jnp.ndarray
+    tau_min: jnp.ndarray
+    tau_max: jnp.ndarray
+    tau_mean: jnp.ndarray
+    tau_m2: jnp.ndarray
+    gamma_min: jnp.ndarray
+    gamma_max: jnp.ndarray
+    gamma_mean: jnp.ndarray
+    gamma_m2: jnp.ndarray
+    window_clips: jnp.ndarray
+
+
+def init_telemetry(cfg: TelemetryConfig) -> TelemetryState:
+    f32, i32 = jnp.float32, jnp.int32
+    return TelemetryState(
+        hist=jnp.zeros((cfg.delay_bins,), i32),
+        count=jnp.zeros((), i32),
+        tau_min=jnp.full((), _I32_MAX, i32),
+        tau_max=jnp.full((), -1, i32),
+        tau_mean=jnp.zeros((), f32),
+        tau_m2=jnp.zeros((), f32),
+        g_min=jnp.full((), jnp.inf, f32),
+        g_max=jnp.full((), -jnp.inf, f32),
+        g_mean=jnp.zeros((), f32),
+        g_m2=jnp.zeros((), f32),
+        win_clip=jnp.zeros((), i32),
+    )
+
+
+def observe(state: TelemetryState, tau, gamma,
+            was_clipped) -> TelemetryState:
+    """Fold one event into the accumulator (runs on silent AND loud steps).
+
+    ``was_clipped`` is the per-event horizon-clip flag, i.e. the delta of
+    the policy state's ``clipped`` counter across ``policy.step``
+    (``core.stepsize.clip_delta``).  Pure arithmetic on the telemetry
+    leaves only -- nothing here feeds back into the solver carry.
+    """
+    tau_i = jnp.asarray(tau, jnp.int32)
+    tau_f = jnp.asarray(tau_i, jnp.float32)
+    g = jnp.asarray(gamma, jnp.float32)
+    n_bins = state.hist.shape[-1]
+    cnt = state.count + 1
+    cnt_f = jnp.asarray(cnt, jnp.float32)
+    d_tau = tau_f - state.tau_mean
+    tau_mean = state.tau_mean + d_tau / cnt_f
+    d_g = g - state.g_mean
+    g_mean = state.g_mean + d_g / cnt_f
+    return TelemetryState(
+        hist=state.hist.at[jnp.minimum(tau_i, n_bins - 1)].add(1),
+        count=cnt,
+        tau_min=jnp.minimum(state.tau_min, tau_i),
+        tau_max=jnp.maximum(state.tau_max, tau_i),
+        tau_mean=tau_mean,
+        tau_m2=state.tau_m2 + d_tau * (tau_f - tau_mean),
+        g_min=jnp.minimum(state.g_min, g),
+        g_max=jnp.maximum(state.g_max, g),
+        g_mean=g_mean,
+        g_m2=state.g_m2 + d_g * (g - g_mean),
+        win_clip=state.win_clip + jnp.asarray(was_clipped, jnp.int32),
+    )
+
+
+def emit_window(state: TelemetryState) -> Tuple[TelemetryState, jnp.ndarray]:
+    """Close the current recording window: return the clips accumulated
+    since the previous emit (the ``window_clips`` column value) and the
+    state with the window counter reset."""
+    return state._replace(win_clip=jnp.zeros((), jnp.int32)), state.win_clip
+
+
+def finalize(state: TelemetryState,
+             window_clips: jnp.ndarray) -> DelayTelemetry:
+    """Repackage the final carry state + the scanned window-clip column as
+    the result-side ``DelayTelemetry``."""
+    return DelayTelemetry(
+        hist=state.hist, count=state.count,
+        tau_min=state.tau_min, tau_max=state.tau_max,
+        tau_mean=state.tau_mean, tau_m2=state.tau_m2,
+        gamma_min=state.g_min, gamma_max=state.g_max,
+        gamma_mean=state.g_mean, gamma_m2=state.g_m2,
+        window_clips=window_clips)
+
+
+def summarize_telemetry(tel: DelayTelemetry) -> dict:
+    """Host-side merge of a (possibly cell-batched) ``DelayTelemetry`` into
+    one aggregate dict: histograms sum, min/max reduce, and Welford moments
+    combine with the standard parallel update (so the merged mean/std are
+    exact, not means-of-means)."""
+    hist = np.asarray(tel.hist).reshape(-1, np.asarray(tel.hist).shape[-1])
+    counts = np.asarray(tel.count, np.float64).reshape(-1)
+    total = counts.sum()
+
+    def merge_moments(means, m2s):
+        means = np.asarray(means, np.float64).reshape(-1)
+        m2s = np.asarray(m2s, np.float64).reshape(-1)
+        if total <= 0:
+            return 0.0, 0.0
+        mean = float((counts * means).sum() / total)
+        m2 = float(m2s.sum() + (counts * (means - mean) ** 2).sum())
+        return mean, float(np.sqrt(m2 / total))
+
+    tau_mean, tau_std = merge_moments(tel.tau_mean, tel.tau_m2)
+    g_mean, g_std = merge_moments(tel.gamma_mean, tel.gamma_m2)
+    wc = np.asarray(tel.window_clips)
+    return {
+        "count": int(total),
+        "hist": hist.sum(axis=0).astype(np.int64).tolist(),
+        "tau": {"min": int(np.asarray(tel.tau_min).min()),
+                "max": int(np.asarray(tel.tau_max).max()),
+                "mean": tau_mean, "std": tau_std},
+        "gamma": {"min": float(np.asarray(tel.gamma_min).min()),
+                  "max": float(np.asarray(tel.gamma_max).max()),
+                  "mean": g_mean, "std": g_std},
+        "window_clips": {"total": int(wc.sum()),
+                         "max": int(wc.max()) if wc.size else 0,
+                         "windows_clipped": int((wc > 0).sum())},
+    }

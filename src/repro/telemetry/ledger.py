@@ -1,0 +1,190 @@
+"""The structured run ledger (`repro.telemetry.ledger`).
+
+Every ``repro.api.run`` builds one ``RunRecord`` -- spec fingerprint,
+solver/backend, chosen horizon, measured tau-bar, the delay histogram,
+compile-ms vs warm-ms, program-cache hit/miss/evict deltas, mesh shape and
+a scan-carry size estimate -- surfaces it on ``Results.telemetry``, and
+(when a ledger path is configured) appends it as one JSON line.
+
+The ledger is OPT-IN on disk: nothing is written unless
+``set_ledger_path(path)`` was called or the ``REPRO_TELEMETRY_LEDGER``
+environment variable names a file.  The in-memory record on ``Results`` is
+always built -- observability costs one host-side dict per run, never a
+device sync.
+
+``launch/report.py`` renders a ledger file into a human-readable summary;
+``repro.analysis.run_timeline`` consumes it programmatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Union
+
+__all__ = ["RunRecord", "set_ledger_path", "get_ledger_path",
+           "append_record", "read_ledger", "spec_fingerprint",
+           "estimate_carry_bytes", "cache_delta", "warn_clip_pressure"]
+
+LEDGER_ENV = "REPRO_TELEMETRY_LEDGER"
+
+_LEDGER_PATH: Optional[str] = None
+
+
+def set_ledger_path(path: Optional[Union[str, Path]]) -> None:
+    """Route ``append_record`` to ``path`` (None restores the env-var
+    default, i.e. no writes unless ``REPRO_TELEMETRY_LEDGER`` is set)."""
+    global _LEDGER_PATH
+    _LEDGER_PATH = None if path is None else str(path)
+
+
+def get_ledger_path() -> Optional[str]:
+    return _LEDGER_PATH if _LEDGER_PATH is not None \
+        else (os.environ.get(LEDGER_ENV) or None)
+
+
+@dataclasses.dataclass
+class RunRecord:
+    """One ``api.run`` as a flat, JSON-able record.
+
+    ``delay_hist`` is summed over cells; with ``hist_source ==
+    "accumulator"`` it is the exact in-scan histogram (sums to
+    ``n_cells * n_events`` regardless of ``record_every``), with
+    ``"recorded"`` it was binned from the RECORDED tau rows on the host --
+    exact at stride 1 only (a 1/s sample otherwise).
+
+    ``compile_ms`` sums the drained ``program_build`` / first-dispatch
+    timing events of this run (executable construction + XLA's synchronous
+    first-call compile); ``warm_ms = max(elapsed - compile, 0)`` is the
+    execution-side remainder.  Solo-backend runs bypass the program cache,
+    so their compile attribution is 0 by construction.
+    """
+
+    ts: float
+    fingerprint: str
+    solver: str
+    backend: str
+    n_cells: int
+    n_events: int
+    record_every: int
+    horizon: Optional[int]
+    tau_bar: Optional[int]
+    devices: int
+    mesh_shape: Optional[List[int]]
+    carry_bytes: int
+    elapsed_ms: float
+    compile_ms: float
+    warm_ms: float
+    cache: Dict[str, Any]
+    delay_hist: List[int]
+    hist_source: str
+    tau_stats: Dict[str, float]
+    gamma_stats: Dict[str, float]
+    clipped: Dict[str, int]
+    policies: List[str]
+    timings: List[Dict[str, Any]]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunRecord":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def append_record(record: RunRecord,
+                  path: Optional[Union[str, Path]] = None) -> bool:
+    """Append one JSON line; returns False (and writes nothing) when no
+    ledger path is configured."""
+    p = str(path) if path is not None else get_ledger_path()
+    if not p:
+        return False
+    with open(p, "a") as fh:
+        fh.write(record.to_json() + "\n")
+    return True
+
+
+def read_ledger(path: Union[str, Path]) -> Iterator[Dict[str, Any]]:
+    """Yield one dict per ledger line (blank lines skipped)."""
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                yield json.loads(line)
+
+
+def spec_fingerprint(spec: Any, grid: Any = None) -> str:
+    """A short stable digest of the experiment configuration.
+
+    Built from the spec's declarative knobs (never from array contents --
+    component specs embed whole problems); two value-equal declarative
+    specs fingerprint identically, and component/escape-hatch specs fall
+    back to the grid's cell labels."""
+    try:
+        if spec is not None and getattr(spec.problem, "problem", None) is None:
+            desc = repr((spec.problem, spec.solver, spec.topology,
+                         spec.policies, spec.delay, spec.execution,
+                         spec.n_events))
+        elif grid is not None:
+            desc = repr((type(spec).__name__ if spec is not None else None,
+                         tuple(grid.labels()), grid.n_events))
+        else:
+            desc = repr(spec)
+    except Exception:  # never let fingerprinting break a run
+        desc = "unfingerprintable"
+    return hashlib.sha1(desc.encode()).hexdigest()[:12]
+
+
+def estimate_carry_bytes(solver: str, dim: int, width: int, horizon: int,
+                         n_cells: int) -> int:
+    """Order-of-magnitude scan-carry footprint of a batched run: per-cell
+    iterate-shaped carry leaves (iterate + per-worker snapshot/gradient
+    tables) plus the step-size circular buffer, in float32 bytes.  An
+    ESTIMATE for ledger trend lines -- not an allocator measurement."""
+    per_cell = {
+        "piag": dim * (1 + 2 * width),        # x + g_table + x_read
+        "bcd": dim * (1 + width),             # x + x_read snapshots
+        "fedasync": dim * (1 + width),        # x + client snapshot table
+        "fedbuff": dim * (2 + width),         # + the delta buffer
+    }.get(solver, dim * (1 + width))
+    return int(4 * (per_cell + int(horizon) + 4) * int(n_cells))
+
+
+def cache_delta(before: Dict[str, Any], after: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-run ``program_cache_stats()`` delta, reset-scoped: when
+    ``clear_program_cache()`` ran between the snapshots (generation bump)
+    the absolute counters restarted from zero, so the after-side values ARE
+    the delta since the clear -- flagged with ``reset`` so consumers know
+    the scope boundary moved."""
+    reset = before.get("generation") != after.get("generation")
+    base = {k: 0 for k in ("hits", "misses", "evictions")} if reset else before
+    return {
+        "hits": int(after.get("hits", 0)) - int(base.get("hits", 0)),
+        "misses": int(after.get("misses", 0)) - int(base.get("misses", 0)),
+        "evictions": (int(after.get("evictions", 0))
+                      - int(base.get("evictions", 0))),
+        "size": int(after.get("size", 0)),
+        "reset": bool(reset),
+    }
+
+
+def warn_clip_pressure(clip: Dict[str, int],
+                       horizon: Optional[int] = None) -> Optional[str]:
+    """THE clip-pressure warning path (satellite: ``launch.sweep`` used to
+    hand-roll a bare print that JSON consumers never saw).  Given an
+    ``analysis.clipped_summary`` block, emits a ``RuntimeWarning`` and
+    returns the message when any cell clipped delays at the policy horizon;
+    returns None when clean."""
+    import warnings
+
+    if not clip.get("cells_clipped"):
+        return None
+    h = f" (H={horizon})" if horizon is not None else ""
+    msg = (f"{clip['cells_clipped']}/{clip['cells']} cells clipped "
+           f"{clip['events_clipped']} delays at the policy horizon{h}; "
+           "window sums were silently truncated -- raise the horizon")
+    warnings.warn(msg, RuntimeWarning, stacklevel=2)
+    return msg

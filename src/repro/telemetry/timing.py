@@ -1,0 +1,67 @@
+"""Host-side timing sink (`repro.telemetry.timing`).
+
+A tiny append-only event buffer the instrumented hot paths write into:
+``repro.sweep.cache`` records program build / first-call (compile) times,
+``repro.sweep.runners.run_bucketed`` records per-bucket dispatch times, and
+the sharded runners record per-mesh dispatch times.  ``repro.api.run``
+drains the buffer around each dispatch and folds the events into the run's
+``RunRecord`` (see ``.ledger``), which is how compile-ms vs warm-ms gets
+attributed without touching any jitted code.
+
+Deliberately stdlib-only and overhead-free when nothing drains it: an event
+is one small dict appended to a list under a lock.  This module must stay a
+leaf (no repro imports) so every layer can use it without cycles.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List
+
+__all__ = ["record_timing", "drain_timings", "peek_timings", "timed"]
+
+_LOCK = threading.Lock()
+_EVENTS: List[Dict[str, Any]] = []
+
+# names api.run treats as compile-side when splitting elapsed time into
+# compile-ms vs warm-ms (program construction + the first dispatch of a
+# freshly built executable, where XLA compiles synchronously on CPU)
+COMPILE_EVENT_NAMES = ("program_build", "program_first_call")
+
+
+def record_timing(name: str, ms: float, **meta: Any) -> None:
+    """Append one timing event: ``{"name", "ms", **meta}``."""
+    ev = {"name": str(name), "ms": float(ms)}
+    for k, v in meta.items():
+        ev[k] = v
+    with _LOCK:
+        _EVENTS.append(ev)
+
+
+def drain_timings() -> List[Dict[str, Any]]:
+    """Return all buffered events and clear the buffer."""
+    with _LOCK:
+        out, _EVENTS[:] = list(_EVENTS), []
+    return out
+
+
+def peek_timings() -> List[Dict[str, Any]]:
+    """A copy of the buffered events without clearing them."""
+    with _LOCK:
+        return list(_EVENTS)
+
+
+class timed:
+    """``with timed("name", key=...):`` context recording wall-clock ms."""
+
+    def __init__(self, name: str, **meta: Any):
+        self.name, self.meta = name, meta
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        record_timing(self.name, (time.perf_counter() - self._t0) * 1e3,
+                      **self.meta)
+        return False

@@ -1,0 +1,425 @@
+"""The telemetry subsystem's contract (`repro.telemetry`).
+
+The load-bearing pin is **bitwise neutrality**: the in-scan accumulators
+ride the solver carries as an extra, data-independent element, so every
+original solver output with telemetry ON must be bitwise-equal to
+telemetry OFF -- for all four solvers and all three backends.  On top of
+that: the in-carry histogram against a numpy ``bincount`` reference
+(adversarial delay streams included: all-zero, horizon-pinned, overflow
+past the last bucket), exactness under decimated recording (the
+``record_every == n_events`` edge), ``RunRecord`` well-formedness on the
+64-cell fast grid, reset-scoped program-cache deltas, and the JSONL
+ledger round-trip.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import analysis, api
+from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
+                        SunDengFixed, make_logreg)
+from repro.core.engine import WorkerModel, heterogeneous_workers
+from repro.core.stepsize import HingeWeight, PolyWeight
+from repro.federated.events import heterogeneous_clients
+from repro.sweep import make_grid, standard_topologies
+from repro.sweep.cache import clear_program_cache, program_cache_stats
+from repro.telemetry import (COMPILE_EVENT_NAMES, RunRecord, TelemetryConfig,
+                             append_record, cache_delta, drain_timings,
+                             init_telemetry, observe, read_ledger,
+                             record_timing, set_ledger_path,
+                             spec_fingerprint, summarize_telemetry, timed,
+                             warn_clip_pressure)
+
+N_EVENTS = 100
+N_EVENTS_FED = 80
+
+SOLVER_KW = {"piag": {}, "bcd": {"m": 8}, "fedasync": {},
+             "fedbuff": {"eta": 0.5, "buffer_size": 2}}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def prox(problem):
+    return L1(lam=problem.lam1)
+
+
+@pytest.fixture(scope="module")
+def worker_grid(problem):
+    gp = 0.99 / problem.L
+    return make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=40)},
+        seeds=[0, 1],
+        topologies={"uniform": [WorkerModel() for _ in range(4)],
+                    "hetero": heterogeneous_workers(4, seed=1)},
+        n_events=N_EVENTS)
+
+
+@pytest.fixture(scope="module")
+def fed_grid():
+    return make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6),
+                  "poly": PolyWeight(gamma_prime=0.6, a=0.5)},
+        seeds=[0, 1],
+        topologies={"edge": heterogeneous_clients(4, seed=2)},
+        n_events=N_EVENTS_FED)
+
+
+def _grid_for(solver, worker_grid, fed_grid):
+    return fed_grid if solver in ("fedasync", "fedbuff") else worker_grid
+
+
+def _run(solver, backend, problem, grid, prox, telemetry, **kw):
+    return api.run_components(solver, backend, problem=problem, grid=grid,
+                              prox=prox, horizon=4096, telemetry=telemetry,
+                              telemetry_bins=64,
+                              **{**SOLVER_KW[solver], **kw})
+
+
+# -------------------------------------------------- bitwise neutrality ----
+
+@pytest.mark.parametrize("backend", api.BACKENDS)
+@pytest.mark.parametrize("solver", list(api.SOLVERS))
+def test_telemetry_is_bitwise_neutral(solver, backend, problem, worker_grid,
+                                      fed_grid, prox):
+    """Telemetry ON must not perturb a single bit of any solver output,
+    on any backend: the accumulator is carry-along state, never an input
+    to the numerics."""
+    grid = _grid_for(solver, worker_grid, fed_grid)
+    off = _run(solver, backend, problem, grid, prox, telemetry=False)
+    on = _run(solver, backend, problem, grid, prox, telemetry=True)
+    assert off.raw.telemetry is None
+    assert on.raw.telemetry is not None
+    for f in off.raw._fields:
+        if f == "telemetry":
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(off.raw, f)), np.asarray(getattr(on.raw, f)),
+            err_msg=f"{solver}/{backend}/{f}")
+    # the accumulator histogram is exact over EVERY event, and at stride 1
+    # it must equal the bincount of the recorded delay rows
+    tel = on.raw.telemetry
+    hist = np.asarray(tel.hist).sum(axis=0)
+    taus = np.asarray(on.raw.taus).reshape(-1)
+    np.testing.assert_array_equal(
+        hist, np.bincount(np.clip(taus, 0, 63), minlength=64))
+    assert int(hist.sum()) == on.n_cells * on.n_events
+
+
+def test_telemetry_neutral_under_decimation_and_full_stride_edge(
+        problem, worker_grid, prox):
+    """record_every == n_events (a single recorded row) is the harshest
+    decimation: outputs stay bitwise-neutral, the histogram still counts
+    every event, and the lone window absorbs every clip."""
+    off = _run("piag", "batched", problem, worker_grid, prox,
+               telemetry=False, record_every=N_EVENTS)
+    on = _run("piag", "batched", problem, worker_grid, prox,
+              telemetry=True, record_every=N_EVENTS)
+    for f in ("x", "objective", "gammas", "taus", "clipped"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(off.raw, f)), np.asarray(getattr(on.raw, f)),
+            err_msg=f)
+    tel = on.raw.telemetry
+    assert np.asarray(tel.window_clips).shape == (len(worker_grid), 1)
+    assert int(np.asarray(tel.hist).sum()) == on.n_cells * N_EVENTS
+    # stride-1 and full-stride accumulators agree: decimation drops rows,
+    # never aggregate events
+    on1 = _run("piag", "batched", problem, worker_grid, prox, telemetry=True)
+    np.testing.assert_array_equal(np.asarray(tel.hist),
+                                  np.asarray(on1.raw.telemetry.hist))
+
+
+# ----------------------------------------- accumulator vs numpy oracle ----
+
+def _scan_observe(taus, gammas, clips, bins):
+    cfg = TelemetryConfig(delay_bins=bins)
+
+    def step(state, ev):
+        t, g, c = ev
+        return observe(state, t, g, c), None
+
+    state, _ = jax.lax.scan(
+        step, init_telemetry(cfg),
+        (jnp.asarray(taus, jnp.int32), jnp.asarray(gammas, jnp.float32),
+         jnp.asarray(clips, jnp.int32)))
+    return state
+
+
+@pytest.mark.parametrize("name,taus", [
+    ("all_zero", np.zeros(50, np.int64)),
+    ("horizon_pinned", np.full(50, 7, np.int64)),     # tau == bins - 1
+    ("overflow", np.arange(50) % 23),                 # most exceed last bin
+    ("adversarial_mix", np.r_[np.zeros(10, np.int64), np.full(10, 1000),
+                              np.arange(30) % 8]),
+])
+def test_histogram_matches_numpy_bincount_reference(name, taus):
+    """In-carry bincount == numpy reference, overflow coarsened into the
+    last bucket, never dropped."""
+    bins = 8
+    rng = np.random.default_rng(3)
+    gammas = rng.uniform(0.01, 1.0, size=taus.shape).astype(np.float32)
+    clips = (taus >= 100).astype(np.int64)
+    state = _scan_observe(taus, gammas, clips, bins)
+    expected = np.bincount(np.clip(taus, 0, bins - 1), minlength=bins)
+    np.testing.assert_array_equal(np.asarray(state.hist), expected, name)
+    assert int(state.count) == taus.size
+    # a finalized single-cell view: window column == total clips
+    summ = summarize_telemetry(_finalized(state, clips))
+    assert summ["count"] == taus.size
+    assert summ["tau"]["min"] == int(taus.min())
+    assert summ["tau"]["max"] == int(taus.max())
+    assert summ["tau"]["mean"] == pytest.approx(float(taus.mean()), rel=1e-5)
+    assert summ["tau"]["std"] == pytest.approx(float(taus.std()), rel=1e-3,
+                                               abs=1e-3)
+    assert summ["gamma"]["min"] == pytest.approx(float(gammas.min()))
+    assert summ["gamma"]["max"] == pytest.approx(float(gammas.max()))
+    assert summ["window_clips"]["total"] == int(clips.sum())
+
+
+def _finalized(state, clips):
+    from repro.telemetry import finalize
+    return finalize(state._replace(win_clip=jnp.zeros((), jnp.int32)),
+                    jnp.asarray([int(np.sum(clips))], jnp.int32))
+
+
+def test_summarize_merges_cell_moments_exactly():
+    """Batched (multi-cell) summaries use the parallel Welford merge --
+    the merged mean/std must equal the pooled-population numpy values,
+    not a mean of per-cell means."""
+    rng = np.random.default_rng(0)
+    cells = [rng.integers(0, 20, size=n) for n in (10, 40, 200)]
+    states = [_scan_observe(t, np.ones_like(t, np.float32),
+                            np.zeros_like(t), 32) for t in cells]
+    batched = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[
+        _finalized(s, np.zeros(1)) for s in states])
+    pooled = np.concatenate(cells)
+    summ = summarize_telemetry(batched)
+    assert summ["count"] == pooled.size
+    assert summ["tau"]["mean"] == pytest.approx(float(pooled.mean()),
+                                                rel=1e-5)
+    assert summ["tau"]["std"] == pytest.approx(float(pooled.std()), rel=1e-4)
+    np.testing.assert_array_equal(
+        summ["hist"], np.bincount(np.clip(pooled, 0, 31), minlength=32))
+
+
+def test_telemetry_config_validates_bins():
+    with pytest.raises(ValueError):
+        TelemetryConfig(delay_bins=1)
+    with pytest.raises(ValueError):
+        api.ExecutionSpec(telemetry=True, telemetry_bins=1)
+
+
+# --------------------------------------------- run ledger + RunRecord ----
+
+@pytest.fixture(scope="module")
+def grid64_run(problem, prox):
+    """The benchmarks' 64-cell fast grid through the declarative runner
+    with telemetry on, ledgered to a module-scoped file."""
+    gp = 0.99 / problem.L
+    grid = make_grid(
+        policies={"adaptive1": Adaptive1(gamma_prime=gp),
+                  "adaptive2": Adaptive2(gamma_prime=gp),
+                  "fixed": FixedStepSize(gamma_prime=gp, tau_bound=40),
+                  "sun_deng": SunDengFixed(gamma_prime=gp, tau_bound=40)},
+        seeds=range(4),
+        topologies=standard_topologies(4),
+        n_events=120)
+    assert len(grid) == 64
+    res = api.run_components("piag", "batched", problem=problem, grid=grid,
+                             prox=prox, telemetry=True)
+    return grid, res
+
+
+def test_run_record_well_formed_on_64_cell_grid(grid64_run):
+    grid, res = grid64_run
+    rec = res.telemetry
+    assert isinstance(rec, RunRecord)
+    assert rec.solver == "piag" and rec.backend == "batched"
+    assert rec.n_cells == 64 and rec.n_events == 120
+    assert rec.hist_source == "accumulator"
+    assert sum(rec.delay_hist) == 64 * 120
+    assert rec.elapsed_ms > 0
+    assert rec.warm_ms >= 0 and rec.compile_ms >= 0
+    assert rec.warm_ms <= rec.elapsed_ms + 1e-6
+    assert rec.carry_bytes > 0
+    assert rec.policies == ["adaptive1", "adaptive2", "fixed", "sun_deng"]
+    assert set(rec.cache) == {"hits", "misses", "evictions", "size", "reset"}
+    assert rec.tau_stats["max"] >= rec.tau_stats["min"] >= 0
+    assert rec.clipped["cells"] == 64
+    # the record is one JSON line, round-trippable
+    d = json.loads(rec.to_json())
+    rt = RunRecord.from_dict(d)
+    assert rt.fingerprint == rec.fingerprint
+    assert rt.delay_hist == rec.delay_hist
+
+
+def test_results_surface_and_analysis_bridges(grid64_run):
+    grid, res = grid64_run
+    assert res.cache_stats == res.telemetry.cache
+    assert "telemetry" not in res.extras  # not a solver-specific column
+    dp = analysis.delay_profile(res)
+    assert dp["source"] == "accumulator"
+    assert dp["count"] == 64 * 120
+    assert dp["tau"]["max"] == int(np.asarray(res.taus).max())
+    cp = analysis.clip_pressure(res)
+    assert cp["horizon"] == res.horizon
+    assert 0.0 <= cp["clip_fraction"] <= 1.0
+
+
+def test_recorded_fallback_when_telemetry_off(problem, worker_grid, prox):
+    """Without the accumulators the ledger still gets a histogram --
+    binned from the recorded rows and tagged as the 1/s sample it is."""
+    res = _run("piag", "batched", problem, worker_grid, prox,
+               telemetry=False)
+    rec = res.telemetry
+    assert rec.hist_source == "recorded"
+    taus = np.asarray(res.raw.taus).reshape(-1)
+    np.testing.assert_array_equal(
+        rec.delay_hist, np.bincount(np.clip(taus, 0, 63), minlength=64))
+
+
+def test_ledger_appends_one_json_line_per_run(problem, worker_grid, prox,
+                                              tmp_path):
+    path = tmp_path / "ledger.jsonl"
+    set_ledger_path(path)
+    try:
+        _run("piag", "batched", problem, worker_grid, prox, telemetry=True)
+        _run("bcd", "batched", problem, worker_grid, prox, telemetry=True)
+    finally:
+        set_ledger_path(None)
+    recs = list(read_ledger(path))
+    assert [r["solver"] for r in recs] == ["piag", "bcd"]
+    for r in recs:
+        rec = RunRecord.from_dict(r)
+        assert sum(rec.delay_hist) == rec.n_cells * rec.n_events
+    # no path configured -> append_record is a no-op
+    assert append_record(RunRecord.from_dict(recs[0])) is False
+    timeline = analysis.run_timeline(path)
+    assert len(timeline) == 2
+    assert timeline[0]["ts"] <= timeline[1]["ts"]
+
+
+def test_spec_fingerprint_stable_and_value_keyed(problem, worker_grid, prox):
+    s1 = api.component_spec("piag", "batched", problem=problem,
+                            grid=worker_grid, prox=prox)
+    s2 = api.component_spec("piag", "batched", problem=problem,
+                            grid=worker_grid, prox=prox)
+    assert spec_fingerprint(s1, worker_grid) == \
+        spec_fingerprint(s2, worker_grid)
+    assert len(spec_fingerprint(s1, worker_grid)) == 12
+
+
+# --------------------------------------- cache stats + timing capture ----
+
+def test_cache_delta_is_reset_scoped(problem, worker_grid, prox):
+    """A repeated identical run hits the program cache (warm path); a
+    clear_program_cache between snapshots flags the delta as reset and
+    reports the post-clear counters verbatim."""
+    clear_program_cache()
+    first = _run("piag", "batched", problem, worker_grid, prox,
+                 telemetry=True)
+    again = _run("piag", "batched", problem, worker_grid, prox,
+                 telemetry=True)
+    assert first.cache_stats["misses"] >= 1
+    assert again.cache_stats["hits"] >= 1
+    assert again.cache_stats["misses"] == 0
+    assert not again.cache_stats["reset"]
+    # compile attribution follows the cache: warm run re-records nothing
+    assert again.telemetry.compile_ms == 0.0
+
+    before = program_cache_stats()
+    clear_program_cache()
+    warm = _run("piag", "batched", problem, worker_grid, prox,
+                telemetry=True)
+    delta = cache_delta(before, program_cache_stats())
+    assert delta["reset"] is True
+    assert warm.cache_stats["misses"] >= 1  # re-built after the clear
+
+
+def test_cache_key_separates_telemetry_variants(problem, worker_grid, prox):
+    """telemetry on/off and different bin counts are distinct programs --
+    the config is part of the cache key, so a telemetry-on call can never
+    be served a telemetry-off executable."""
+    clear_program_cache()
+    _run("piag", "batched", problem, worker_grid, prox, telemetry=False)
+    on = _run("piag", "batched", problem, worker_grid, prox, telemetry=True)
+    assert on.cache_stats["misses"] >= 1
+    rebinned = api.run_components(
+        "piag", "batched", problem=problem, grid=worker_grid, prox=prox,
+        horizon=4096, telemetry=True, telemetry_bins=16)
+    assert rebinned.cache_stats["misses"] >= 1
+    assert len(rebinned.raw.telemetry.hist[0]) == 16
+
+
+def test_timing_sink_records_and_drains():
+    drain_timings()
+    record_timing("unit_event", 1.5, key="k")
+    with timed("unit_block", tag=7):
+        pass
+    events = drain_timings()
+    assert [e["name"] for e in events] == ["unit_event", "unit_block"]
+    assert events[0]["ms"] == 1.5 and events[0]["key"] == "k"
+    assert events[1]["ms"] >= 0 and events[1]["tag"] == 7
+    assert drain_timings() == []
+    assert set(COMPILE_EVENT_NAMES) == {"program_build",
+                                        "program_first_call"}
+
+
+def test_run_drains_dispatch_timings_into_record(problem, worker_grid,
+                                                 prox):
+    clear_program_cache()
+    res = _run("piag", "batched", problem, worker_grid, prox,
+               telemetry=True)
+    names = {t["name"] for t in res.telemetry.timings}
+    assert "bucket_dispatch" in names
+    assert "program_build" in names
+    assert res.telemetry.compile_ms == pytest.approx(
+        sum(t["ms"] for t in res.telemetry.timings
+            if t["name"] in COMPILE_EVENT_NAMES))
+    # the run drained its own events: nothing left in the sink
+    assert all(t["name"] not in ("bucket_dispatch",)
+               for t in drain_timings())
+
+
+# ------------------------------------------------- clip-pressure path ----
+
+def test_warn_clip_pressure_emits_runtime_warning():
+    clean = {"cells": 4, "cells_clipped": 0, "events_clipped": 0,
+             "max_events_clipped": 0}
+    assert warn_clip_pressure(clean) is None
+    hot = {"cells": 4, "cells_clipped": 2, "events_clipped": 9,
+           "max_events_clipped": 6}
+    with pytest.warns(RuntimeWarning, match="2/4 cells clipped"):
+        msg = warn_clip_pressure(hot, horizon=8)
+    assert "H=8" in msg
+
+
+def test_clipped_summary_block_reaches_results(problem, prox):
+    """A deliberately undersized horizon shows up in the RunRecord's
+    clipped block and in analysis.clip_pressure."""
+    gp = 0.99 / problem.L
+    grid = make_grid(policies={"a1": Adaptive1(gamma_prime=gp)}, seeds=[0],
+                     topologies={"hetero": heterogeneous_workers(4, seed=1)},
+                     n_events=N_EVENTS)
+    res = api.run_components("piag", "batched", problem=problem, grid=grid,
+                             prox=prox, horizon=2, telemetry=True)
+    rec = res.telemetry
+    assert rec.clipped["events_clipped"] > 0
+    cp = analysis.clip_pressure(res)
+    assert cp["clip_fraction"] > 0
+    with pytest.warns(RuntimeWarning):
+        warn_clip_pressure(rec.clipped, horizon=res.horizon)
+    # window_clips agrees with the carry counter, window by window in sum
+    tel = res.raw.telemetry
+    np.testing.assert_array_equal(
+        np.asarray(tel.window_clips).sum(axis=-1),
+        np.asarray(res.raw.clipped))
