@@ -1,0 +1,234 @@
+"""Fused Pallas engine benchmark: ``engine='fused'`` vs ``engine='scan'``
+on the 64-cell policy x seed x topology PIAG grid.
+
+Two spec-driven configurations over the SAME cells (same traces, same
+policies, same tau-bar tuning protocol), differing only in
+``ExecutionSpec.engine``:
+
+* ``scan``  -- the pure-XLA per-event inner loop (status quo);
+* ``fused`` -- the policy update (window-sum / select / circular push) and
+  the prox step launched as ONE Pallas kernel per event
+  (``repro.kernels.fused_step``), compiled on TPU/GPU and interpreted on
+  CPU (``repro.kernels.dispatch``).
+
+Hard gates (``main`` exits nonzero):
+
+* every result leaf of the fused run is BITWISE-equal to the scan run;
+* the fused kernel's per-event boundary traffic
+  (``fused_step.boundary_bytes`` -- the compiled-backend HBM contract:
+  operands + results, refs stream through on-chip memory) is smaller than
+  the scan engine's measured per-event HLO bytes
+  (``launch.hlo_cost.analyze_hlo`` on the jitted single-step program);
+* the telemetry ledger records a clean compile-ms/warm-ms split for the
+  fused runs: the cold record carries compile time, the warm record
+  (cached executable) carries none.
+
+Reported but NOT gated: warm wall-clock scan vs fused, and the
+whole-sweep HLO byte counts of both engines.  On CPU the kernel runs in
+interpret mode, where ref reads materialize whole arrays as ordinary XLA
+ops -- the fused whole-program bytes are INFLATED there and the kernel
+brings no wall-clock win; the boundary contract above is what a compiled
+backend moves.  Emits ``BENCH_pallas_engine.json``.
+
+    PYTHONPATH=src python -m benchmarks.pallas_engine [--events N]
+        [--seeds N] [--workers N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.prox import make_prox
+from repro.core.stepsize import make_policy
+from repro.kernels.fused_step import boundary_bytes
+from repro.launch.hlo_cost import analyze_hlo
+from repro.sweep import clear_program_cache, program_cache_stats
+
+from .common import emit
+
+POLICY_NAMES = ("adaptive1", "adaptive2", "fixed", "sun_deng")
+LEAVES = ("objective", "gammas", "taus", "x", "clipped")
+
+
+def build_spec(n_events: int, n_seeds: int, n_workers: int,
+               engine: str) -> api.ExperimentSpec:
+    """The engine_opt 64-cell PIAG grid, parameterized on the engine."""
+    return api.ExperimentSpec(
+        problem=api.ProblemSpec(kind="logreg",
+                                params=dict(n_samples=800, dim=100, seed=0)),
+        solver=api.SolverSpec(name="piag", horizon="auto"),
+        topology=api.TopologySpec(kind="standard", n_workers=(n_workers,)),
+        policies=api.PolicyGridSpec(names=POLICY_NAMES,
+                                    seeds=tuple(range(n_seeds))),
+        execution=api.ExecutionSpec(backend="batched", engine=engine),
+        n_events=n_events)
+
+
+def timed_runs(spec: api.ExperimentSpec):
+    """Cold (compile + execute) then warm (cached executable) ``api.run``;
+    returns both Results so the ledger records of each are inspectable."""
+    t0 = time.perf_counter()
+    cold_res = api.run(spec)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm_res = api.run(spec)
+    warm = time.perf_counter() - t0
+    return cold, warm, cold_res, warm_res
+
+
+def step_bytes(horizon: int, dim: int) -> dict:
+    """Per-event memory traffic, both engines.
+
+    scan: measured HLO bytes of the jitted single-step program (policy
+    window-sum/select/push + prox) -- every intermediate the unfused op
+    sequence materializes.  fused: the kernel-boundary contract."""
+    policy = make_policy("adaptive1", 0.3)
+    prox = make_prox("l1", lam=0.05)
+    ss = policy.init(horizon)
+    x = jnp.zeros((dim,), jnp.float32)
+    g = jnp.ones((dim,), jnp.float32)
+    tau = jnp.asarray(3, jnp.int32)
+
+    @jax.jit
+    def scan_step(ss, tau, x, g):
+        gamma, ss = policy.step(ss, tau)
+        return gamma, ss, prox.prox(x - gamma * g, gamma)
+
+    cost = analyze_hlo(scan_step.lower(ss, tau, x, g).compile().as_text())
+    return {"scan_hlo_bytes": float(cost.bytes),
+            "fused_boundary_bytes": float(boundary_bytes(horizon, dim)),
+            "horizon": horizon, "dim": dim}
+
+
+def sweep_costs(res_scan: api.Results, res_fused: api.Results,
+                n_events: int) -> dict:
+    """Whole-sweep HLO flops/bytes of both engines' batched programs
+    (bytes/FLOP published for the roofline report; interpret mode inflates
+    the fused count on CPU -- see module docstring)."""
+    out = {}
+    from repro.api.run import _piag_pieces, resolve
+    from repro.sweep.runners import make_sweep_piag
+    for name, res in (("scan", res_scan), ("fused", res_fused)):
+        spec = res.spec
+        # rebuild the cached batched program and lower it for analysis
+        r = resolve(spec)
+        loss, x0, wd, objective = _piag_pieces(r)
+        fn = make_sweep_piag(loss, x0, wd, r.prox, objective=objective,
+                             horizon=r.horizon,
+                             engine=spec.execution.engine)
+        b = r.grid.buckets()[0]
+        T = jnp.asarray(b.grid.service_times(b.width))
+        pp = b.grid.policy_params()
+        cost = analyze_hlo(fn.lower(T, pp).compile().as_text())
+        out[name] = {"flops": float(cost.flops), "bytes": float(cost.bytes),
+                     "bytes_per_flop": float(cost.bytes / max(cost.flops, 1)),
+                     "bytes_per_step": float(cost.bytes / n_events)}
+    return out
+
+
+def _ledger_split(res: api.Results) -> dict:
+    rec = res.telemetry
+    return {"compile_ms": float(rec.compile_ms),
+            "warm_ms": float(rec.warm_ms),
+            "elapsed_ms": float(rec.elapsed_ms)}
+
+
+def run(n_events: int = 400, n_seeds: int = 4, n_workers: int = 8,
+        out: str = "BENCH_pallas_engine.json") -> dict:
+    clear_program_cache()
+    scan_spec = build_spec(n_events, n_seeds, n_workers, "scan")
+    fused_spec = build_spec(n_events, n_seeds, n_workers, "fused")
+
+    cold_s, warm_s, cold_res_s, res_s = timed_runs(scan_spec)
+    B = res_s.n_cells
+    emit("pallas_engine/scan", cold_s * 1e6,
+         f"warm_us={warm_s * 1e6:.1f};cells={B};horizon={res_s.horizon}")
+
+    cold_f, warm_f, cold_res_f, res_f = timed_runs(fused_spec)
+    emit("pallas_engine/fused", cold_f * 1e6,
+         f"warm_us={warm_f * 1e6:.1f};interpret_cpu="
+         f"{jax.default_backend() not in ('tpu', 'gpu')}")
+    warm_speedup = warm_s / warm_f
+    emit("pallas_engine/speedup", 0.0, f"warm={warm_speedup:.2f}x")
+
+    # ---- hard gate 1: bitwise equivalence on every leaf ------------------
+    bitwise = {
+        f: bool(np.array_equal(np.asarray(getattr(res_s.raw, f)),
+                               np.asarray(getattr(res_f.raw, f))))
+        for f in LEAVES}
+    bitwise_ok = all(bitwise.values())
+    emit("pallas_engine/equivalence", 0.0, f"bitwise_ok={bitwise_ok}")
+
+    # ---- hard gate 2: kernel-boundary bytes/event < scan step bytes ------
+    per_event = step_bytes(res_f.horizon, 100)
+    bytes_ok = (per_event["fused_boundary_bytes"]
+                < per_event["scan_hlo_bytes"])
+    reduction = per_event["scan_hlo_bytes"] / per_event["fused_boundary_bytes"]
+    emit("pallas_engine/bytes_per_event", per_event["fused_boundary_bytes"],
+         f"scan={per_event['scan_hlo_bytes']:.0f};"
+         f"reduction={reduction:.2f}x;ok={bytes_ok}")
+
+    # ---- hard gate 3: ledger compile/warm split for the fused runs -------
+    split_cold = _ledger_split(cold_res_f)
+    split_warm = _ledger_split(res_f)
+    ledger_ok = (split_cold["compile_ms"] > 0.0
+                 and split_warm["compile_ms"] < 0.1 * split_cold["compile_ms"]
+                 and split_warm["warm_ms"] > 0.0)
+    emit("pallas_engine/ledger", split_cold["compile_ms"] * 1e3,
+         f"warm_compile_ms={split_warm['compile_ms']:.1f};ok={ledger_ok}")
+
+    sweeps = sweep_costs(res_s, res_f, n_events)
+
+    payload = {
+        "bench": "pallas_engine",
+        "cells": B,
+        "n_events": n_events,
+        "n_workers": n_workers,
+        "horizon": res_f.horizon,
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() not in ("tpu", "gpu"),
+        "scan": {"seconds_cold": cold_s, "seconds_warm": warm_s,
+                 "ledger": _ledger_split(res_s)},
+        "fused": {"seconds_cold": cold_f, "seconds_warm": warm_f,
+                  "ledger_cold": split_cold, "ledger_warm": split_warm},
+        "warm_speedup": warm_speedup,
+        "bytes_per_event": {**per_event, "reduction": reduction},
+        "sweep_hlo": sweeps,
+        "program_cache": program_cache_stats(),
+        "equivalence": {"bitwise": bitwise, "ok": bitwise_ok},
+        "gates": {"bitwise": bitwise_ok, "bytes_per_event": bytes_ok,
+                  "ledger_split": ledger_ok,
+                  "ok": bitwise_ok and bytes_ok and ledger_ok},
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}: {B} cells, bitwise ok={bitwise_ok}, "
+          f"bytes/event {per_event['fused_boundary_bytes']:.0f} vs scan "
+          f"{per_event['scan_hlo_bytes']:.0f} ({reduction:.2f}x less), "
+          f"ledger split ok={ledger_ok}, warm speedup {warm_speedup:.2f}x")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--events", type=int, default=400)
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_pallas_engine.json")
+    a = ap.parse_args()
+    payload = run(n_events=a.events, n_seeds=a.seeds, n_workers=a.workers,
+                  out=a.out)
+    if not payload["gates"]["ok"]:
+        raise SystemExit(f"pallas_engine gates failed: {payload['gates']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Benchmark harness -- one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep engine_opt mega roofline kernels]
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep engine_opt pallas mega roofline kernels]
 
 Prints ``name,us_per_call,derived`` CSV lines.  Benchmark runs that go
 through ``repro.api.run`` also append their telemetry ``RunRecord`` to a
@@ -61,6 +61,9 @@ def main() -> None:
     if want("engine_opt"):
         from . import engine_opt
         engine_opt.run()
+    if want("pallas"):
+        from . import pallas_engine
+        pallas_engine.run()
     if want("ext"):
         from . import ext_lipschitz
         ext_lipschitz.run()

@@ -318,17 +318,19 @@ def _run_piag(r: Resolved):
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
+    eng = spec.execution.engine
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_piag(loss, x0, wd, r.grid, r.prox,
                           objective=objective, horizon=h, use_tau_max=utm,
-                          bucket_widths=bw, record_every=s, telemetry=tel)
+                          bucket_widths=bw, record_every=s, telemetry=tel,
+                          engine=eng)
     if backend == "sharded":
         return sharded_sweep_piag(loss, x0, wd, r.grid, r.prox,
                                   objective=objective, horizon=h,
                                   use_tau_max=utm, mesh=_mesh_for(spec),
                                   bucket_widths=bw, record_every=s,
-                                  telemetry=tel)
+                                  telemetry=tel, engine=eng)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
@@ -336,7 +338,7 @@ def _run_piag(r: Resolved):
         rows.append(run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
                              c.policy, r.prox, objective=objective,
                              horizon=h, use_tau_max=utm, record_every=s,
-                             telemetry=tel))
+                             telemetry=tel, engine=eng))
     return _stack_results(rows)
 
 
@@ -347,16 +349,17 @@ def _run_bcd(r: Resolved):
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
+    eng = spec.execution.engine
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_bcd(grad_f, objective, x0, m, r.grid, r.prox,
                          horizon=h, bucket_widths=bw, record_every=s,
-                         telemetry=tel)
+                         telemetry=tel, engine=eng)
     if backend == "sharded":
         return sharded_sweep_bcd(grad_f, objective, x0, m, r.grid,
                                  r.prox, horizon=h, mesh=_mesh_for(spec),
                                  bucket_widths=bw, record_every=s,
-                                 telemetry=tel)
+                                 telemetry=tel, engine=eng)
     rows = []
     for c in r.grid.cells:
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
@@ -364,7 +367,7 @@ def _run_bcd(r: Resolved):
         blocks = sample_blocks(m, r.grid.n_events, seed=c.seed)
         rows.append(run_async_bcd(grad_f, objective, x0, m, tr,
                                   blocks, c.policy, r.prox, horizon=h,
-                                  record_every=s, telemetry=tel))
+                                  record_every=s, telemetry=tel, engine=eng))
     return _stack_results(rows)
 
 
@@ -377,6 +380,7 @@ def _run_fed(r: Resolved):
     bw = spec.execution.bucket_widths
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
+    eng = spec.execution.engine
     backend = spec.execution.backend
     if backend == "batched":
         if sv.name == "fedasync":
@@ -384,12 +388,12 @@ def _run_fed(r: Resolved):
                                   objective=objective, horizon=h,
                                   reference=spec.execution.reference,
                                   n_steps=n_steps, bucket_widths=bw,
-                                  record_every=s, telemetry=tel)
+                                  record_every=s, telemetry=tel, engine=eng)
         return sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                              buffer_size=bs, objective=objective,
                              horizon=h, reference=spec.execution.reference,
                              n_steps=n_steps, bucket_widths=bw,
-                             record_every=s, telemetry=tel)
+                             record_every=s, telemetry=tel, engine=eng)
     if backend == "sharded":
         mesh = _mesh_for(spec)
         if sv.name == "fedasync":
@@ -398,12 +402,12 @@ def _run_fed(r: Resolved):
                                           buffer_size=1, horizon=h,
                                           n_steps=n_steps, mesh=mesh,
                                           bucket_widths=bw, record_every=s,
-                                          telemetry=tel)
+                                          telemetry=tel, engine=eng)
         return sharded_sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                                      buffer_size=bs, objective=objective,
                                      horizon=h, n_steps=n_steps, mesh=mesh,
                                      bucket_widths=bw, record_every=s,
-                                     telemetry=tel)
+                                     telemetry=tel, engine=eng)
     rows = []
     for c in r.grid.cells:
         tr = generate_federated_trace(c.n_workers, r.grid.n_events,
@@ -414,12 +418,13 @@ def _run_fed(r: Resolved):
         if sv.name == "fedasync":
             rows.append(run_fedasync(update, x0, cd, tr, c.policy,
                                      objective=objective, horizon=h,
-                                     record_every=s, telemetry=tel))
+                                     record_every=s, telemetry=tel,
+                                     engine=eng))
         else:
             rows.append(run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
                                     buffer_size=bs, objective=objective,
                                     horizon=h, record_every=s,
-                                    telemetry=tel))
+                                    telemetry=tel, engine=eng))
     return _stack_results(rows)
 
 
@@ -528,7 +533,7 @@ def run(spec: ExperimentSpec) -> Results:
 def component_spec(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
-                   telemetry_bins: int = 64,
+                   telemetry_bins: int = 64, engine: str = "scan",
                    **solver_kwargs) -> ExperimentSpec:
     """A spec from prebuilt components (problem + grid + prox), bypassing
     the declarative build.  This is the form the legacy shims use; horizon
@@ -543,7 +548,8 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
                                 reference=reference,
                                 record_every=record_every,
                                 telemetry=telemetry,
-                                telemetry_bins=telemetry_bins),
+                                telemetry_bins=telemetry_bins,
+                                engine=engine),
         delay=DelaySpec(measure=False),
         n_events=grid.n_events,
         grid=grid,
@@ -554,11 +560,11 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
 def run_components(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
-                   telemetry_bins: int = 64,
+                   telemetry_bins: int = 64, engine: str = "scan",
                    **solver_kwargs) -> Results:
     """``run`` over prebuilt components (see ``component_spec``)."""
     return run(component_spec(solver, backend, problem=problem, grid=grid,
                               prox=prox, mesh=mesh, reference=reference,
                               record_every=record_every, telemetry=telemetry,
-                              telemetry_bins=telemetry_bins,
+                              telemetry_bins=telemetry_bins, engine=engine,
                               **solver_kwargs))

@@ -277,6 +277,14 @@ class ExecutionSpec:
                  to the run's ``RunRecord`` even under decimation.
     ``telemetry_bins``: delay-histogram buckets (last bin = overflow,
                  counting every ``tau >= bins - 1``).
+    ``engine``:  per-event inner-loop implementation inside the solver
+                 scans.  ``"scan"`` (default) is the pure-XLA path;
+                 ``"fused"`` launches the policy update (window-sum /
+                 select / push) and the iterate step as ONE Pallas kernel
+                 per event (``repro.kernels.fused_step``) -- bitwise-equal
+                 on every backend, compiled on TPU/GPU and interpreted on
+                 CPU (``repro.kernels.dispatch``).  Not supported for
+                 ``AdaptiveLipschitz`` (backtracking is host-side).
     """
 
     backend: str = "batched"
@@ -287,11 +295,15 @@ class ExecutionSpec:
     record_every: int = 1
     telemetry: bool = False
     telemetry_bins: int = 64
+    engine: str = "scan"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; one of {BACKENDS}")
+        if self.engine not in ("scan", "fused"):
+            raise ValueError(
+                f"engine must be 'scan' or 'fused', got {self.engine!r}")
         if self.record_every < 1:
             raise ValueError(
                 f"record_every must be >= 1, got {self.record_every}")

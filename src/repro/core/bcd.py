@@ -63,6 +63,7 @@ def bcd_scan(
     horizon: int = 4096,
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
+    engine: str = "scan",
 ) -> BCDResult:
     """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
     shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
@@ -75,7 +76,18 @@ def bcd_scan(
     only the returning worker's snapshot row -- so as long as the trace is
     masked (``engine.trace_scan(T, active=...)``), padded workers never
     appear in ``events`` and their ``x_read`` rows are dead weight; passing
-    ``n_workers`` = the bucket width is sufficient and exact."""
+    ``n_workers`` = the bucket width is sufficient and exact.
+
+    ``engine='fused'`` launches lines 6-7 (policy window-sum/select/push +
+    the block prox step) as one Pallas kernel per event over the active
+    block row -- bitwise-equal to ``engine='scan'``; the block extract /
+    scatter stays outside the kernel."""
+    if engine not in ("scan", "fused"):
+        raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    if engine == "fused":
+        from ..kernels.fused_step import (as_policy_params,
+                                          fused_policy_prox_step)
+        fparams = as_policy_params(policy)
     xb0, d = _blockify(jnp.asarray(x0, jnp.float32), m)
     db = xb0.shape[1]
 
@@ -94,8 +106,12 @@ def bcd_scan(
             gpad = jnp.pad(g, (0, m * db - d)).reshape(m, db)
             gj = gpad[j]                                     # grad_j f(xhat)
             ss_old = ss
-            gamma, ss = policy.step(ss, tau)                 # line 6 (delay-adaptive)
-            xj_new = prox.prox(xb[j] - gamma * gj, gamma)    # line 7, Eq. (5)
+            if engine == "fused":                            # lines 6-7 fused
+                gamma, ss, xj_new = fused_policy_prox_step(
+                    fparams, prox, ss, tau, xb[j], gj)
+            else:
+                gamma, ss = policy.step(ss, tau)             # line 6 (delay-adaptive)
+                xj_new = prox.prox(xb[j] - gamma * gj, gamma)  # line 7, Eq. (5)
             xb_new = xb.at[j].set(xj_new)                    # line 8 (atomic write)
             x_read = x_read.at[w].set(xb_new)                # line 10 (re-read)
             if telemetry is None:
@@ -135,6 +151,7 @@ def run_async_bcd(
     horizon: int | str = 4096,
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
+    engine: str = "scan",
 ) -> BCDResult:
     n = int(trace.worker.max()) + 1 if trace.n_events else 1
     if horizon == "auto":  # measured-delay sizing off the trace itself
@@ -149,7 +166,7 @@ def run_async_bcd(
     def run(events):
         return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
                         horizon=horizon, record_every=record_every,
-                        telemetry=telemetry)
+                        telemetry=telemetry, engine=engine)
 
     return run(events)
 

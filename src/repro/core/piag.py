@@ -64,6 +64,7 @@ def piag_scan(
     active: jnp.ndarray | None = None,  # (n,) bool; ragged-bucket worker mask
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
+    engine: str = "scan",
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -95,7 +96,21 @@ def piag_scan(
     observes EVERY event -- decimated steps included -- so its aggregates
     are exact under any ``record_every``, and it is bitwise-neutral: no
     solver leaf depends on it.
+
+    ``engine='fused'`` launches line 16 + line 17 (window-sum gather, policy
+    select, cumulative-sum push, prox step) as ONE Pallas kernel per event
+    (``repro.kernels.fused_step``) instead of chained XLA ops -- bitwise-
+    equal to ``engine='scan'`` and telemetry-neutral (the accumulator rides
+    the same carry either way).  Requires a single-1-D-leaf iterate and a
+    ``PolicyParams``-expressible policy; both are checked loudly.
     """
+    if engine not in ("scan", "fused"):
+        raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    if engine == "fused":
+        from ..kernels.fused_step import (as_policy_params, fused_leaf,
+                                          fused_policy_prox_step)
+        fparams = as_policy_params(policy)
+        _, x_treedef = fused_leaf(x0, "PIAG iterate")
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
     grad_i = jax.grad(worker_loss)
 
@@ -138,9 +153,17 @@ def piag_scan(
             # line 14: aggregate; line 16: delay-adaptive gamma; line 17: prox step
             g = jax.tree_util.tree_map(aggregate, gtab)
             ss_old = ss
-            gamma, ss = policy.step(ss, tau)
-            x_new = prox.prox(
-                jax.tree_util.tree_map(lambda xv, gv: xv - gamma * gv, x, g), gamma)
+            if engine == "fused":
+                gamma, ss, x_leaf = fused_policy_prox_step(
+                    fparams, prox, ss, tau,
+                    jax.tree_util.tree_leaves(x)[0],
+                    jax.tree_util.tree_leaves(g)[0])
+                x_new = jax.tree_util.tree_unflatten(x_treedef, [x_leaf])
+            else:
+                gamma, ss = policy.step(ss, tau)
+                x_new = prox.prox(
+                    jax.tree_util.tree_map(
+                        lambda xv, gv: xv - gamma * gv, x, g), gamma)
             # line 20: hand x_{k+1} to the returning worker
             x_read = jax.tree_util.tree_map(
                 lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
@@ -187,12 +210,15 @@ def run_piag(
     use_tau_max: bool = True,
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
+    engine: str = "scan",
 ) -> PIAGResult:
     """Run PIAG over a write-event trace; everything under one jit.
 
     ``horizon='auto'`` sizes the step-size window buffer from the trace's
     own measured delays (``auto_horizon``) instead of the 4096 worst-case
-    default -- bitwise-identical output, a fraction of the scan carry."""
+    default -- bitwise-identical output, a fraction of the scan carry.
+    ``engine='fused'`` routes the per-event policy + prox update through
+    the fused Pallas kernel (see ``piag_scan``)."""
     taus = trace.tau_max if use_tau_max else trace.tau
     if horizon == "auto":
         horizon = auto_horizon(int(np.max(taus, initial=0)))
@@ -205,7 +231,8 @@ def run_piag(
     def run(events):
         return piag_scan(worker_loss, x0, worker_data, events, policy, prox,
                          objective=objective, horizon=horizon,
-                         record_every=record_every, telemetry=telemetry)
+                         record_every=record_every, telemetry=telemetry,
+                         engine=engine)
 
     return run(events)
 

@@ -31,7 +31,8 @@ delay; delays beyond the horizon are clipped (and flagged).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+import warnings
+from typing import ClassVar, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -159,6 +160,12 @@ class StepsizePolicy:
 
     gamma_prime: float
 
+    # True on policies whose gamma CONSUMES the window sum (adaptive1/2):
+    # for those, a clipped delay in ``run`` is worth reporting; the
+    # fixed/naive/weight families call ``window_sum`` only for uniform
+    # buffer diagnostics and stay quiet.
+    uses_window: ClassVar[bool] = False
+
     def init(self, horizon: int = DEFAULT_HORIZON) -> StepsizeState:
         return init_state(horizon)
 
@@ -173,15 +180,28 @@ class StepsizePolicy:
 
     # Convenience for numpy-land experiments / benchmarks.
     def run(self, taus) -> jnp.ndarray:
-        """Emit the full step-size sequence for a delay trace (jit-scanned)."""
+        """Emit the full step-size sequence for a delay trace (jit-scanned).
+
+        The buffer is sized from the trace's own largest delay
+        (``auto_horizon(max(taus))``), so a window sum is never silently
+        truncated by an undersized horizon -- the old
+        ``min(DEFAULT_HORIZON, len(taus))`` sizing clipped any trace longer
+        than 4096 events that carried a delay >= 4096.  Delays that still
+        exceed the available history (``tau > k``: asking for more steps
+        than have happened; exact only because ``window_sum`` clamps to the
+        full recorded sum) are counted and reported via ``RuntimeWarning``
+        -- undersizing is loud, never silent (ROADMAP durable semantics).
+        """
         taus = jnp.asarray(taus, jnp.int32)
 
         def body(state, tau):
             g, state = self.step(state, tau)
             return state, g
 
-        horizon = int(min(DEFAULT_HORIZON, max(int(taus.shape[0]), 1)))
-        _, gammas = jax.lax.scan(body, self.init(horizon), taus)
+        horizon = _run_horizon(taus)
+        state, gammas = jax.lax.scan(body, self.init(horizon), taus)
+        if self.uses_window:
+            _warn_clipped(state, type(self).__name__)
         return gammas
 
 
@@ -242,6 +262,7 @@ class Adaptive1(StepsizePolicy):
     """Eq. (13): gamma_k = alpha * max(gamma' - window_sum, 0)."""
 
     alpha: float = 0.9
+    uses_window: ClassVar[bool] = True
 
     def _gamma(self, state, tau):
         ws, clip = window_sum(state, tau)
@@ -251,6 +272,8 @@ class Adaptive1(StepsizePolicy):
 @dataclasses.dataclass(frozen=True)
 class Adaptive2(StepsizePolicy):
     """Eq. (14): gamma'/(tau_k+1) gated by the remaining window budget."""
+
+    uses_window: ClassVar[bool] = True
 
     def _gamma(self, state, tau):
         ws, clip = window_sum(state, tau)
@@ -327,6 +350,7 @@ class AdaptiveLipschitz(StepsizePolicy):
     h: float = 0.9
     alpha: float = 0.9
     decay: float = 1.0       # 1.0 = hard max; <1 forgets old curvature
+    uses_window: ClassVar[bool] = True
 
     def init(self, horizon: int = DEFAULT_HORIZON) -> LipschitzState:  # type: ignore[override]
         return LipschitzState(
@@ -358,8 +382,35 @@ class AdaptiveLipschitz(StepsizePolicy):
             g, state = self.step(state, tau)
             return state, g
 
-        _, gammas = jax.lax.scan(body, self.init(int(taus.shape[0])), taus)
+        # sized from the measured delays (NOT the trace length -- a short
+        # trace with one large delay used to clip silently); see
+        # StepsizePolicy.run
+        state, gammas = jax.lax.scan(body, self.init(_run_horizon(taus)),
+                                     taus)
+        _warn_clipped(state, type(self).__name__)
         return gammas
+
+
+def _run_horizon(taus: jnp.ndarray) -> int:
+    """Buffer sizing for the host-side ``policy.run`` convenience: the
+    ``auto_horizon`` of the trace's own largest delay, so every observed
+    delay is representable (``H - 1 >= max(taus)``)."""
+    tau_max = int(jnp.max(taus)) if int(taus.shape[0]) else 0
+    return auto_horizon(max(tau_max, 0))
+
+
+def _warn_clipped(state, name: str) -> None:
+    """Loudness half of the run-sizing contract: report (never swallow) the
+    final ``clipped`` count.  With the horizon sized by ``_run_horizon``,
+    clips can only come from ``tau > k`` -- a delay claiming more steps than
+    have happened -- where ``window_sum`` clamps to the full recorded sum."""
+    n = int(clipped_count(state))
+    if n:
+        warnings.warn(
+            f"{name}.run: {n} event(s) carried a delay exceeding the "
+            f"available history (tau > min(k, H - 1)); their window sums "
+            f"were clamped to the full recorded sum",
+            RuntimeWarning, stacklevel=3)
 
 
 def clipped_count(state) -> jnp.ndarray:

@@ -367,6 +367,14 @@ def federated_trace_scan(
     never touch the version counter -- a padded cell's trace is bitwise the
     exact-width cell's trace.
 
+    The compaction happens INSIDE the scan carry (the same idiom
+    ``api.Results.virtual_time`` uses to stride ``t_wall``): each upload
+    row is scattered straight into K-sized output buffers riding the
+    carry, so the S-length pop columns are never materialized -- only the
+    K compacted rows ever exist (S is ~2.25 K; the old post-scan
+    cumsum/scatter compaction paid for both).  Values are bitwise the old
+    compaction's: the slot of upload number p is p, rows past K drop.
+
     ``n_steps`` bounds total pops (default ``default_fed_steps``); if
     dropout chains eat the budget before ``n_uploads`` uploads arrive, the
     returned ``n_uploads`` field is short -- callers must check it (the
@@ -386,6 +394,11 @@ def federated_trace_scan(
     epochs = jnp.asarray(local_epochs, i32)
     act = None if active is None else jnp.asarray(active, jnp.bool_)
 
+    # K-sized output buffers ride the carry: (client, read_at, tau,
+    # aggregate, version, local_steps) i32 + t_wall f32, plus the upload
+    # counter that addresses them
+    rows0 = tuple(jnp.zeros((K,), i32) for _ in range(6)) + (
+        jnp.zeros((K,), jnp.float32),)
     init = (
         jnp.zeros((n,), jnp.float32),    # t: pop time of the in-flight event
         jnp.arange(n, dtype=i32),        # seq: its push order
@@ -396,10 +409,13 @@ def federated_trace_scan(
         jnp.zeros((), i32),              # buffered: uploads since last write
         jnp.full((), n, i32),            # seq_next: next push sequence number
         jnp.zeros((), jnp.bool_),        # exhausted: attempts overran A
+        jnp.zeros((), i32),              # n_up: uploads emitted so far
+        rows0,                           # compacted upload rows (K,) each
     )
 
     def step(carry, _):
-        t, seq, kind, stamp, attempt, version, buffered, seq_next, exhausted = carry
+        (t, seq, kind, stamp, attempt, version, buffered, seq_next,
+         exhausted, n_up, rows) = carry
         # pop: lexicographic argmin over (t, seq) == EventHeap order
         t_race = t if act is None else jnp.where(act, t, jnp.inf)
         at_min = t_race == jnp.min(t_race)
@@ -429,30 +445,26 @@ def federated_trace_scan(
         version_new = version + agg.astype(i32)
         buffered = jnp.where(agg, 0, buffered)
 
-        out = (i, stamp_i, version - stamp_i, agg.astype(i32), version_new,
-               epochs[i], ti, uploaded)
+        # scatter the upload row straight into the K-sized carry buffers:
+        # upload number p lands in slot p, non-uploads and overflow (p >= K)
+        # route to the out-of-bounds slot K and drop
+        row = (i, stamp_i, version - stamp_i, agg.astype(i32), version_new,
+               epochs[i], ti)
+        slot = jnp.where(uploaded & (n_up < K), n_up, K)
+        rows = tuple(buf.at[slot].set(val.astype(buf.dtype), mode="drop")
+                     for buf, val in zip(rows, row))
+        n_up = n_up + uploaded.astype(i32)
         return (t, seq, kind, stamp, attempt, version_new, buffered,
-                seq_next + 1, exhausted), out
+                seq_next + 1, exhausted, n_up, rows), None
 
-    carry_fin, (ci, ra, tu, ag, ve, ls, tw, up) = jax.lax.scan(
-        step, init, None, length=S)
-    exhausted_fin = carry_fin[-1]
-
-    # compact upload rows to the first K inside the program
-    pos = jnp.cumsum(up.astype(i32)) - 1
-    valid = up & (pos < K)
-    idx = jnp.where(valid, pos, K)  # K is out of bounds -> dropped
-
-    def compact(col, dtype):
-        out = jnp.zeros((K,), dtype)
-        return out.at[idx].set(col.astype(dtype), mode="drop")
+    carry_fin = jax.lax.scan(step, init, None, length=S)[0]
+    exhausted_fin, n_up_fin, rows_fin = carry_fin[-3:]
+    ci, ra, tu, ag, ve, ls, tw = rows_fin
 
     return FederatedTraceArrays(
-        client=compact(ci, i32), read_at=compact(ra, i32),
-        tau=compact(tu, i32), aggregate=compact(ag, i32),
-        version=compact(ve, i32), local_steps=compact(ls, i32),
-        t_wall=compact(tw, jnp.float32),
-        n_uploads=jnp.minimum(jnp.sum(up.astype(i32)), K),
+        client=ci, read_at=ra, tau=tu, aggregate=ag, version=ve,
+        local_steps=ls, t_wall=tw,
+        n_uploads=jnp.minimum(n_up_fin, K),
         exhausted=exhausted_fin)
 
 

@@ -104,6 +104,7 @@ def fedasync_scan(
     horizon: int = 4096,
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
+    engine: str = "scan",
 ) -> FedResult:
     """The traceable FedAsync core: one ``lax.scan`` over upload events.
 
@@ -111,7 +112,18 @@ def fedasync_scan(
     ``repro.sweep.sweep_fedasync`` batch (events and policy parameters get a
     leading grid dimension there).  ``record_every=s`` materializes (and
     evaluates the objective for) only every s-th upload row -- bitwise rows
-    ``s-1, 2s-1, ...`` of the stride-1 run (``engine.strided_scan``)."""
+    ``s-1, 2s-1, ...`` of the stride-1 run (``engine.strided_scan``).
+
+    ``engine='fused'`` launches the per-upload weight select + convex mix as
+    one Pallas kernel (``kernels.fused_step.fused_policy_mix_step``) --
+    bitwise-equal to ``engine='scan'``; needs a single-1-D-leaf model."""
+    if engine not in ("scan", "fused"):
+        raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    if engine == "fused":
+        from repro.kernels.fused_step import (as_policy_params, fused_leaf,
+                                              fused_policy_mix_step)
+        fparams = as_policy_params(policy)
+        _, x_treedef = fused_leaf(x0, "FedAsync server model")
     n = _leaves(client_data)[0].shape[0]
     x_read0 = _tmap(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
@@ -127,9 +139,14 @@ def fedasync_scan(
             xw = _tmap(lambda leaf: leaf[w], x_read)
             xc = client_update(xw, steps, *_leaves(data_at(w)))
             ss_old = ss
-            gamma, ss = policy.step(ss, tau)
-            # x <- (1 - alpha_t) x + alpha_t x_c
-            x_new = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
+            if engine == "fused":
+                gamma, ss, x_leaf = fused_policy_mix_step(
+                    fparams, ss, tau, _leaves(x)[0], _leaves(xc)[0])
+                x_new = jax.tree_util.tree_unflatten(x_treedef, [x_leaf])
+            else:
+                gamma, ss = policy.step(ss, tau)
+                # x <- (1 - alpha_t) x + alpha_t x_c
+                x_new = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
             # the uploading client picks up the freshly-written model
             x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
             if telemetry is None:
@@ -165,6 +182,7 @@ def run_fedasync(
     horizon: int | str = 4096,
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
+    engine: str = "scan",
 ) -> FedResult:
     """FedAsync: staleness-weighted model mixing, one write per upload.
 
@@ -178,7 +196,8 @@ def run_fedasync(
     def run(events):
         return fedasync_scan(client_update, x0, client_data, events, policy,
                              objective=objective, horizon=horizon,
-                             record_every=record_every, telemetry=telemetry)
+                             record_every=record_every, telemetry=telemetry,
+                             engine=engine)
 
     return run(events)
 
@@ -195,6 +214,7 @@ def fedbuff_scan(
     horizon: int = 4096,
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
+    engine: str = "scan",
 ) -> FedResult:
     """The traceable FedBuff core: buffered semi-async aggregation of
     staleness-weighted deltas as one ``lax.scan`` over upload events.
@@ -205,7 +225,19 @@ def fedbuff_scan(
     update rule collapses to sequential delta application (tested against a
     plain python reference).  Shared verbatim by the solo ``run_fedbuff`` jit
     and the vmapped/sharded ``repro.sweep.sweep_fedbuff`` batch, which fuses
-    this scan with the jitted ``federated.events.federated_trace_scan``."""
+    this scan with the jitted ``federated.events.federated_trace_scan``.
+
+    ``engine='fused'`` launches the per-upload weight select + delta
+    accumulate + buffered apply/decay as one Pallas kernel
+    (``kernels.fused_step.fused_policy_buff_step``) -- bitwise-equal to
+    ``engine='scan'``; needs a single-1-D-leaf model."""
+    if engine not in ("scan", "fused"):
+        raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    if engine == "fused":
+        from repro.kernels.fused_step import (as_policy_params, fused_leaf,
+                                              fused_policy_buff_step)
+        fparams = as_policy_params(policy)
+        _, x_treedef = fused_leaf(x0, "FedBuff server model")
     n = _leaves(client_data)[0].shape[0]
     x_read0 = _tmap(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
@@ -222,11 +254,20 @@ def fedbuff_scan(
             xw = _tmap(lambda leaf: leaf[w], x_read)
             xc = client_update(xw, steps, *_leaves(data_at(w)))
             ss_old = ss
-            gamma, ss = policy.step(ss, tau)
-            delta = _tmap(lambda d, c, a: d + gamma * (c - a), delta, xc, xw)
-            x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d, x,
-                          delta)
-            delta = _tmap(lambda d: (1.0 - agg) * d, delta)
+            if engine == "fused":
+                gamma, ss, x_leaf, d_leaf = fused_policy_buff_step(
+                    fparams, ss, tau, _leaves(x)[0], _leaves(xc)[0],
+                    _leaves(xw)[0], _leaves(delta)[0], agg,
+                    eta / buffer_size)
+                x_new = jax.tree_util.tree_unflatten(x_treedef, [x_leaf])
+                delta = jax.tree_util.tree_unflatten(x_treedef, [d_leaf])
+            else:
+                gamma, ss = policy.step(ss, tau)
+                delta = _tmap(lambda d, c, a: d + gamma * (c - a), delta, xc,
+                              xw)
+                x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d,
+                              x, delta)
+                delta = _tmap(lambda d: (1.0 - agg) * d, delta)
             x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
             if telemetry is None:
                 if not emit:
@@ -264,6 +305,7 @@ def run_fedbuff(
     horizon: int | str = 4096,
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
+    engine: str = "scan",
 ) -> FedResult:
     """FedBuff [Nguyen et al. '22] over a simulated trace; one jit."""
     if horizon == "auto":
@@ -275,7 +317,8 @@ def run_fedbuff(
         return fedbuff_scan(client_update, x0, client_data, events, policy,
                             eta=eta, buffer_size=buffer_size,
                             objective=objective, horizon=horizon,
-                            record_every=record_every, telemetry=telemetry)
+                            record_every=record_every, telemetry=telemetry,
+                            engine=engine)
 
     return run(events)
 

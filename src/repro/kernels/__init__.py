@@ -1,14 +1,24 @@
-"""Pallas TPU kernels (validated with interpret=True on CPU).
+"""Pallas kernels (compiled on tpu/gpu, interpreted on cpu -- see dispatch).
 
-Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py:
+Each standalone kernel has a pure-jnp oracle in ref.py and a jit'd wrapper
+in ops.py:
   prox_step        -- fused delay-adaptive prox-gradient update (paper Eq. 4)
   flash_attention  -- blocked online-softmax attention, GQA-native
   ssd_scan         -- Mamba2 SSD intra-chunk compute
   rmsnorm          -- fused single-pass RMSNorm
+
+fused_step holds the sweep engine's fused per-event kernels (policy
+window-sum/select/push + prox or server merge in one pallas_call); the
+solver scan cores dispatch to them under ``engine='fused'``.
 """
 from . import ops, ref
+from .dispatch import default_interpret, resolve_interpret
+from .fused_step import (fused_policy_buff_step, fused_policy_mix_step,
+                         fused_policy_prox_step)
 from .ops import (flash_attention, prox_step, prox_step_tree,
                   rmsnorm_fused, ssd_scan_pallas)
 
 __all__ = ["ops", "ref", "flash_attention", "prox_step", "prox_step_tree",
-           "rmsnorm_fused", "ssd_scan_pallas"]
+           "rmsnorm_fused", "ssd_scan_pallas", "default_interpret",
+           "resolve_interpret", "fused_policy_prox_step",
+           "fused_policy_mix_step", "fused_policy_buff_step"]

@@ -1,0 +1,56 @@
+"""Backend-aware interpret-mode dispatch for the Pallas kernels.
+
+Every Pallas entry point in this package takes ``interpret=None`` and
+resolves the default here.  The old default -- ``interpret = backend !=
+"tpu"`` -- sent GPU runs through the slow Pallas interpreter even though
+jax lowers Pallas kernels to Triton on GPU; the kernels only ever
+*compiled* on TPU.  The corrected rule:
+
+* ``tpu`` / ``gpu``  -> compile (Mosaic / Triton lowering);
+* anything else (cpu) -> interpret (jax has no CPU Pallas lowering, but
+  interpret mode runs the kernel body as regular jax ops, bitwise-equal
+  to the compiled program's arithmetic).
+
+``REPRO_PALLAS_INTERPRET`` is the escape hatch: set it to ``1``/``true``
+to force interpret mode everywhere (debugging a kernel on an
+accelerator) or ``0``/``false`` to force compilation (surfacing a
+lowering error on an unsupported backend instead of silently
+interpreting).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+_ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+# backends with a real Pallas lowering: Mosaic (tpu) and Triton (gpu)
+COMPILED_BACKENDS = ("tpu", "gpu")
+
+
+def default_interpret() -> bool:
+    """Resolve the interpret-mode default for the current backend.
+
+    Honors the ``REPRO_PALLAS_INTERPRET`` environment variable first;
+    otherwise interprets only where no Pallas lowering exists (cpu).
+    """
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    if env:
+        raise ValueError(
+            f"{_ENV_VAR}={env!r} not understood; use one of "
+            f"{_TRUTHY + _FALSY}")
+    return jax.default_backend() not in COMPILED_BACKENDS
+
+
+def resolve_interpret(interpret: "bool | None") -> bool:
+    """``interpret`` if explicitly given, else :func:`default_interpret`."""
+    return default_interpret() if interpret is None else bool(interpret)

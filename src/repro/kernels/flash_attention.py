@@ -23,6 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import default_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -83,7 +85,7 @@ def flash_attention_bhsd(q, k, v, qpos, kpos, *, causal: bool = True,
                          interpret: Optional[bool] = None) -> jnp.ndarray:
     """q (BH, Sq, d), k/v (BH, Sk, d), qpos (Sq,), kpos (Sk,) int32."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     BH, Sq, d = q.shape
     Sk = k.shape[1]
     bq = min(block_q, Sq)

@@ -1,0 +1,284 @@
+"""Fused per-event Pallas kernels for the sweep inner loop.
+
+One solver event in the scan cores is four separate XLA ops chained
+through the carry: the ``window_sum`` gather from the circular
+cumulative-sum buffer, the policy ``lax.switch`` dispatch, the ``_push``
+scatter back into the buffer, and the prox/mix/merge update of the
+iterate.  Batched over cells that becomes a per-step
+``take_along_axis`` / ``put_along_axis`` round trip on the (cells, H)
+carry block.  The kernels here fuse all four into ONE ``pallas_call``
+per event, so the carry block is read and written exactly once.
+
+Bitwise contract (the repo's standing rule, pinned in
+``tests/test_fused_engine.py``): each kernel reconstructs a
+``StepsizeState`` from its refs and calls the REAL
+``core.stepsize.window_sum`` / ``core.stepsize._push`` on it, and the
+prox / server-merge arithmetic is written with the identical expression
+the scan cores use -- the fused path is the same dataflow graph, just
+launched as a single kernel.  The only structural difference is policy
+dispatch: ``lax.switch`` does not lower inside a compiled Pallas body,
+so :func:`select_gamma` replicates the six ``ParamPolicy`` branches as a
+branch-free ``where`` chain.  Every branch is the exact expression from
+``repro.sweep.policies.ParamPolicy.step``; selecting a value computed by
+identical ops keeps the result bitwise-equal to the switch.
+
+Carry layout contract (durable -- see ROADMAP): the step-size state
+crosses the kernel boundary as four refs ``(k (1,) i32, total (1,) f32,
+cumbuf (H,) f32, clipped (1,) i32)`` and the iterate/gradient blocks are
+whole-array refs.  Scalars travel as shape-``(1,)`` arrays because Pallas
+refs are arrays; ``vmap`` over cells maps each kernel argument on its
+leading axis (the Pallas batching rule turns the batch into a grid
+axis), which is what lets the batched and sharded runners reuse these
+kernels unchanged.
+
+Interpret-vs-compile dispatch follows ``kernels.dispatch``: compiled on
+tpu/gpu, interpreted on cpu (where the kernel body runs as plain jax
+ops -- still one fused dataflow block, and still bitwise-equal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.stepsize import StepsizeState, _push, window_sum
+
+from .dispatch import resolve_interpret
+
+__all__ = ["select_gamma", "as_policy_params", "fused_leaf",
+           "fused_policy_prox_step", "fused_policy_mix_step",
+           "fused_policy_buff_step", "boundary_bytes"]
+
+
+def boundary_bytes(horizon: int, n: int) -> int:
+    """Per-event HBM traffic contract of ``fused_policy_prox_step`` on a
+    COMPILED backend: the bytes crossing the kernel boundary (operands +
+    results).  Refs stream through on-chip memory inside the kernel, so
+    nothing between the policy update and the prox write touches HBM --
+    this is the quantity the roofline tooling compares against the scan
+    engine's per-event HLO bytes.  Interpret mode (CPU) does not honor the
+    contract: ref reads materialize whole arrays as ordinary XLA ops.
+    All elements are 4-byte (f32/i32)."""
+    state = 4 * (1 + 1 + horizon + 1)      # k, total, cumbuf (H,), clipped
+    inputs = 4 * 4 + 4 + state + 2 * 4 * n  # params, tau, state, x, g
+    outputs = 4 + state + 4 * n             # gamma, new state, x_new
+    return inputs + outputs
+
+
+def select_gamma(policy_id, gamma_prime, c0, c1, ws, tau):
+    """Branch-free twin of ``ParamPolicy.step``'s ``lax.switch``.
+
+    Arguments are the four ``PolicyParams`` scalars plus the window sum
+    and the (int) delay; each candidate below is the verbatim branch
+    expression from ``repro.sweep.policies`` (ids: 0 fixed_like, 1 naive,
+    2 adaptive1, 3 adaptive2, 4 hinge, 5 poly).
+    """
+    t = jnp.asarray(tau, jnp.float32)
+    g_fixed = jnp.broadcast_to(c0, ws.shape)
+    g_naive = gamma_prime / (t + c0)
+    g_ad1 = c0 * jnp.maximum(gamma_prime - ws, 0.0)
+    g_ad2 = jnp.where(gamma_prime / (t + 1.0) <= gamma_prime - ws,
+                      gamma_prime / (t + 1.0), 0.0)
+    g_hinge = gamma_prime * jnp.where(
+        t <= c1, 1.0, 1.0 / (c0 * jnp.maximum(t - c1, 0.0) + 1.0))
+    g_poly = gamma_prime * jnp.power(t + 1.0, -c0)
+    gamma = jnp.where(
+        policy_id == 0, g_fixed, jnp.where(
+            policy_id == 1, g_naive, jnp.where(
+                policy_id == 2, g_ad1, jnp.where(
+                    policy_id == 3, g_ad2, jnp.where(
+                        policy_id == 4, g_hinge, g_poly)))))
+    return jnp.asarray(gamma, jnp.float32)
+
+
+def as_policy_params(policy):
+    """``PolicyParams`` for any policy the fused engine can run.
+
+    ``ParamPolicy`` adapters hand over their traced params; concrete
+    ``StepsizePolicy`` dataclasses flatten through ``policy_params``,
+    which raises a loud ``TypeError`` for stateful policies
+    (``AdaptiveLipschitz``) that the fused kernel cannot express --
+    callers fall back to ``engine='scan'`` for those.
+    """
+    # imported lazily: core modules import this module, and sweep.policies
+    # imports core.stepsize -- a module-level import here would cycle
+    from repro.sweep.policies import ParamPolicy, policy_params
+    if isinstance(policy, ParamPolicy):
+        return policy.params
+    return policy_params(policy)
+
+
+def fused_leaf(tree, what: str):
+    """The single 1-D leaf the fused kernels operate on, plus its treedef.
+
+    The fused engine moves the iterate through the kernel as one
+    whole-array ref, so multi-leaf or multi-dimensional pytrees are
+    rejected loudly rather than silently flattened.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if len(leaves) != 1 or leaves[0].ndim != 1:
+        raise ValueError(
+            f"engine='fused' requires the {what} to be a single 1-D array "
+            f"leaf; got {len(leaves)} leaves with shapes "
+            f"{[l.shape for l in leaves]} -- use engine='scan'")
+    return leaves[0], treedef
+
+
+def _scalar_i32(v):
+    return jnp.asarray(v, jnp.int32).reshape(1)
+
+
+def _scalar_f32(v):
+    return jnp.asarray(v, jnp.float32).reshape(1)
+
+
+def _read_state(k_ref, total_ref, cumbuf_ref, clip_ref):
+    return StepsizeState(k=k_ref[0], total=total_ref[0],
+                         cumbuf=cumbuf_ref[...], clipped=clip_ref[0])
+
+
+def _policy_update(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                   k_ref, total_ref, cumbuf_ref, clip_ref):
+    """Shared kernel-body prologue: window-sum gather, policy select,
+    cumulative-sum push -- on the real ``core.stepsize`` functions."""
+    state = _read_state(k_ref, total_ref, cumbuf_ref, clip_ref)
+    tau = tau_ref[0]
+    ws, clip = window_sum(state, tau)
+    gamma = select_gamma(pid_ref[0], gp_ref[0], c0_ref[0], c1_ref[0], ws, tau)
+    return gamma, _push(state, gamma, clip)
+
+
+def _write_state(state, gamma, k_out, total_out, cumbuf_out, clip_out,
+                 gamma_out):
+    k_out[0] = state.k
+    total_out[0] = state.total
+    cumbuf_out[...] = state.cumbuf
+    clip_out[0] = state.clipped
+    gamma_out[0] = gamma
+
+
+def _state_outs(horizon: int):
+    return [jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((horizon,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32)]
+
+
+def _state_args(params, tau, state):
+    return (_scalar_i32(params.policy_id), _scalar_f32(params.gamma_prime),
+            _scalar_f32(params.c0), _scalar_f32(params.c1),
+            _scalar_i32(tau), _scalar_i32(state.k), _scalar_f32(state.total),
+            state.cumbuf, _scalar_i32(state.clipped))
+
+
+def _unpack_state(k, total, cumbuf, clipped, gamma):
+    return gamma[0], StepsizeState(k=k[0], total=total[0], cumbuf=cumbuf,
+                                   clipped=clipped[0])
+
+
+# ---------------------------------------------------------------------------
+# PIAG / BCD: gamma select + prox(x - gamma * g)
+# ---------------------------------------------------------------------------
+
+def _prox_kernel(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                 k_ref, total_ref, cumbuf_ref, clip_ref, x_ref, g_ref,
+                 k_out, total_out, cumbuf_out, clip_out, gamma_out, x_out,
+                 *, prox):
+    gamma, state = _policy_update(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                                  k_ref, total_ref, cumbuf_ref, clip_ref)
+    # identical expression to the scan cores: prox(x - gamma * g, gamma)
+    x_out[...] = prox.prox(x_ref[...] - gamma * g_ref[...], gamma)
+    _write_state(state, gamma, k_out, total_out, cumbuf_out, clip_out,
+                 gamma_out)
+
+
+def fused_policy_prox_step(params, prox, state, tau, x, g, *,
+                           interpret=None):
+    """One fused PIAG/BCD event: ``policy.step`` + ``prox(x - gamma*g)``.
+
+    Returns ``(gamma, new_state, x_new)`` -- bitwise-equal to
+    ``gamma, ss = policy.step(state, tau); prox.prox(x - gamma * g, gamma)``.
+    The prox operator is static (baked into the kernel body); the policy
+    is a runtime ``PolicyParams`` value.
+    """
+    outs = _state_outs(state.cumbuf.shape[-1])
+    outs.append(jax.ShapeDtypeStruct(x.shape, x.dtype))
+    res = pl.pallas_call(
+        functools.partial(_prox_kernel, prox=prox),
+        out_shape=outs, interpret=resolve_interpret(interpret),
+    )(*_state_args(params, tau, state), x, g)
+    gamma, new_state = _unpack_state(*res[:5])
+    return gamma, new_state, res[5]
+
+
+# ---------------------------------------------------------------------------
+# FedAsync: gamma select + server mix x + gamma * (xc - x)
+# ---------------------------------------------------------------------------
+
+def _mix_kernel(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                k_ref, total_ref, cumbuf_ref, clip_ref, x_ref, xc_ref,
+                k_out, total_out, cumbuf_out, clip_out, gamma_out, x_out):
+    gamma, state = _policy_update(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                                  k_ref, total_ref, cumbuf_ref, clip_ref)
+    a = x_ref[...]
+    x_out[...] = a + gamma * (xc_ref[...] - a)
+    _write_state(state, gamma, k_out, total_out, cumbuf_out, clip_out,
+                 gamma_out)
+
+
+def fused_policy_mix_step(params, state, tau, x, xc, *, interpret=None):
+    """One fused FedAsync server event: ``policy.step`` + convex mix.
+
+    Returns ``(gamma, new_state, x_new)`` with
+    ``x_new = x + gamma * (xc - x)``.
+    """
+    outs = _state_outs(state.cumbuf.shape[-1])
+    outs.append(jax.ShapeDtypeStruct(x.shape, x.dtype))
+    res = pl.pallas_call(
+        _mix_kernel, out_shape=outs, interpret=resolve_interpret(interpret),
+    )(*_state_args(params, tau, state), x, xc)
+    gamma, new_state = _unpack_state(*res[:5])
+    return gamma, new_state, res[5]
+
+
+# ---------------------------------------------------------------------------
+# FedBuff: gamma select + delta accumulate + buffered apply/decay
+# ---------------------------------------------------------------------------
+
+def _buff_kernel(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                 k_ref, total_ref, cumbuf_ref, clip_ref,
+                 agg_ref, x_ref, xc_ref, xw_ref, delta_ref,
+                 k_out, total_out, cumbuf_out, clip_out, gamma_out,
+                 x_out, delta_out, *, scale):
+    gamma, state = _policy_update(pid_ref, gp_ref, c0_ref, c1_ref, tau_ref,
+                                  k_ref, total_ref, cumbuf_ref, clip_ref)
+    agg = agg_ref[0]
+    # identical expressions to fedbuff_scan: accumulate against the
+    # client's READ snapshot xw, apply scaled by eta/buffer_size on
+    # aggregation events, then decay
+    delta = delta_ref[...] + gamma * (xc_ref[...] - xw_ref[...])
+    x_out[...] = x_ref[...] + agg * scale * delta
+    delta_out[...] = (1.0 - agg) * delta
+    _write_state(state, gamma, k_out, total_out, cumbuf_out, clip_out,
+                 gamma_out)
+
+
+def fused_policy_buff_step(params, state, tau, x, xc, xw, delta, agg,
+                           scale: float, *, interpret=None):
+    """One fused FedBuff server event.
+
+    ``scale = eta / buffer_size`` is static; ``agg`` is the traced 0/1
+    aggregation flag.  Returns ``(gamma, new_state, x_new, delta_new)``.
+    """
+    outs = _state_outs(state.cumbuf.shape[-1])
+    outs.append(jax.ShapeDtypeStruct(x.shape, x.dtype))
+    outs.append(jax.ShapeDtypeStruct(delta.shape, delta.dtype))
+    res = pl.pallas_call(
+        functools.partial(_buff_kernel, scale=scale),
+        out_shape=outs, interpret=resolve_interpret(interpret),
+    )(*_state_args(params, tau, state), _scalar_f32(agg), x, xc, xw, delta)
+    gamma, new_state = _unpack_state(*res[:5])
+    return gamma, new_state, res[5], res[6]

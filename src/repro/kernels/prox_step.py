@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
+
 LANES = 1024          # columns of the 2-D view (8 x 128 native tiles)
 BLOCK_ROWS = 256      # rows per grid step -> 1 MiB f32 per operand block
 
@@ -44,7 +46,7 @@ def prox_step(x: jnp.ndarray, g: jnp.ndarray, gamma: jnp.ndarray,
               interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused prox-gradient update on an arbitrary-shaped array."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     shape, dtype = x.shape, x.dtype
     n = x.size
     cols = LANES if n >= LANES else 128

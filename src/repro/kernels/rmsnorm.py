@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
+
 BLOCK_ROWS = 256
 
 
@@ -31,7 +33,7 @@ def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
             interpret: Optional[bool] = None) -> jnp.ndarray:
     """x (..., D), scale (D,) -> RMSNorm(x) * scale, fused single pass."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     shape = x.shape
     D = shape[-1]
     rows = x.size // D

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
+
 
 def _kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, st_ref):
     x = x_ref[0, :, 0, :].astype(jnp.float32)      # (Q, P)
@@ -56,7 +58,7 @@ def ssd_intra_chunk(x, dt, dA, B, C, interpret: Optional[bool] = None
     Returns y (BC, Q, H, P) float32 and state (BC, H, N, P) float32.
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     BC, Q, H, P = x.shape
     G, N = B.shape[2], B.shape[3]
     rep = H // G

@@ -149,7 +149,8 @@ def _slice_workers(worker_data, width: int):
 # ---------------------------------------------------------------- PIAG ----
 
 def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-               use_tau_max, masked, record_every=1, telemetry=None):
+               use_tau_max, masked, record_every=1, telemetry=None,
+               engine="scan"):
     """The per-cell program (trace generation fused with the solver scan);
     ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
     the sharded one."""
@@ -160,7 +161,8 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, active=active,
-                             record_every=record_every, telemetry=telemetry)
+                             record_every=record_every, telemetry=telemetry,
+                             engine=engine)
     else:
         def cell(T, pp):
             tr = trace_scan(T)
@@ -168,7 +170,7 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, record_every=record_every,
-                             telemetry=telemetry)
+                             telemetry=telemetry, engine=engine)
     return cell
 
 
@@ -176,7 +178,7 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
                     objective: Optional[Callable] = None, horizon: int = 4096,
                     use_tau_max: bool = True, masked: bool = False,
                     record_every: int = 1, donate: bool = False,
-                    telemetry=None) -> Callable:
+                    telemetry=None, engine: str = "scan") -> Callable:
     """Build the batched PIAG program.
 
     Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
@@ -184,11 +186,12 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
     signature grows an ``active (B, n) bool`` argument between the two (the
     ragged-bucket form).  ``donate=True`` donates the stacked service-time
     tensor (arg 0) so its buffer is reused in place -- pass a fresh array
-    per call (the ``sweep_*`` runners do).
+    per call (the ``sweep_*`` runners do).  ``engine='fused'`` selects the
+    Pallas fused per-event kernel inside the scan core (bitwise-equal).
     """
     return jax.jit(jax.vmap(_piag_cell(
         worker_loss, x0, worker_data, prox, objective, horizon, use_tau_max,
-        masked, record_every, telemetry)),
+        masked, record_every, telemetry, engine)),
         donate_argnums=(0,) if donate else ())
 
 
@@ -196,7 +199,8 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                prox: ProxOp, objective: Optional[Callable] = None,
                horizon: Horizon = 4096, use_tau_max: bool = True,
                bucket_widths: Optional[Sequence[int]] = None,
-               record_every: int = 1, telemetry=None) -> PIAGResult:
+               record_every: int = 1, telemetry=None,
+               engine: str = "scan") -> PIAGResult:
     """Run PIAG on every cell of ``grid`` in one batched program per
     bucket (a homogeneous grid is exactly one program).  ``bucket_widths``
     overrides the ragged grid's padded-width menu (``SweepGrid.buckets``).
@@ -210,13 +214,14 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
 
     def run_bucket(b: SweepBucket):
         key = ("piag", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, telemetry, IdKey(worker_loss), tree_key(x0),
-               tree_key(worker_data), IdKey(prox), IdKey(objective))
+               record_every, telemetry, engine, IdKey(worker_loss),
+               tree_key(x0), tree_key(worker_data), IdKey(prox),
+               IdKey(objective))
         fn = cached_program(key, lambda: make_sweep_piag(
             worker_loss, x0, _slice_workers(worker_data, b.width), prox,
             objective=objective, horizon=horizon, use_tau_max=use_tau_max,
             masked=not b.uniform, record_every=record_every,
-            donate=_donate_default(), telemetry=telemetry))
+            donate=_donate_default(), telemetry=telemetry, engine=engine))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         if b.uniform:
@@ -245,42 +250,46 @@ def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 # ----------------------------------------------------------- Async-BCD ----
 
 def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-              record_every=1, telemetry=None):
+              record_every=1, telemetry=None, engine="scan"):
     if masked:
         def cell(T, active, blocks, pp):
             tr = trace_scan(T, active=active)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
                             ParamPolicy(pp), prox, horizon=horizon,
-                            record_every=record_every, telemetry=telemetry)
+                            record_every=record_every, telemetry=telemetry,
+                            engine=engine)
     else:
         def cell(T, blocks, pp):
             tr = trace_scan(T)
             events = (tr.worker, tr.tau, blocks)
             return bcd_scan(grad_f, objective, x0, m, n_workers, events,
                             ParamPolicy(pp), prox, horizon=horizon,
-                            record_every=record_every, telemetry=telemetry)
+                            record_every=record_every, telemetry=telemetry,
+                            engine=engine)
     return cell
 
 
 def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                    n_workers: int, prox: ProxOp, horizon: int = 4096,
                    masked: bool = False, record_every: int = 1,
-                   donate: bool = False, telemetry=None) -> Callable:
+                   donate: bool = False, telemetry=None,
+                   engine: str = "scan") -> Callable:
     """Build the batched Async-BCD program: jitted ``fn(service_times
     (B, n, K+1)[, active (B, n)], blocks (B, K), params (B,)) ->
     BCDResult``.  BCD has no cross-worker reduction, so the mask only
     guards the trace (see ``core.bcd.bcd_scan``)."""
     return jax.jit(jax.vmap(_bcd_cell(
         grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-        record_every, telemetry)),
+        record_every, telemetry, engine)),
         donate_argnums=(0,) if donate else ())
 
 
 def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
               grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
               bucket_widths: Optional[Sequence[int]] = None,
-              record_every: int = 1, telemetry=None) -> BCDResult:
+              record_every: int = 1, telemetry=None,
+              engine: str = "scan") -> BCDResult:
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
     runs.  Per-bucket executables are cached; ``horizon='auto'`` sizes the
@@ -289,12 +298,12 @@ def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
 
     def run_bucket(b: SweepBucket):
         key = ("bcd", b.width, not b.uniform, horizon, m, record_every,
-               telemetry, IdKey(grad_f), IdKey(objective), tree_key(x0),
-               IdKey(prox))
+               telemetry, engine, IdKey(grad_f), IdKey(objective),
+               tree_key(x0), IdKey(prox))
         fn = cached_program(key, lambda: make_sweep_bcd(
             grad_f, objective, x0, m, b.width, prox, horizon=horizon,
             masked=not b.uniform, record_every=record_every,
-            donate=_donate_default(), telemetry=telemetry))
+            donate=_donate_default(), telemetry=telemetry, engine=engine))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
@@ -374,7 +383,8 @@ def _check_fed_diag(n_up, exhausted, n_uploads: int, n_steps: int) -> None:
 def make_sweep_fedasync(client_update: Callable, x0, client_data,
                         objective: Optional[Callable] = None,
                         horizon: int = 4096,
-                        record_every: int = 1, telemetry=None) -> Callable:
+                        record_every: int = 1, telemetry=None,
+                        engine: str = "scan") -> Callable:
     """Build the events-driven batched FedAsync program: jitted
     ``fn(events (5 x (B, K)), params (B,)) -> FedResult``.  This is the
     reference-path entry (events stacked on host, e.g. by
@@ -385,29 +395,30 @@ def make_sweep_fedasync(client_update: Callable, x0, client_data,
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
                              horizon=horizon, record_every=record_every,
-                             telemetry=telemetry)
+                             telemetry=telemetry, engine=engine)
 
     return jax.jit(jax.vmap(cell))
 
 
 def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon,
-                           record_every=1, telemetry=None):
+                           record_every=1, telemetry=None, engine="scan"):
     def server_scan(events, pp):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
                              horizon=horizon, record_every=record_every,
-                             telemetry=telemetry)
+                             telemetry=telemetry, engine=engine)
     return server_scan
 
 
 def _fedbuff_scan_adapter(client_update, x0, client_data, objective, horizon,
-                          eta, buffer_size, record_every=1, telemetry=None):
+                          eta, buffer_size, record_every=1, telemetry=None,
+                          engine="scan"):
     def server_scan(events, pp):
         return fedbuff_scan(client_update, x0, client_data, events,
                             ParamPolicy(pp), eta=eta,
                             buffer_size=buffer_size, objective=objective,
                             horizon=horizon, record_every=record_every,
-                            telemetry=telemetry)
+                            telemetry=telemetry, engine=engine)
     return server_scan
 
 
@@ -417,7 +428,8 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
                               horizon: int = 4096,
                               n_steps: Optional[int] = None,
                               record_every: int = 1,
-                              donate: bool = False, telemetry=None) -> Callable:
+                              donate: bool = False, telemetry=None,
+                              engine: str = "scan") -> Callable:
     """Build the fused batched FedAsync program: jitted ``fn(rounds,
     cparams, active, params) -> (FedResult, n_uploads (B,), exhausted (B,))``
     with trace generation (``federated_trace_scan``) and the server scan in
@@ -426,7 +438,7 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedasync_scan_adapter(client_update, x0, client_data, objective,
-                               horizon, record_every, telemetry),
+                               horizon, record_every, telemetry, engine),
         n_uploads, buffer_size, n_steps)),
         donate_argnums=(0,) if donate else ())
 
@@ -437,14 +449,15 @@ def make_sweep_fedbuff(client_update: Callable, x0, client_data,
                        horizon: int = 4096,
                        n_steps: Optional[int] = None,
                        record_every: int = 1,
-                       donate: bool = False, telemetry=None) -> Callable:
+                       donate: bool = False, telemetry=None,
+                       engine: str = "scan") -> Callable:
     """Build the fused batched FedBuff program (same shape as
     ``make_sweep_fedasync_fused`` with the buffered-delta server scan)."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     return jax.jit(jax.vmap(_fed_cell(
         _fedbuff_scan_adapter(client_update, x0, client_data, objective,
                               horizon, eta, buffer_size, record_every,
-                              telemetry),
+                              telemetry, engine),
         n_uploads, buffer_size, n_steps)),
         donate_argnums=(0,) if donate else ())
 
@@ -534,7 +547,8 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    reference: bool = False,
                    n_steps: Optional[int] = None,
                    bucket_widths: Optional[Sequence[int]] = None,
-                   record_every: int = 1, telemetry=None) -> FedResult:
+                   record_every: int = 1, telemetry=None,
+                   engine: str = "scan") -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
     ``ClientModel`` lists.
 
@@ -551,7 +565,7 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                                    buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedasync_scan_adapter(client_update, x0, client_data,
                                      objective, horizon, record_every,
-                                     telemetry)
+                                     telemetry, engine)
 
     def make_fused(cd, S):
         return make_sweep_fedasync_fused(client_update, x0, cd, grid.n_events,
@@ -559,10 +573,10 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                                          objective=objective, horizon=horizon,
                                          n_steps=S, record_every=record_every,
                                          donate=_donate_default(),
-                                         telemetry=telemetry)
+                                         telemetry=telemetry, engine=engine)
 
     key = ("fedasync", grid.n_events, buffer_size, horizon, record_every,
-           telemetry, IdKey(client_update), tree_key(x0),
+           telemetry, engine, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,
@@ -576,7 +590,8 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                   reference: bool = False,
                   n_steps: Optional[int] = None,
                   bucket_widths: Optional[Sequence[int]] = None,
-                  record_every: int = 1, telemetry=None) -> FedResult:
+                  record_every: int = 1, telemetry=None,
+                  engine: str = "scan") -> FedResult:
     """Run FedBuff on every cell: fused jitted trace generation + buffered
     delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
     program per bucket; ``reference=True`` / ``horizon='auto'`` as in
@@ -585,7 +600,7 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                                    buffer_size=buffer_size, n_steps=n_steps)
     adapter = _fedbuff_scan_adapter(client_update, x0, client_data, objective,
                                     horizon, eta, buffer_size, record_every,
-                                    telemetry)
+                                    telemetry, engine)
 
     def make_fused(cd, S):
         return make_sweep_fedbuff(client_update, x0, cd, grid.n_events,
@@ -593,10 +608,10 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                                   objective=objective, horizon=horizon,
                                   n_steps=S, record_every=record_every,
                                   donate=_donate_default(),
-                                  telemetry=telemetry)
+                                  telemetry=telemetry, engine=engine)
 
     key = ("fedbuff", grid.n_events, eta, buffer_size, horizon, record_every,
-           telemetry, IdKey(client_update), tree_key(x0),
+           telemetry, engine, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,

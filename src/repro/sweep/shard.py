@@ -139,13 +139,14 @@ def make_sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                             horizon: int = 4096, use_tau_max: bool = True,
                             masked: bool = False,
                             mesh: Optional[Mesh] = None,
-                            record_every: int = 1, telemetry=None) -> Callable:
+                            record_every: int = 1, telemetry=None,
+                            engine: str = "scan") -> Callable:
     """Sharded twin of ``make_sweep_piag``: same signature and row values,
     but the batch axis is partitioned across ``mesh`` (batch size must be a
     mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-                      use_tau_max, masked, record_every, telemetry)
+                      use_tau_max, masked, record_every, telemetry, engine)
     return shard_cells(jax.vmap(cell), mesh, n_args=3 if masked else 2)
 
 
@@ -155,14 +156,15 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                        horizon: Horizon = 4096, use_tau_max: bool = True,
                        mesh: Optional[Mesh] = None,
                        bucket_widths: Optional[Sequence[int]] = None,
-                       record_every: int = 1, telemetry=None) -> PIAGResult:
+                       record_every: int = 1, telemetry=None,
+                       engine: str = "scan") -> PIAGResult:
     """``sweep_piag`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
         key = ("piag/sharded", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, telemetry, mesh, IdKey(worker_loss),
+               record_every, telemetry, engine, mesh, IdKey(worker_loss),
                tree_key(x0), tree_key(worker_data), IdKey(prox),
                IdKey(objective))
         T = jnp.asarray(b.grid.service_times(b.width))
@@ -173,7 +175,8 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
             lambda: _piag_cell(worker_loss, x0,
                                _slice_workers(worker_data, b.width), prox,
                                objective, horizon, use_tau_max,
-                               not b.uniform, record_every, telemetry),
+                               not b.uniform, record_every, telemetry,
+                               engine),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
@@ -198,11 +201,12 @@ def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                            n_workers: int, prox: ProxOp, horizon: int = 4096,
                            masked: bool = False,
                            mesh: Optional[Mesh] = None,
-                           record_every: int = 1, telemetry=None) -> Callable:
+                           record_every: int = 1, telemetry=None,
+                           engine: str = "scan") -> Callable:
     """Sharded twin of ``make_sweep_bcd`` (batch must be a mesh multiple)."""
     mesh = cell_mesh() if mesh is None else mesh
     cell = _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon,
-                     masked, record_every, telemetry)
+                     masked, record_every, telemetry, engine)
     return shard_cells(jax.vmap(cell), mesh, n_args=4 if masked else 3)
 
 
@@ -210,14 +214,15 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                       grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
                       mesh: Optional[Mesh] = None,
                       bucket_widths: Optional[Sequence[int]] = None,
-                      record_every: int = 1, telemetry=None) -> BCDResult:
+                      record_every: int = 1, telemetry=None,
+                      engine: str = "scan") -> BCDResult:
     """``sweep_bcd`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
 
     def run_bucket(b: SweepBucket):
         key = ("bcd/sharded", b.width, not b.uniform, horizon, m,
-               record_every, telemetry, mesh, IdKey(grad_f),
+               record_every, telemetry, engine, mesh, IdKey(grad_f),
                IdKey(objective), tree_key(x0), IdKey(prox))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
@@ -229,7 +234,7 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
         return _run_sharded_bucket(
             lambda: _bcd_cell(grad_f, objective, x0, m, b.width, prox,
                               horizon, not b.uniform, record_every,
-                              telemetry),
+                              telemetry, engine),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
     return run_bucketed(grid, run_bucket, bucket_widths)
@@ -269,18 +274,20 @@ def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
                            n_steps: Optional[int] = None,
                            mesh: Optional[Mesh] = None,
                            bucket_widths: Optional[Sequence[int]] = None,
-                           record_every: int = 1, telemetry=None) -> FedResult:
+                           record_every: int = 1, telemetry=None,
+                           engine: str = "scan") -> FedResult:
     """``sweep_fedasync`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
 
     def adapter_for(cd):
         return _fedasync_scan_adapter(client_update, x0, cd, objective,
-                                      horizon, record_every, telemetry)
+                                      horizon, record_every, telemetry,
+                                      engine)
 
     key = ("fedasync/sharded", grid.n_events, buffer_size, horizon,
-           record_every, telemetry, IdKey(client_update), tree_key(x0),
-           tree_key(client_data), IdKey(objective))
+           record_every, telemetry, engine, IdKey(client_update),
+           tree_key(x0), tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,
                               cache_key=key)
@@ -294,7 +301,8 @@ def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
                           n_steps: Optional[int] = None,
                           mesh: Optional[Mesh] = None,
                           bucket_widths: Optional[Sequence[int]] = None,
-                          record_every: int = 1, telemetry=None) -> FedResult:
+                          record_every: int = 1, telemetry=None,
+                          engine: str = "scan") -> FedResult:
     """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
@@ -302,11 +310,11 @@ def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
     def adapter_for(cd):
         return _fedbuff_scan_adapter(client_update, x0, cd, objective,
                                      horizon, eta, buffer_size, record_every,
-                                     telemetry)
+                                     telemetry, engine)
 
     key = ("fedbuff/sharded", grid.n_events, eta, buffer_size, horizon,
-           record_every, telemetry, IdKey(client_update), tree_key(x0),
-           tree_key(client_data), IdKey(objective))
+           record_every, telemetry, engine, IdKey(client_update),
+           tree_key(x0), tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,
                               cache_key=key)

@@ -1,0 +1,217 @@
+"""The fused Pallas engine (``engine='fused'``) vs the XLA scan engine.
+
+The contract under test (ROADMAP item 3 / ``repro.kernels.fused_step``):
+``ExecutionSpec(engine='fused')`` routes the per-event policy update
+(window-sum / select / circular push) plus the iterate step through ONE
+Pallas kernel per event, and every solver row is BITWISE-equal to the
+default ``engine='scan'`` path on every backend.  Both engines run jitted
+(the production paths always are); eager references would differ by FMA
+contraction and are deliberately absent here.
+
+Also pins the two bugfix satellites that ride along:
+* ``StepsizePolicy.run`` sizes its window buffer from the trace's own
+  largest delay and warns loudly when delays exceed the available history
+  (silent-clipping regression -- fails on the pre-fix sizing
+  ``min(DEFAULT_HORIZON, len(taus))``);
+* the fused engine refuses ``AdaptiveLipschitz`` loudly (backtracking is
+  host-side; no silent fallback).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core.problems import make_logreg
+from repro.core.prox import make_prox
+from repro.core.stepsize import (Adaptive1, AdaptiveLipschitz, auto_horizon,
+                                 make_policy)
+from repro.federated.events import heterogeneous_clients
+from repro.kernels.fused_step import as_policy_params, fused_policy_prox_step
+from repro.sweep.grid import make_grid, standard_topology_factories
+from repro.sweep.policies import policy_params
+
+N_EVENTS = 64
+FED_EVENTS = 48
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(n_samples=200, dim=30, n_workers=8, seed=0)
+
+
+@pytest.fixture(scope="module")
+def prox(problem):
+    return make_prox("l1", lam=problem.lam1)
+
+
+@pytest.fixture(scope="module")
+def worker_grid(problem):
+    gp = 0.99 / problem.L
+    policies = {
+        n: make_policy(n, gp, **({"tau_bound": 64} if n == "fixed" else {}))
+        for n in ("adaptive1", "adaptive2", "fixed", "naive")}
+    topos = {"uniform": standard_topology_factories(0)["uniform"]}
+    return make_grid(policies, [0, 1], topos, N_EVENTS, n_workers=[8])
+
+
+@pytest.fixture(scope="module")
+def fed_grid():
+    policies = {n: make_policy(n, 0.6)
+                for n in ("adaptive1", "adaptive2", "naive")}
+    topos = {"edge": lambda n: heterogeneous_clients(n, seed=0)}
+    return make_grid(policies, [0, 1], topos, FED_EVENTS, n_workers=[8])
+
+
+def _solver_kwargs(solver):
+    return {"bcd": {"m": 4}, "fedbuff": {"eta": 0.5, "buffer_size": 2}}.get(
+        solver, {})
+
+
+def _raw(solver, backend, engine, problem, prox, grid):
+    return api.run_components(solver, backend, problem=problem, grid=grid,
+                              prox=prox, engine=engine,
+                              **_solver_kwargs(solver)).raw
+
+
+def _assert_bitwise(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("backend", ["batched", "sharded", "solo"])
+@pytest.mark.parametrize("solver", ["piag", "bcd", "fedasync", "fedbuff"])
+def test_fused_engine_bitwise(solver, backend, problem, prox, worker_grid,
+                              fed_grid):
+    """engine='fused' == engine='scan' on every leaf, 4 solvers x 3
+    backends -- the tentpole equivalence grid."""
+    grid = fed_grid if solver.startswith("fed") else worker_grid
+    scan = _raw(solver, backend, "scan", problem, prox, grid)
+    fused = _raw(solver, backend, "fused", problem, prox, grid)
+    _assert_bitwise(scan, fused)
+
+
+def test_fused_engine_telemetry_neutral(problem, prox, worker_grid):
+    """Telemetry accumulators in the carry never perturb the fused solver
+    leaves, and the aggregates match the scan engine's exactly."""
+    plain = api.run_components("piag", "batched", problem=problem,
+                               grid=worker_grid, prox=prox, engine="fused")
+    with_tel = api.run_components("piag", "batched", problem=problem,
+                                  grid=worker_grid, prox=prox, engine="fused",
+                                  telemetry=True)
+    scan_tel = api.run_components("piag", "batched", problem=problem,
+                                  grid=worker_grid, prox=prox, engine="scan",
+                                  telemetry=True)
+    for field in ("x", "objective", "gammas", "taus"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plain.raw, field)),
+            np.asarray(getattr(with_tel.raw, field)))
+    _assert_bitwise(with_tel.raw.telemetry, scan_tel.raw.telemetry)
+
+
+def test_engine_validation():
+    with pytest.raises(ValueError, match="engine"):
+        api.ExecutionSpec(engine="bogus")
+    from repro.core.piag import piag_scan
+    with pytest.raises(ValueError, match="engine"):
+        piag_scan(lambda x, A, b: 0.0, jnp.zeros(3), (None, None),
+                  (jnp.zeros(1, jnp.int32), jnp.zeros(1, jnp.int32)),
+                  make_policy("naive", 0.1), make_prox("none"),
+                  engine="vectorized")
+
+
+def test_fused_rejects_adaptive_lipschitz(problem, prox, worker_grid):
+    """The backtracking policy cannot flatten to PolicyParams; the fused
+    engine must fail loudly, never fall back silently."""
+    with pytest.raises(TypeError):
+        as_policy_params(AdaptiveLipschitz(gamma_prime=0.1))
+    with pytest.raises(TypeError):
+        policy_params(AdaptiveLipschitz(gamma_prime=0.1))
+
+
+@pytest.mark.parametrize("name", ["adaptive1", "adaptive2", "fixed", "naive",
+                                  "hinge", "poly"])
+def test_fused_kernel_matches_policy_step(name):
+    """Kernel-level pin: one fused step == the jitted policy.step + prox
+    composition, per policy family (both sides jitted -- XLA contracts
+    mul+sub to FMA under jit, so an eager reference would be 1 ulp off)."""
+    policy = make_policy(name, 0.3, **({"tau_bound": 7} if name == "fixed"
+                                       else {}))
+    params = policy_params(policy)
+    prox = make_prox("l1", lam=0.05)
+    horizon = 16
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (33,))
+    g = jax.random.normal(jax.random.PRNGKey(4), (33,))
+    taus = jnp.asarray([0, 1, 3, 7, 2], jnp.int32)
+
+    @jax.jit
+    def run_scan(x, g):
+        def body(carry, tau):
+            x, ss = carry
+            gamma, ss = policy.step(ss, tau)
+            return (prox.prox(x - gamma * g, gamma), ss), gamma
+        (xf, _), gs = jax.lax.scan(body, (x, policy.init(horizon)), taus)
+        return xf, gs
+
+    @jax.jit
+    def run_fused(x, g):
+        def body(carry, tau):
+            x, ss = carry
+            gamma, ss, x = fused_policy_prox_step(params, prox, ss, tau, x, g)
+            return (x, ss), gamma
+        (xf, _), gs = jax.lax.scan(body, (x, policy.init(horizon)), taus)
+        return xf, gs
+
+    xa, ga = run_scan(x, g)
+    xb, gb = run_fused(x, g)
+    np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(gb))
+
+
+# ------------------------- satellite: loud horizon sizing in policy.run ----
+
+def test_run_warns_on_delay_beyond_history():
+    """REGRESSION (silent-clipping bugfix): a short trace carrying a delay
+    larger than the available history must warn -- the pre-fix sizing
+    ``min(DEFAULT_HORIZON, len(taus))`` clipped it silently."""
+    taus = jnp.asarray([0, 1, 2, 3, 64, 0, 1, 2, 3, 4], jnp.int32)
+    with pytest.warns(RuntimeWarning, match="delay exceeding"):
+        gammas = Adaptive1(gamma_prime=0.3).run(taus)
+    assert gammas.shape == (10,)
+    assert bool(jnp.all(jnp.isfinite(gammas)))
+
+
+def test_run_sizes_buffer_from_max_tau():
+    """The buffer is sized from max(taus), not len(taus): the emitted
+    sequence is bitwise what an explicitly oversized scan produces."""
+    policy = Adaptive1(gamma_prime=0.3)
+    taus = jnp.asarray([0, 1, 2, 3, 64, 0, 1, 2, 3, 4], jnp.int32)
+
+    @jax.jit
+    def big_horizon(taus):
+        def body(ss, tau):
+            g, ss = policy.step(ss, tau)
+            return ss, g
+        return jax.lax.scan(body, policy.init(8192), taus)[1]
+
+    with pytest.warns(RuntimeWarning):  # tau=64 > k=4 still exceeds history
+        got = policy.run(taus)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(big_horizon(taus)))
+    assert auto_horizon(64) >= 65  # the sizing rule the fix installs
+
+
+def test_run_silent_for_windowless_policies():
+    """Policies that never consume the window (fixed/naive families) must
+    not warn on large delays -- the clip is diagnostic-only for them."""
+    taus = jnp.asarray([0, 300, 1, 2], jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        make_policy("naive", 0.3).run(taus)
+        make_policy("fixed", 0.3, tau_bound=300).run(taus)

@@ -180,6 +180,55 @@ def test_ssd_kernel_with_initial_state_golden():
     np.testing.assert_allclose(hb, hf1, atol=3e-4)
 
 
+# ---- backend-aware interpret dispatch (repro.kernels.dispatch) ----------
+
+def test_default_interpret_backend_aware(monkeypatch):
+    """Compiled on tpu/gpu, interpreted everywhere else -- the pre-fix
+    default (`backend != "tpu"`) wrongly interpreted on gpu."""
+    from repro.kernels import dispatch
+    monkeypatch.delenv(dispatch._ENV_VAR, raising=False)
+    for backend, want in [("tpu", False), ("gpu", False), ("cpu", True)]:
+        monkeypatch.setattr(jax, "default_backend", lambda b=backend: b)
+        assert dispatch.default_interpret() is want
+
+
+@pytest.mark.parametrize("value,want", [("1", True), ("true", True),
+                                        ("ON", True), ("0", False),
+                                        ("no", False), ("False", False)])
+def test_default_interpret_env_override(monkeypatch, value, want):
+    from repro.kernels import dispatch
+    monkeypatch.setenv(dispatch._ENV_VAR, value)
+    assert dispatch.default_interpret() is want
+
+
+def test_default_interpret_env_invalid(monkeypatch):
+    from repro.kernels import dispatch
+    monkeypatch.setenv(dispatch._ENV_VAR, "maybe")
+    with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+        dispatch.default_interpret()
+
+
+def test_resolve_interpret_explicit_wins(monkeypatch):
+    from repro.kernels import dispatch
+    monkeypatch.setenv(dispatch._ENV_VAR, "0")
+    assert dispatch.resolve_interpret(True) is True
+    assert dispatch.resolve_interpret(False) is False
+    assert dispatch.resolve_interpret(None) is False
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 1023, 1024, 1025, 4097])
+def test_prox_step_pad_tail_edges(n):
+    """1-D sizes straddling the LANES tiling: padded tail lanes must not
+    leak into the result (explicit interpret=True -- the entry point jit
+    caches on the static interpret key, so the default is tested above)."""
+    x = jax.random.normal(KEY, (n,))
+    g = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    got = ops.prox_step(x, g, 0.2, kind="l1", lam=0.03, interpret=True)
+    want = ref.prox_step_ref(x, g, jnp.float32(0.2), kind="l1", lam=0.03)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    assert got.shape == (n,)
+
+
 @pytest.mark.parametrize("gqa,window", [((8, 2), 16), ((4, 4), 9)])
 def test_flash_gqa_sliding_window_golden(gqa, window):
     """GQA fold + sliding window against the naive model attention."""
