@@ -1,0 +1,162 @@
+"""Chaos figure: delay-adaptive vs fixed worst-case-bound step-sizes under
+crash/rejoin fault injection.
+
+The robustness claim this gates: crash/rejoin outages spike the measured
+staleness far past its stationary level (>= 4x tau_bar here), and a fixed
+step tuned to that worst-case bound gamma'/(tau_max+1) pays for the spike
+on EVERY event, while the delay-adaptive policies only slow down when a
+stale update actually arrives.  Concretely, at least one adaptive policy
+must reach the 20%-gap target objective while the best fixed
+worst-case-bound step either diverges or needs >= 2x the server writes to
+get there.
+
+Emits ``BENCH_faults.json`` and exits non-zero when the gate fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro import api
+from repro.core import Adaptive1, Adaptive2, FixedStepSize, L1, make_logreg
+from repro.core.engine import heterogeneous_workers
+from repro.faults import FaultSpec
+from repro.sweep import make_grid
+
+from .common import emit
+
+# rare long outages: a crashed worker's next completion lands with a large
+# measured staleness (the rejoin spike), exactly the regime where the
+# worst-case bound is loosest
+CHAOS = FaultSpec(p_crash=0.04, p_rejoin=0.15, crash_scale=60.0, seed=0)
+
+SPIKE_FACTOR = 4.0     # faulted tau_max must exceed this x stationary tau_bar
+GAP_FRACTION = 0.2     # target: close 80% of the gap to the best final
+WRITE_RATIO = 2.0      # fixed must need >= this x the adaptive's writes
+
+
+def _grid(problem, policies, n_events):
+    return make_grid(policies=policies, seeds=[0],
+                     topologies={"hetero": heterogeneous_workers(
+                         problem.n_workers, seed=1)},
+                     n_events=n_events)
+
+
+def _objective_rows(res):
+    """policy name -> (n_rows,) objective trace (single seed/topology)."""
+    obj = np.asarray(res.raw.objective)
+    return {c.policy_name: obj[i] for i, c in enumerate(res.grid.cells)}
+
+
+def _events_to(obj, target):
+    """First recorded event index reaching the target, or None."""
+    finite = np.isfinite(obj)
+    hit = finite & (obj <= target)
+    return int(np.argmax(hit)) if hit.any() else None
+
+
+def run(n_events: int = 3000, out: str = "BENCH_faults.json") -> dict:
+    problem = make_logreg(800, 100, n_workers=8, seed=0)
+    prox = L1(lam=problem.lam1)
+    gp = 0.99 / problem.L
+
+    # phase 1: measure the delay regime -- stationary (faults off) vs
+    # faulted -- with a throwaway adaptive run each
+    probe = {"probe": Adaptive1(gamma_prime=gp)}
+    stat = api.run_components("piag", "batched", problem=problem,
+                              grid=_grid(problem, probe, n_events),
+                              prox=prox, horizon=4096)
+    chaos_probe = api.run_components("piag", "batched", problem=problem,
+                                     grid=_grid(problem, probe, n_events),
+                                     prox=prox, horizon=4096, faults=CHAOS)
+    taus_stat = np.asarray(stat.raw.taus)
+    taus_chaos = np.asarray(chaos_probe.raw.taus)
+    tau_bar = float(taus_stat.mean())
+    tau_max_faulted = int(taus_chaos.max())
+    spike = tau_max_faulted / max(tau_bar, 1.0)
+    emit("fig_faults/delay_regime", 0.0,
+         f"tau_bar={tau_bar:.1f};tau_max_faulted={tau_max_faulted};"
+         f"spike={spike:.1f}x")
+
+    # phase 2: the race.  The fixed baseline is tuned to the measured
+    # worst-case bound -- the best a fixed policy can certify under this
+    # fault process
+    policies = {
+        "adaptive1": Adaptive1(gamma_prime=gp),
+        "adaptive2": Adaptive2(gamma_prime=gp),
+        "fixed_wc": FixedStepSize(gamma_prime=gp, tau_bound=tau_max_faulted),
+    }
+    race = api.run_components("piag", "batched", problem=problem,
+                              grid=_grid(problem, policies, n_events),
+                              prox=prox, horizon=4096, faults=CHAOS)
+    traces = _objective_rows(race)
+
+    finals = {n: float(t[-1]) if np.isfinite(t[-1]) else float("inf")
+              for n, t in traces.items()}
+    p0 = float(next(iter(traces.values()))[0])
+    p_star = min(finals.values())
+    target = p_star + GAP_FRACTION * (p0 - p_star)
+
+    hits = {n: _events_to(t, target) for n, t in traces.items()}
+    diverged = {n: not np.all(np.isfinite(t)) or finals[n] > p0
+                for n, t in traces.items()}
+    for n, t in traces.items():
+        emit(f"fig_faults/{n}", 0.0,
+             f"P_final={finals[n]:.4f};events_to_target="
+             f"{hits[n] if hits[n] is not None else 'never'};"
+             f"diverged={diverged[n]}")
+
+    adaptive_hits = [hits[n] for n in ("adaptive1", "adaptive2")
+                     if hits[n] is not None and not diverged[n]]
+    best_adaptive = min(adaptive_hits) if adaptive_hits else None
+    fixed_hit = hits["fixed_wc"]
+    fixed_ratio = (fixed_hit / best_adaptive
+                   if fixed_hit is not None and best_adaptive else None)
+
+    gate_spike = spike >= SPIKE_FACTOR
+    gate_adaptive = best_adaptive is not None
+    gate_fixed = diverged["fixed_wc"] or fixed_hit is None \
+        or (best_adaptive is not None
+            and fixed_hit >= WRITE_RATIO * best_adaptive)
+    gate = gate_spike and gate_adaptive and gate_fixed
+
+    result = {
+        "n_events": n_events,
+        "faults": {"p_crash": CHAOS.p_crash, "p_rejoin": CHAOS.p_rejoin,
+                   "crash_scale": CHAOS.crash_scale, "seed": CHAOS.seed},
+        "tau_bar_stationary": tau_bar,
+        "tau_max_faulted": tau_max_faulted,
+        "spike_factor": spike,
+        "target_objective": target,
+        "finals": finals,
+        "events_to_target": hits,
+        "diverged": diverged,
+        "fixed_over_adaptive_writes": fixed_ratio,
+        "fault_counters": race.telemetry.faults,
+        "gates": {"spike_ge_4x": gate_spike,
+                  "adaptive_reaches_target": gate_adaptive,
+                  "fixed_diverges_or_2x_writes": gate_fixed,
+                  "pass": gate},
+    }
+    with open(out, "w") as fh:
+        json.dump(result, fh, indent=2)
+        fh.write("\n")
+    emit("fig_faults/gate", 0.0,
+         f"pass={gate};spike={gate_spike};adaptive={gate_adaptive};"
+         f"fixed={gate_fixed};wrote={out}")
+    if not gate:
+        raise SystemExit(
+            f"fig_faults gate FAILED: spike_ge_4x={gate_spike} "
+            f"adaptive_reaches_target={gate_adaptive} "
+            f"fixed_diverges_or_2x_writes={gate_fixed} (see {out})")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--events", type=int, default=3000)
+    ap.add_argument("--out", default="BENCH_faults.json")
+    a = ap.parse_args()
+    run(n_events=a.events, out=a.out)

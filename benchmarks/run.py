@@ -1,6 +1,6 @@
 """Benchmark harness -- one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep engine_opt pallas mega roofline kernels]
+    PYTHONPATH=src python -m benchmarks.run [fig1 fig2 fig3 fig4 fig5 sweep engine_opt pallas mega roofline kernels faults]
 
 Prints ``name,us_per_call,derived`` CSV lines.  Benchmark runs that go
 through ``repro.api.run`` also append their telemetry ``RunRecord`` to a
@@ -73,6 +73,9 @@ def main() -> None:
     if want("roofline"):
         from . import roofline_report
         roofline_report.run()
+    if want("faults"):
+        from . import fig_faults
+        fig_faults.run()
 
 
 if __name__ == "__main__":

@@ -30,9 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import SweepCheckpoint
 from repro.core.bcd import run_async_bcd, sample_blocks
 from repro.core.engine import generate_trace, sample_service_times
 from repro.core.piag import run_piag
+from repro.faults.guards import summarize_faults
+from repro.faults.inject import inject_service_times
 from repro.core.problems import make_lasso, make_logreg
 from repro.core.prox import make_prox
 from repro.core.stepsize import make_policy
@@ -311,7 +314,39 @@ def _telemetry_cfg(spec: ExperimentSpec) -> Optional[TelemetryConfig]:
         if ex.telemetry else None
 
 
-def _run_piag(r: Resolved):
+# solo fault injection: the same jitted service-time transform the batched
+# cells run, applied host-side before generate_trace -- threefry bits are a
+# pure function of (fault seed, cell seed), so the injected matrix (and hence
+# the trace and every downstream row) is bitwise the batched cell's
+_INJECT_JIT = LRU(16)
+
+
+def _inject_T(T, faults, cell_seed: int):
+    fn = _INJECT_JIT.get(faults, lambda: jax.jit(
+        lambda t, s: inject_service_times(t, faults, s)))
+    return np.asarray(fn(jnp.asarray(T, jnp.float32), jnp.int32(cell_seed)))
+
+
+def _solo_cells(grid, ckpt, run_cell):
+    """The solo per-cell loop with optional per-cell checkpointing (cell
+    files keyed on (width=n_workers, idx=cell index) through the same
+    ``SweepCheckpoint`` the bucketed runners use)."""
+    rows = []
+    for i, c in enumerate(grid.cells):
+        if ckpt is not None:
+            cached = ckpt.load_bucket(c.n_workers, i)
+            if cached is not None:
+                rows.append(cached)
+                continue
+        row = run_cell(i, c)
+        if ckpt is not None:
+            row = jax.block_until_ready(row)
+            ckpt.save_bucket(c.n_workers, i, row)
+        rows.append(row)
+    return _stack_results(rows)
+
+
+def _run_piag(r: Resolved, ckpt=None):
     spec = r.spec
     loss, x0, wd, objective = _piag_pieces(r)
     h, utm = r.horizon, spec.delay.use_tau_max
@@ -319,30 +354,36 @@ def _run_piag(r: Resolved):
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
     eng = spec.execution.engine
+    fl = spec.faults
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_piag(loss, x0, wd, r.grid, r.prox,
                           objective=objective, horizon=h, use_tau_max=utm,
                           bucket_widths=bw, record_every=s, telemetry=tel,
-                          engine=eng)
+                          engine=eng, faults=fl, checkpoint=ckpt)
     if backend == "sharded":
         return sharded_sweep_piag(loss, x0, wd, r.grid, r.prox,
                                   objective=objective, horizon=h,
                                   use_tau_max=utm, mesh=_mesh_for(spec),
                                   bucket_widths=bw, record_every=s,
-                                  telemetry=tel, engine=eng)
-    rows = []
-    for c in r.grid.cells:
+                                  telemetry=tel, engine=eng, faults=fl,
+                                  checkpoint=ckpt)
+
+    def run_cell(i, c):
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
+        if fl is not None:
+            T = _inject_T(T, fl, c.seed)
         tr = generate_trace(T)
-        rows.append(run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
-                             c.policy, r.prox, objective=objective,
-                             horizon=h, use_tau_max=utm, record_every=s,
-                             telemetry=tel, engine=eng))
-    return _stack_results(rows)
+        return run_piag(loss, x0, _slice_rows(wd, c.n_workers), tr,
+                        c.policy, r.prox, objective=objective,
+                        horizon=h, use_tau_max=utm, record_every=s,
+                        telemetry=tel, engine=eng, faults=fl,
+                        fault_seed=c.seed)
+
+    return _solo_cells(r.grid, ckpt, run_cell)
 
 
-def _run_bcd(r: Resolved):
+def _run_bcd(r: Resolved, ckpt=None):
     spec = r.spec
     problem, m, h = r.problem, spec.solver.m, r.horizon
     grad_f, objective, x0 = _bcd_pieces(problem)
@@ -350,28 +391,35 @@ def _run_bcd(r: Resolved):
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
     eng = spec.execution.engine
+    fl = spec.faults
     backend = spec.execution.backend
     if backend == "batched":
         return sweep_bcd(grad_f, objective, x0, m, r.grid, r.prox,
                          horizon=h, bucket_widths=bw, record_every=s,
-                         telemetry=tel, engine=eng)
+                         telemetry=tel, engine=eng, faults=fl,
+                         checkpoint=ckpt)
     if backend == "sharded":
         return sharded_sweep_bcd(grad_f, objective, x0, m, r.grid,
                                  r.prox, horizon=h, mesh=_mesh_for(spec),
                                  bucket_widths=bw, record_every=s,
-                                 telemetry=tel, engine=eng)
-    rows = []
-    for c in r.grid.cells:
+                                 telemetry=tel, engine=eng, faults=fl,
+                                 checkpoint=ckpt)
+
+    def run_cell(i, c):
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
+        if fl is not None:
+            T = _inject_T(T, fl, c.seed)
         tr = generate_trace(T, kind="shared_memory")
         blocks = sample_blocks(m, r.grid.n_events, seed=c.seed)
-        rows.append(run_async_bcd(grad_f, objective, x0, m, tr,
-                                  blocks, c.policy, r.prox, horizon=h,
-                                  record_every=s, telemetry=tel, engine=eng))
-    return _stack_results(rows)
+        return run_async_bcd(grad_f, objective, x0, m, tr,
+                             blocks, c.policy, r.prox, horizon=h,
+                             record_every=s, telemetry=tel, engine=eng,
+                             faults=fl, fault_seed=c.seed)
+
+    return _solo_cells(r.grid, ckpt, run_cell)
 
 
-def _run_fed(r: Resolved):
+def _run_fed(r: Resolved, ckpt=None):
     spec = r.spec
     sv = spec.solver
     update, x0, data, objective = _fed_pieces(r.problem, r.prox, sv.local_lr)
@@ -381,6 +429,7 @@ def _run_fed(r: Resolved):
     s = spec.execution.record_every
     tel = _telemetry_cfg(spec)
     eng = spec.execution.engine
+    fl = spec.faults
     backend = spec.execution.backend
     if backend == "batched":
         if sv.name == "fedasync":
@@ -388,12 +437,14 @@ def _run_fed(r: Resolved):
                                   objective=objective, horizon=h,
                                   reference=spec.execution.reference,
                                   n_steps=n_steps, bucket_widths=bw,
-                                  record_every=s, telemetry=tel, engine=eng)
+                                  record_every=s, telemetry=tel, engine=eng,
+                                  faults=fl, checkpoint=ckpt)
         return sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                              buffer_size=bs, objective=objective,
                              horizon=h, reference=spec.execution.reference,
                              n_steps=n_steps, bucket_widths=bw,
-                             record_every=s, telemetry=tel, engine=eng)
+                             record_every=s, telemetry=tel, engine=eng,
+                             faults=fl, checkpoint=ckpt)
     if backend == "sharded":
         mesh = _mesh_for(spec)
         if sv.name == "fedasync":
@@ -402,33 +453,36 @@ def _run_fed(r: Resolved):
                                           buffer_size=1, horizon=h,
                                           n_steps=n_steps, mesh=mesh,
                                           bucket_widths=bw, record_every=s,
-                                          telemetry=tel, engine=eng)
+                                          telemetry=tel, engine=eng,
+                                          faults=fl, checkpoint=ckpt)
         return sharded_sweep_fedbuff(update, x0, data, r.grid, eta=sv.eta,
                                      buffer_size=bs, objective=objective,
                                      horizon=h, n_steps=n_steps, mesh=mesh,
                                      bucket_widths=bw, record_every=s,
-                                     telemetry=tel, engine=eng)
-    rows = []
-    for c in r.grid.cells:
+                                     telemetry=tel, engine=eng, faults=fl,
+                                     checkpoint=ckpt)
+
+    def run_cell(i, c):
         tr = generate_federated_trace(c.n_workers, r.grid.n_events,
                                       clients=list(c.workers),
                                       buffer_size=bs, seed=c.seed,
-                                      n_steps=n_steps)
+                                      n_steps=n_steps, faults=fl)
         cd = _slice_rows(data, c.n_workers)
         if sv.name == "fedasync":
-            rows.append(run_fedasync(update, x0, cd, tr, c.policy,
-                                     objective=objective, horizon=h,
-                                     record_every=s, telemetry=tel,
-                                     engine=eng))
-        else:
-            rows.append(run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
-                                    buffer_size=bs, objective=objective,
-                                    horizon=h, record_every=s,
-                                    telemetry=tel, engine=eng))
-    return _stack_results(rows)
+            return run_fedasync(update, x0, cd, tr, c.policy,
+                                objective=objective, horizon=h,
+                                record_every=s, telemetry=tel,
+                                engine=eng, faults=fl, fault_seed=c.seed)
+        return run_fedbuff(update, x0, cd, tr, c.policy, eta=sv.eta,
+                           buffer_size=bs, objective=objective,
+                           horizon=h, record_every=s,
+                           telemetry=tel, engine=eng, faults=fl,
+                           fault_seed=c.seed)
+
+    return _solo_cells(r.grid, ckpt, run_cell)
 
 
-_SOLVER_DISPATCH: Dict[str, Callable[[Resolved], Any]] = {
+_SOLVER_DISPATCH: Dict[str, Callable[..., Any]] = {
     "piag": _run_piag,
     "bcd": _run_bcd,
     "fedasync": _run_fed,
@@ -499,10 +553,11 @@ def _build_record(spec: ExperimentSpec, r: Resolved, raw: Any,
         clipped=analysis.clipped_summary(raw.clipped),
         policies=sorted({c.policy_name for c in grid.cells}),
         timings=list(timings),
+        faults=summarize_faults(getattr(raw, "faults", None)) or None,
     )
 
 
-def run(spec: ExperimentSpec) -> Results:
+def run(spec: ExperimentSpec, resume=None) -> Results:
     """The single entry point: resolve the spec, dispatch to the runner for
     (solver, backend), return the unified ``Results`` table.
 
@@ -510,12 +565,23 @@ def run(spec: ExperimentSpec) -> Results:
     ``Results.telemetry``; appended to the JSONL ledger when one is
     configured): the timing buffer is drained around the dispatch so
     compile-side events attribute to THIS run, and the program-cache
-    counters are snapshotted for a reset-scoped hit/miss delta."""
+    counters are snapshotted for a reset-scoped hit/miss delta.
+
+    ``resume`` names a checkpoint directory: buckets (batched/sharded) or
+    cells (solo) finished by an earlier -- possibly killed -- run of the
+    SAME spec are loaded from disk instead of recomputed, and fresh ones
+    are persisted there as they complete.  Files are fingerprint-stamped;
+    resuming a different spec into the same directory raises."""
     r = resolve(spec)
+    ckpt = None
+    if resume is not None:
+        ckpt = SweepCheckpoint(
+            resume, spec_fingerprint(spec, r.grid),
+            tag=f"{spec.solver.name}_{spec.execution.backend}")
     drain_timings()  # drop events from unrelated earlier activity
     cache_before = program_cache_stats()
     t0 = time.perf_counter()
-    raw = jax.block_until_ready(_SOLVER_DISPATCH[spec.solver.name](r))
+    raw = jax.block_until_ready(_SOLVER_DISPATCH[spec.solver.name](r, ckpt))
     elapsed = time.perf_counter() - t0
     record = _build_record(
         spec, r, raw, elapsed,
@@ -534,7 +600,7 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
                    telemetry_bins: int = 64, engine: str = "scan",
-                   **solver_kwargs) -> ExperimentSpec:
+                   faults=None, **solver_kwargs) -> ExperimentSpec:
     """A spec from prebuilt components (problem + grid + prox), bypassing
     the declarative build.  This is the form the legacy shims use; horizon
     validation and tau-bar measurement are off so shim behavior matches the
@@ -554,6 +620,7 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
         n_events=grid.n_events,
         grid=grid,
         validate_horizon=False,
+        faults=faults,
     )
 
 
@@ -561,10 +628,11 @@ def run_components(solver: str, backend: str, *, problem, grid, prox,
                    mesh=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
                    telemetry_bins: int = 64, engine: str = "scan",
-                   **solver_kwargs) -> Results:
+                   faults=None, resume=None, **solver_kwargs) -> Results:
     """``run`` over prebuilt components (see ``component_spec``)."""
     return run(component_spec(solver, backend, problem=problem, grid=grid,
                               prox=prox, mesh=mesh, reference=reference,
                               record_every=record_every, telemetry=telemetry,
                               telemetry_bins=telemetry_bins, engine=engine,
-                              **solver_kwargs))
+                              faults=faults, **solver_kwargs),
+               resume=resume)

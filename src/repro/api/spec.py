@@ -322,6 +322,14 @@ class ExperimentSpec:
     prebuilt ``sweep.SweepGrid`` bypasses the declarative topology/policy
     build entirely (used by the legacy shims).  ``validate_horizon``
     controls resolve-time horizon validation (see ``DelaySpec``).
+
+    ``faults`` (a ``repro.faults.FaultSpec``, or None) injects deterministic
+    fault processes -- crash/rejoin chains and straggler spikes into the
+    delay traces, drop/duplicate/corrupt codes into the server updates --
+    and arms the in-scan guards (NaN/Inf rejection, staleness cutoff,
+    horizon-overflow degradation).  ``faults=None`` (or a disabled spec) is
+    BITWISE the pre-fault program on every solver and backend; a set spec
+    rides every sweep-program cache key.
     """
 
     problem: ProblemSpec = dataclasses.field(default_factory=ProblemSpec)
@@ -334,6 +342,7 @@ class ExperimentSpec:
     n_events: int = 1000
     grid: Any = None
     validate_horizon: bool = True
+    faults: Any = None
 
     def __post_init__(self):
         if self.n_events < 1:
@@ -348,6 +357,18 @@ class ExperimentSpec:
                 f"record_every={self.execution.record_every} must divide "
                 f"n_events={self.n_events}")
         check_horizon(self.solver.horizon, self.delay.expected_max_delay)
+        if self.faults is not None:
+            from repro.faults.spec import normalize_faults
+            object.__setattr__(self, "faults", normalize_faults(self.faults))
+        if self.faults is not None:
+            if self.execution.engine == "fused":
+                raise ValueError(
+                    "engine='fused' does not support fault injection; use "
+                    "engine='scan'")
+            if self.execution.reference:
+                raise ValueError(
+                    "reference=True (heapq twin) does not support fault "
+                    "injection; use the fused federated trace path")
 
     def validate(self) -> "ExperimentSpec":
         """Resolve problem + grid and run the horizon validation without

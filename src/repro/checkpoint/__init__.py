@@ -1,3 +1,5 @@
 from .checkpoint import load_checkpoint, save_checkpoint
+from .sweep import SweepCheckpoint, decode_tree, encode_tree
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["load_checkpoint", "save_checkpoint", "SweepCheckpoint",
+           "encode_tree", "decode_tree"]

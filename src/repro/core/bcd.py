@@ -27,6 +27,9 @@ from .prox import ProxOp
 from .stepsize import StepsizePolicy, auto_horizon, clip_delta, clipped_count
 from ..telemetry.accumulators import (TelemetryConfig, init_telemetry,
                                       observe, emit_window, finalize)
+from ..faults.spec import CODE_CORRUPT, FaultSpec, normalize_faults
+from ..faults.inject import corrupt_value, update_fault_codes
+from ..faults.guards import guard_event, guarded_gamma, init_faults
 
 __all__ = ["BCDResult", "bcd_scan", "run_async_bcd", "run_bcd_logreg",
            "sample_blocks"]
@@ -42,6 +45,7 @@ class BCDResult(NamedTuple):
     # ^ final StepsizeState.clipped: events whose delay exceeded the policy
     #   horizon (H - 1 cap); nonzero flags an undersized horizon per cell.
     telemetry: Any = None     # DelayTelemetry when telemetry= was passed
+    faults: Any = None        # FaultState counters when faults= was passed
 
 
 def _blockify(x: jnp.ndarray, m: int):
@@ -64,6 +68,8 @@ def bcd_scan(
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
     engine: str = "scan",
+    faults: FaultSpec | None = None,
+    fault_codes: jnp.ndarray | None = None,
 ) -> BCDResult:
     """The traceable Async-BCD core (Algorithm 2 as a pure ``lax.scan``);
     shared verbatim by the solo ``run_async_bcd`` jit and the vmapped
@@ -81,9 +87,24 @@ def bcd_scan(
     ``engine='fused'`` launches lines 6-7 (policy window-sum/select/push +
     the block prox step) as one Pallas kernel per event over the active
     block row -- bitwise-equal to ``engine='scan'``; the block extract /
-    scatter stays outside the kernel."""
+    scatter stays outside the kernel.
+
+    ``faults``/``fault_codes`` switch in the guarded step (see
+    ``piag_scan``): the updated block gradient is the guarded payload --
+    corrupt events poison ``gj``, non-finite / over-stale payloads skip the
+    block write entirely -- and ``faults=None`` is bitwise the pre-fault
+    jaxpr (a separate step body, not a predicated one)."""
     if engine not in ("scan", "fused"):
         raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    faults = normalize_faults(faults)
+    if faults is not None:
+        if engine == "fused":
+            raise TypeError("engine='fused' does not support fault "
+                            "injection; use engine='scan'")
+        if fault_codes is None:
+            raise ValueError("faults is set but fault_codes is None; build "
+                             "the event codes with "
+                             "repro.faults.update_fault_codes")
     if engine == "fused":
         from ..kernels.fused_step import (as_policy_params,
                                           fused_policy_prox_step)
@@ -98,6 +119,9 @@ def bcd_scan(
     x_read0 = jnp.broadcast_to(xb0, (n_workers,) + xb0.shape)
 
     def make_step(emit):
+        if faults is not None:
+            return _make_fault_step(emit)
+
         def step(carry, event):
             xb, x_read, ss = carry[:3]
             w, tau, j = event
@@ -127,16 +151,59 @@ def bcd_scan(
                                                tau, j, wclip)
         return step
 
+    fi = 4 if telemetry is not None else 3
+
+    def _make_fault_step(emit):
+        poison = corrupt_value(faults)
+
+        def step(carry, event):
+            xb, x_read, ss = carry[:3]
+            fs = carry[fi]
+            w, tau, j, code = event
+            xhat = x_read[w]
+            g = grad_f(unpad(xhat))
+            gpad = jnp.pad(g, (0, m * db - d)).reshape(m, db)
+            gj = gpad[j] + jnp.where(code == CODE_CORRUPT, poison,
+                                     jnp.float32(0.0))
+            finite = jnp.all(jnp.isfinite(gj)) if faults.guard_nonfinite \
+                else jnp.ones((), jnp.bool_)
+            accept, mult, fs = guard_event(faults, code, tau, finite, fs)
+            ss_old = ss
+            gamma, ss, fs = guarded_gamma(policy, ss, tau, mult, faults, fs)
+            xj_cand = prox.prox(xb[j] - gamma * gj, gamma)
+            xj_new = jnp.where(accept, xj_cand, xb[j])
+            xb_new = xb.at[j].set(xj_new)
+            x_read = x_read.at[w].set(xb_new)
+            tel = None
+            if telemetry is not None:
+                tel = observe(carry[3], tau, gamma, clip_delta(ss_old, ss))
+            extras = ((tel,) if telemetry is not None else ()) + (fs,)
+            if not emit:
+                return (xb_new, x_read, ss) + extras, None
+            wtail = ()
+            if telemetry is not None:
+                tel, wclip = emit_window(tel)
+                extras = (tel, fs)
+                wtail = (wclip,)
+            out = (objective(unpad(xb_new)), gamma, tau, j) + wtail
+            return (xb_new, x_read, ss) + extras, out
+        return step
+
+    if faults is not None:
+        events = tuple(events) + (jnp.asarray(fault_codes, jnp.int32),)
     carry0 = (xb0, x_read0, policy.init(horizon))
     if telemetry is not None:
         carry0 = carry0 + (init_telemetry(telemetry),)
+    if faults is not None:
+        carry0 = carry0 + (init_faults(),)
     carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
     xb_fin, ss_fin = carry_fin[0], carry_fin[2]
     obj, gam, taus, blk = outs[:4]
     tel_out = finalize(carry_fin[3], outs[4]) if telemetry is not None else None
+    faults_out = carry_fin[fi] if faults is not None else None
     return BCDResult(x=unpad(xb_fin), objective=obj, gammas=gam, taus=taus,
                      blocks=blk, clipped=clipped_count(ss_fin),
-                     telemetry=tel_out)
+                     telemetry=tel_out, faults=faults_out)
 
 
 def run_async_bcd(
@@ -152,6 +219,8 @@ def run_async_bcd(
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
     engine: str = "scan",
+    faults: FaultSpec | None = None,
+    fault_seed: int = 0,
 ) -> BCDResult:
     n = int(trace.worker.max()) + 1 if trace.n_events else 1
     if horizon == "auto":  # measured-delay sizing off the trace itself
@@ -161,14 +230,28 @@ def run_async_bcd(
         jnp.asarray(trace.tau, jnp.int32),
         jnp.asarray(blocks, jnp.int32),
     )
+    faults = normalize_faults(faults)
+
+    if faults is None:
+        @jax.jit
+        def run(events):
+            return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
+                            horizon=horizon, record_every=record_every,
+                            telemetry=telemetry, engine=engine)
+
+        return run(events)
+
+    n_events = int(events[0].shape[0])
 
     @jax.jit
-    def run(events):
+    def run_faulted(events, fseed):
+        codes = update_fault_codes(faults, n_events, fseed)
         return bcd_scan(grad_f, objective, x0, m, n, events, policy, prox,
                         horizon=horizon, record_every=record_every,
-                        telemetry=telemetry, engine=engine)
+                        telemetry=telemetry, engine=engine,
+                        faults=faults, fault_codes=codes)
 
-    return run(events)
+    return run_faulted(events, jnp.int32(fault_seed))
 
 
 def sample_blocks(m: int, n_events: int, seed: int = 0) -> np.ndarray:

@@ -33,6 +33,10 @@ from .stepsize import (StepsizePolicy, StepsizeState, auto_horizon, clip_delta,
                        clipped_count as _clipped_of)
 from ..telemetry.accumulators import (TelemetryConfig, init_telemetry,
                                       observe, emit_window, finalize)
+from ..faults.spec import CODE_CORRUPT, FaultSpec, normalize_faults
+from ..faults.inject import corrupt_value, update_fault_codes
+from ..faults.guards import (guard_event, guarded_gamma, init_faults,
+                             payload_finite)
 
 __all__ = ["PIAGResult", "piag_scan", "run_piag", "run_piag_logreg"]
 
@@ -50,6 +54,7 @@ class PIAGResult(NamedTuple):
     telemetry: Any = None     # DelayTelemetry when telemetry= was passed
     # ^ trailing optional field: existing positional construction and the
     #   bitwise row-equivalence pins over the other leaves are unaffected.
+    faults: Any = None        # FaultState counters when faults= was passed
 
 
 def piag_scan(
@@ -65,6 +70,8 @@ def piag_scan(
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
     engine: str = "scan",
+    faults: FaultSpec | None = None,
+    fault_codes: jnp.ndarray | None = None,
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -103,9 +110,29 @@ def piag_scan(
     equal to ``engine='scan'`` and telemetry-neutral (the accumulator rides
     the same carry either way).  Requires a single-1-D-leaf iterate and a
     ``PolicyParams``-expressible policy; both are checked loudly.
+
+    ``faults=FaultSpec(...)`` (with a ``fault_codes`` event column from
+    ``repro.faults.update_fault_codes``) switches in the guarded step:
+    drop/dup/corrupt codes are applied to the returning worker's gradient,
+    non-finite or over-stale payloads are rejected (skip-and-count; the
+    gradient table keeps its previous row so one corrupt worker never
+    poisons the aggregate), horizon overflow degrades to the
+    worst-case-bound ``gamma'/(tau+1)``, and a ``FaultState`` counter tuple
+    rides the carry onto ``result.faults``.  ``faults=None`` is bitwise the
+    pre-fault jaxpr -- the guarded body is a SEPARATE code path, not a
+    predicated version of the old one.
     """
     if engine not in ("scan", "fused"):
         raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    faults = normalize_faults(faults)
+    if faults is not None:
+        if engine == "fused":
+            raise TypeError("engine='fused' does not support fault "
+                            "injection; use engine='scan'")
+        if fault_codes is None:
+            raise ValueError("faults is set but fault_codes is None; build "
+                             "the event codes with "
+                             "repro.faults.update_fault_codes")
     if engine == "fused":
         from ..kernels.fused_step import (as_policy_params, fused_leaf,
                                           fused_policy_prox_step)
@@ -143,6 +170,9 @@ def piag_scan(
     x_read0 = jax.tree_util.tree_map(lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), x0)
 
     def make_step(emit):
+        if faults is not None:
+            return _make_fault_step(emit)
+
         def step(carry, event):
             x, gtab, x_read, ss = carry[:4]
             w, tau = event
@@ -184,18 +214,79 @@ def piag_scan(
             return (x_new, gtab, x_read, ss, tel), out + (wclip,)
         return step
 
+    # Index of the FaultState in the carry (after the optional telemetry).
+    fi = 5 if telemetry is not None else 4
+
+    def _make_fault_step(emit):
+        poison = corrupt_value(faults)
+
+        def step(carry, event):
+            x, gtab, x_read, ss = carry[:4]
+            fs = carry[fi]
+            w, tau, code = event
+            xw = jax.tree_util.tree_map(lambda leaf: leaf[w], x_read)
+            gw = grad_i(xw, *jax.tree_util.tree_leaves(data_at(w)))
+            # update-level corruption: poison the payload BEFORE the guard
+            gw = jax.tree_util.tree_map(
+                lambda a: (a + jnp.where(code == CODE_CORRUPT, poison,
+                                         jnp.float32(0.0))).astype(a.dtype),
+                gw)
+            finite = payload_finite(gw) if faults.guard_nonfinite \
+                else jnp.ones((), jnp.bool_)
+            accept, mult, fs = guard_event(faults, code, tau, finite, fs)
+            # rejected updates keep the worker's PREVIOUS table row: one
+            # corrupt gradient must never poison the aggregate
+            gtab = jax.tree_util.tree_map(
+                lambda buf, gnew: buf.at[w].set(
+                    jnp.where(accept, gnew, buf[w])), gtab, gw)
+            g = jax.tree_util.tree_map(aggregate, gtab)
+            ss_old = ss
+            gamma, ss, fs = guarded_gamma(policy, ss, tau, mult, faults, fs)
+            x_cand = prox.prox(
+                jax.tree_util.tree_map(
+                    lambda xv, gv: xv - gamma * gv, x, g), gamma)
+            x_new = jax.tree_util.tree_map(
+                lambda cnd, old: jnp.where(accept, cnd, old), x_cand, x)
+            # the worker refetches the latest iterate either way (a rejected
+            # worker rejoins on fresh state, shrinking its next staleness)
+            x_read = jax.tree_util.tree_map(
+                lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            tel = None
+            if telemetry is not None:
+                tel = observe(carry[4], tau, gamma, clip_delta(ss_old, ss))
+            extras = ((tel,) if telemetry is not None else ()) + (fs,)
+            if not emit:
+                return (x_new, gtab, x_read, ss) + extras, None
+            wtail = ()
+            if telemetry is not None:
+                tel, wclip = emit_window(tel)
+                extras = (tel, fs)
+                wtail = (wclip,)
+            dx = jnp.sqrt(sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                jax.tree_util.tree_leaves(x_new),
+                jax.tree_util.tree_leaves(x))))
+            res = jnp.where(gamma > 0, dx / jnp.maximum(gamma, 1e-30), 0.0)
+            out = (objective(x_new), gamma, tau, res) + wtail
+            return (x_new, gtab, x_read, ss) + extras, out
+        return step
+
+    if faults is not None:
+        events = tuple(events) + (jnp.asarray(fault_codes, jnp.int32),)
     carry0 = (x0, g_table, x_read0, policy.init(horizon))
     if telemetry is not None:
         carry0 = carry0 + (init_telemetry(telemetry),)
+    if faults is not None:
+        carry0 = carry0 + (init_faults(),)
     carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
     x_fin, ss_fin = carry_fin[0], carry_fin[3]
     obj, gam, taus, res = outs[:4]
     tel_out = None
     if telemetry is not None:
         tel_out = finalize(carry_fin[4], outs[4])
+    faults_out = carry_fin[fi] if faults is not None else None
     return PIAGResult(x=x_fin, objective=obj, gammas=gam, taus=taus,
                       opt_residual=res, clipped=_clipped_of(ss_fin),
-                      telemetry=tel_out)
+                      telemetry=tel_out, faults=faults_out)
 
 
 def run_piag(
@@ -211,6 +302,8 @@ def run_piag(
     record_every: int = 1,
     telemetry: TelemetryConfig | None = None,
     engine: str = "scan",
+    faults: FaultSpec | None = None,
+    fault_seed: int = 0,
 ) -> PIAGResult:
     """Run PIAG over a write-event trace; everything under one jit.
 
@@ -218,7 +311,10 @@ def run_piag(
     own measured delays (``auto_horizon``) instead of the 4096 worst-case
     default -- bitwise-identical output, a fraction of the scan carry.
     ``engine='fused'`` routes the per-event policy + prox update through
-    the fused Pallas kernel (see ``piag_scan``)."""
+    the fused Pallas kernel (see ``piag_scan``).  ``faults`` enables the
+    guarded step (``piag_scan``); the per-event drop/dup/corrupt codes are
+    drawn inside the jit from ``fault_seed`` (the cell seed), so solo runs
+    match the batched sweep bitwise under faults."""
     taus = trace.tau_max if use_tau_max else trace.tau
     if horizon == "auto":
         horizon = auto_horizon(int(np.max(taus, initial=0)))
@@ -226,15 +322,29 @@ def run_piag(
         jnp.asarray(trace.worker, jnp.int32),
         jnp.asarray(taus, jnp.int32),
     )
+    faults = normalize_faults(faults)
+
+    if faults is None:
+        @jax.jit
+        def run(events):
+            return piag_scan(worker_loss, x0, worker_data, events, policy,
+                             prox, objective=objective, horizon=horizon,
+                             record_every=record_every, telemetry=telemetry,
+                             engine=engine)
+
+        return run(events)
+
+    n_events = int(events[0].shape[0])
 
     @jax.jit
-    def run(events):
+    def run_faulted(events, fseed):
+        codes = update_fault_codes(faults, n_events, fseed)
         return piag_scan(worker_loss, x0, worker_data, events, policy, prox,
                          objective=objective, horizon=horizon,
                          record_every=record_every, telemetry=telemetry,
-                         engine=engine)
+                         engine=engine, faults=faults, fault_codes=codes)
 
-    return run(events)
+    return run_faulted(events, jnp.int32(fault_seed))
 
 
 def run_piag_lipschitz(problem, trace, prox, h: float = 0.9,

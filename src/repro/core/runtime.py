@@ -17,6 +17,29 @@ Two runtimes:
 These produce the paper's Figure 2-4 style traces with *real* asynchrony on
 this container's cores.  Determinism is not guaranteed (that is the point);
 the event-driven engine (core.engine) is the deterministic twin.
+
+Resilience contract (the chaos-tested layer)
+--------------------------------------------
+
+Real threads really die, so both runtimes are hardened:
+
+* the PIAG master never blocks forever on ``out_q.get``: it polls with a
+  short timeout, re-raises a crashed worker's exception (chained) within
+  ``heartbeat`` seconds, and raises ``RuntimeError`` when every worker is
+  dead or ``TimeoutError`` when live workers produce nothing for a full
+  heartbeat;
+* worker crashes are counted (``RunLog.crashes``) and -- with
+  ``respawn=True`` -- the master respawns the worker, RE-STAMPS its
+  ``DelayTracker`` entry at the current write count (a rejoining worker
+  must not carry its pre-crash staleness), re-sends the current iterate,
+  and counts the respawn (``RunLog.respawns``);
+* queues are bounded (no unbounded buildup when one side stalls) and
+  shutdown drains ``out_q`` so no worker is left blocked on a full queue;
+* ``join(timeout)`` failures are no longer silent: each leaked thread
+  emits a warning and bumps ``RunLog.join_failures``;
+* ``SharedMemoryBCD`` propagates worker exceptions to the master (which
+  otherwise spins forever on the write counter) and applies the same
+  join accounting.
 """
 from __future__ import annotations
 
@@ -24,6 +47,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from typing import Callable, List, Optional
 
 import jax
@@ -34,7 +58,12 @@ from .delay import DelayTracker
 from .prox import ProxOp
 from .stepsize import StepsizePolicy
 
-__all__ = ["PIAGServer", "SharedMemoryBCD", "RunLog"]
+__all__ = ["PIAGServer", "SharedMemoryBCD", "RunLog", "WorkerCrash"]
+
+
+class WorkerCrash(RuntimeError):
+    """A worker thread died and the runtime surfaced it (original exception
+    chained as ``__cause__``)."""
 
 
 @dataclasses.dataclass
@@ -44,6 +73,10 @@ class RunLog:
     taus: List[int] = dataclasses.field(default_factory=list)
     taus_per_worker: List[np.ndarray] = dataclasses.field(default_factory=list)
     wall: List[float] = dataclasses.field(default_factory=list)
+    # resilience accounting (see module docstring)
+    crashes: int = 0          # worker threads that died mid-run
+    respawns: int = 0         # crashed workers revived (respawn=True)
+    join_failures: int = 0    # threads still alive after join(timeout)
 
     def as_arrays(self):
         return (np.array(self.objective), np.array(self.gammas),
@@ -55,13 +88,21 @@ class PIAGServer:
 
     def __init__(self, problem, policy: StepsizePolicy, prox: ProxOp,
                  n_workers: Optional[int] = None, record_every: int = 1,
-                 worker_sleep: Optional[Callable[[int], float]] = None):
+                 worker_sleep: Optional[Callable[[int], float]] = None,
+                 heartbeat: float = 5.0, respawn: bool = False,
+                 max_respawns: int = 2):
         self.problem = problem
         self.policy = policy
         self.prox = prox
         self.n = n_workers or problem.n_workers
         self.record_every = record_every
         self.worker_sleep = worker_sleep  # optional artificial heterogeneity
+        # resilience knobs: heartbeat bounds how long the master waits for
+        # ANY worker result before declaring the run wedged; respawn revives
+        # crashed workers (up to max_respawns each) instead of aborting
+        self.heartbeat = float(heartbeat)
+        self.respawn = bool(respawn)
+        self.max_respawns = int(max_respawns)
         Aw, bw = problem.worker_slices()
         self._Aw = [np.asarray(Aw[i]) for i in range(self.n)]
         self._bw = [np.asarray(bw[i]) for i in range(self.n)]
@@ -74,27 +115,84 @@ class PIAGServer:
     def run(self, n_events: int, x0: Optional[np.ndarray] = None) -> RunLog:
         d = self.problem.dim
         x = jnp.zeros((d,), jnp.float32) if x0 is None else jnp.asarray(x0)
-        in_q = [queue.Queue() for _ in range(self.n)]   # master -> worker i
-        out_q = queue.Queue()                           # workers -> master
+        # bounded queues: a master-sent iterate per worker plus slack on the
+        # return path -- a stalled peer can never grow a queue without bound
+        in_q = [queue.Queue(maxsize=2) for _ in range(self.n)]
+        out_q = queue.Queue(maxsize=2 * self.n + 1)
         stop = threading.Event()
         tracker = DelayTracker()
+        errors: dict = {}        # worker index -> boxed exception
+        log = RunLog()
 
         def worker(i: int):
-            while not stop.is_set():
+            try:
+                while not stop.is_set():
+                    try:
+                        xk, k = in_q[i].get(timeout=0.1)
+                    except queue.Empty:
+                        continue
+                    if self.worker_sleep is not None:
+                        time.sleep(self.worker_sleep(i))
+                    g = self._grad_i(xk, self._Aw[i], self._bw[i])
+                    g.block_until_ready()   # compute outside the master's loop
+                    out_q.put((i, g, k))
+            except BaseException as exc:    # box it; master re-raises
+                errors[i] = exc
                 try:
-                    xk, k = in_q[i].get(timeout=0.1)
-                except queue.Empty:
-                    continue
-                if self.worker_sleep is not None:
-                    time.sleep(self.worker_sleep(i))
-                g = self._grad_i(xk, self._Aw[i], self._bw[i])
-                g.block_until_ready()   # compute outside the master's loop
-                out_q.put((i, g, k))
+                    out_q.put_nowait(("__crash__", i, exc))  # wake the master
+                except queue.Full:
+                    pass
 
-        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
-                   for i in range(self.n)]
-        for t in threads:
+        def spawn(i: int) -> threading.Thread:
+            t = threading.Thread(target=worker, args=(i,), daemon=True)
             t.start()
+            return t
+
+        threads = [spawn(i) for i in range(self.n)]
+
+        def get_result(k: int):
+            """out_q.get with a heartbeat: surfaces crashed workers instead
+            of blocking forever (the old master deadlocked here)."""
+            waited = 0.0
+            while True:
+                try:
+                    msg = out_q.get(timeout=0.25)
+                except queue.Empty:
+                    waited += 0.25
+                    live = [t.is_alive() for t in threads]
+                    if errors and not self.respawn:
+                        i = next(iter(errors))
+                        raise WorkerCrash(
+                            f"worker {i} died at write event {k}"
+                        ) from errors[i]
+                    if not any(live):
+                        raise WorkerCrash(
+                            f"all {self.n} workers dead at write event {k}")
+                    if waited >= self.heartbeat:
+                        raise TimeoutError(
+                            f"no worker result within heartbeat="
+                            f"{self.heartbeat}s at write event {k} "
+                            f"({sum(live)}/{self.n} workers alive)")
+                    continue
+                if msg[0] == "__crash__":
+                    _, i, exc = msg
+                    log.crashes += 1
+                    if self.respawn and self._respawn_budget[i] > 0:
+                        self._respawn_budget[i] -= 1
+                        log.respawns += 1
+                        # rejoin semantics: the revived worker restarts from
+                        # the CURRENT iterate/version -- re-stamp its tracker
+                        # entry so it does not carry pre-crash staleness
+                        tracker.stamp(i, k)
+                        threads[i] = spawn(i)
+                        errors.pop(i, None)
+                        in_q[i].put((self._x_live, k))
+                        continue
+                    raise WorkerCrash(
+                        f"worker {i} died at write event {k}") from exc
+                return msg
+
+        self._respawn_budget = {i: self.max_respawns for i in range(self.n)}
 
         # Algorithm 1 init: g^(i) = grad f_i(x_0)
         g_table = [self._grad_i(x, self._Aw[i], self._bw[i]) for i in range(self.n)]
@@ -103,35 +201,51 @@ class PIAGServer:
             tracker.stamp(i, 0)
             in_q[i].put((x, 0))
 
-        log = RunLog()
         t0 = time.perf_counter()
         ss = self._ss
-        for k in range(n_events):
-            i, g_new, s_read = out_q.get()
-            # lines 11-13: replace worker i's table entry, stamp s^(i)
-            g_sum = g_sum - g_table[i] + g_new
-            g_table[i] = g_new
-            tracker.k = k
-            tracker.stamp(i, s_read)
-            # line 15: tau_k^(i) = k - s^(i); policy consumes max_i tau_k^(i)
-            delays = tracker.delays()
-            tau = max(delays.values())
-            gamma, ss = self._ss_step(ss, jnp.int32(tau))
-            gamma_f = float(gamma)
-            # line 17: x_{k+1} = prox_{gamma R}(x_k - gamma g_k)
-            x = self.prox.prox(x - gamma * (g_sum / self.n), gamma)
-            # line 20: send x_{k+1} (version k+1) back to the idle worker
-            tracker.stamp(i, k + 1)
-            in_q[i].put((x, k + 1))
-            if k % self.record_every == 0:
-                log.objective.append(float(self._P(x)))
-                log.gammas.append(gamma_f)
-                log.taus.append(int(tau))
-                log.taus_per_worker.append(np.array(sorted(delays.values())))
-                log.wall.append(time.perf_counter() - t0)
-        stop.set()
-        for t in threads:
-            t.join(timeout=1.0)
+        self._x_live = x
+        try:
+            for k in range(n_events):
+                i, g_new, s_read = get_result(k)
+                # lines 11-13: replace worker i's table entry, stamp s^(i)
+                g_sum = g_sum - g_table[i] + g_new
+                g_table[i] = g_new
+                tracker.k = k
+                tracker.stamp(i, s_read)
+                # line 15: tau_k^(i) = k - s^(i); policy consumes max tau_k^(i)
+                delays = tracker.delays()
+                tau = max(delays.values())
+                gamma, ss = self._ss_step(ss, jnp.int32(tau))
+                gamma_f = float(gamma)
+                # line 17: x_{k+1} = prox_{gamma R}(x_k - gamma g_k)
+                x = self.prox.prox(x - gamma * (g_sum / self.n), gamma)
+                self._x_live = x
+                # line 20: send x_{k+1} (version k+1) back to the idle worker
+                tracker.stamp(i, k + 1)
+                in_q[i].put((x, k + 1))
+                if k % self.record_every == 0:
+                    log.objective.append(float(self._P(x)))
+                    log.gammas.append(gamma_f)
+                    log.taus.append(int(tau))
+                    log.taus_per_worker.append(np.array(sorted(delays.values())))
+                    log.wall.append(time.perf_counter() - t0)
+        finally:
+            stop.set()
+            # drain the bounded return queue so no worker stays blocked on a
+            # full out_q.put while we try to join it
+            try:
+                while True:
+                    out_q.get_nowait()
+            except queue.Empty:
+                pass
+            for i, t in enumerate(threads):
+                t.join(timeout=1.0)
+                if t.is_alive():
+                    log.join_failures += 1
+                    warnings.warn(
+                        f"PIAGServer worker {i} did not exit within 1s of "
+                        "stop; thread leaked (daemon -- it dies with the "
+                        "process)", RuntimeWarning, stacklevel=2)
         self.x_final = np.asarray(x)
         return log
 
@@ -167,48 +281,46 @@ class SharedMemoryBCD:
         t0 = time.perf_counter()
         stop = threading.Event()
 
+        errors: dict = {}        # worker index -> boxed exception
+
         def worker(i: int):
-            rng = np.random.default_rng(self.seed + i)
-            while not stop.is_set():
-                s_read = counter["k"]            # Algorithm 2 line 10 (stamp)
-                xhat = x.copy()                  # unlocked read -> inconsistent
-                j = int(rng.integers(0, self.m))  # line 3
-                g = np.asarray(self._grad(jnp.asarray(xhat)))  # line 4
-                lo, hi = j * self.db, min((j + 1) * self.db, d)
-                gj = g[lo:hi]
-                x_snap = None
-                with lock:                        # lines 5-9 critical section
-                    k = counter["k"]
-                    if k >= n_events:
-                        return
-                    tau = k - s_read              # line 5
-                    gamma, ss_box["ss"] = self._ss_step(ss_box["ss"], jnp.int32(tau))
-                    gamma_f = float(gamma)        # line 6
-                    xj = x[lo:hi] - gamma_f * gj
-                    x[lo:hi] = np.asarray(self.prox.prox(jnp.asarray(xj), gamma_f))
-                    counter["k"] = k + 1          # line 9 (write event)
-                    if k % self.record_every == 0:
-                        # record scalars + an iterate snapshot inside the
-                        # lock; the O(Nd) objective matvec runs OUTSIDE it so
-                        # workers are not serialized on a jitted dense matvec
-                        # every record_every events
-                        log.gammas.append(gamma_f)
-                        log.taus.append(int(tau))
-                        log.wall.append(time.perf_counter() - t0)
-                        x_snap = (k, x.copy())
-                if x_snap is not None:
-                    k_rec, xs = x_snap
-                    objectives[k_rec] = float(self._P(jnp.asarray(xs)))
+            try:
+                self._bcd_loop(i, n_events, x, lock, counter, ss_box, log,
+                               objectives, stop, t0, d)
+            except BaseException as exc:
+                errors[i] = exc
 
         threads = [threading.Thread(target=worker, args=(i,), daemon=True)
                    for i in range(self.n)]
         for t in threads:
             t.start()
+        # the master owns no events here (Algorithm 2 is fully decentralized)
+        # -- it only waits for the write counter.  The old loop spun forever
+        # if every worker died; now dead/excepted workers surface.
         while counter["k"] < n_events:
             time.sleep(0.01)
+            if errors:
+                stop.set()
+                i = next(iter(errors))
+                raise WorkerCrash(
+                    f"SharedMemoryBCD worker {i} died at write event "
+                    f"{counter['k']}/{n_events}") from errors[i]
+            if not any(t.is_alive() for t in threads):
+                if counter["k"] >= n_events:
+                    break   # workers finished between the two checks
+                raise WorkerCrash(
+                    f"all {self.n} BCD workers exited at write event "
+                    f"{counter['k']}/{n_events} without finishing")
         stop.set()
-        for t in threads:
+        for i, t in enumerate(threads):
             t.join(timeout=5.0)
+            if t.is_alive():
+                log.join_failures += 1
+                warnings.warn(
+                    f"SharedMemoryBCD worker {i} did not exit within 5s of "
+                    "stop; thread leaked (daemon -- it dies with the "
+                    "process)", RuntimeWarning, stacklevel=2)
+        log.crashes = len(errors)
         # scalar rows were appended in write-event order under the lock;
         # reassemble the objective column in the same order.  If a straggler
         # thread outlived the join with its deferred P(x) still pending, trim
@@ -220,3 +332,37 @@ class SharedMemoryBCD:
         log.objective.extend(obj_sorted)
         self.x_final = x.copy()
         return log
+
+    def _bcd_loop(self, i: int, n_events: int, x, lock, counter, ss_box,
+                  log, objectives, stop, t0, d):
+        rng = np.random.default_rng(self.seed + i)
+        while not stop.is_set():
+            s_read = counter["k"]            # Algorithm 2 line 10 (stamp)
+            xhat = x.copy()                  # unlocked read -> inconsistent
+            j = int(rng.integers(0, self.m))  # line 3
+            g = np.asarray(self._grad(jnp.asarray(xhat)))  # line 4
+            lo, hi = j * self.db, min((j + 1) * self.db, d)
+            gj = g[lo:hi]
+            x_snap = None
+            with lock:                        # lines 5-9 critical section
+                k = counter["k"]
+                if k >= n_events:
+                    return
+                tau = k - s_read              # line 5
+                gamma, ss_box["ss"] = self._ss_step(ss_box["ss"], jnp.int32(tau))
+                gamma_f = float(gamma)        # line 6
+                xj = x[lo:hi] - gamma_f * gj
+                x[lo:hi] = np.asarray(self.prox.prox(jnp.asarray(xj), gamma_f))
+                counter["k"] = k + 1          # line 9 (write event)
+                if k % self.record_every == 0:
+                    # record scalars + an iterate snapshot inside the
+                    # lock; the O(Nd) objective matvec runs OUTSIDE it so
+                    # workers are not serialized on a jitted dense matvec
+                    # every record_every events
+                    log.gammas.append(gamma_f)
+                    log.taus.append(int(tau))
+                    log.wall.append(time.perf_counter() - t0)
+                    x_snap = (k, x.copy())
+            if x_snap is not None:
+                k_rec, xs = x_snap
+                objectives[k_rec] = float(self._P(jnp.asarray(xs)))

@@ -1,0 +1,28 @@
+"""Fault injection & resilience (`repro.faults`).
+
+Chaos-testing layer for the delay-adaptive solvers: deterministic,
+jittable fault processes (crash/rejoin staleness spikes, heavy-tail
+stragglers, dropped/duplicated/corrupted updates) injected into trace
+generation and the solver scans, plus in-scan guards (non-finite
+rejection, staleness cutoff, horizon-overflow graceful degradation) with
+counters riding the telemetry carry.
+
+Contract (mirrors ``repro.telemetry``): ``faults=None`` -- or a spec
+normalized away by :func:`normalize_faults` -- yields bitwise the
+pre-fault jaxpr, and `FaultSpec` rides every program-cache key.
+"""
+from repro.faults.spec import (FAULT_PRESETS, FaultSpec, normalize_faults,
+                               parse_faults)
+from repro.faults.inject import (corrupt_value, inject_client_rounds,
+                                 inject_service_times, update_fault_codes)
+from repro.faults.guards import (FaultState, fault_gamma_prime, guard_event,
+                                 guarded_gamma, init_faults, payload_finite,
+                                 summarize_faults)
+
+__all__ = [
+    "FaultSpec", "normalize_faults", "parse_faults", "FAULT_PRESETS",
+    "inject_service_times", "inject_client_rounds", "update_fault_codes",
+    "corrupt_value",
+    "FaultState", "init_faults", "guard_event", "guarded_gamma",
+    "payload_finite", "fault_gamma_prime", "summarize_faults",
+]

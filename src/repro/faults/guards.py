@@ -1,0 +1,153 @@
+"""In-scan guards: reject, degrade, count.
+
+The solver scans call two helpers per event when a ``FaultSpec`` is
+present:
+
+* :func:`guard_event` -- given the event's fault code, payload finiteness
+  and delay, decide acceptance and the step multiplier (0 = skip, 1 =
+  normal, 2 = duplicated update);
+* :func:`guarded_gamma` -- compute gamma WITHOUT pushing (via the
+  policy's ``_gamma`` split), apply graceful degradation on horizon
+  overflow (fall back to the worst-case-bound ``gamma' / (tau + 1)``
+  instead of trusting a silently-truncated window sum), scale by the
+  multiplier, and push ONCE.
+
+Counters ride the scan carry as a :class:`FaultState` (all int32
+scalars), exactly like ``telemetry.TelemetryState`` -- reduced on-device,
+summed over cells host-side by :func:`summarize_faults`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.faults.spec import (CODE_CORRUPT, CODE_DROP, CODE_DUP, FaultSpec)
+
+__all__ = ["FaultState", "init_faults", "guard_event", "guarded_gamma",
+           "payload_finite", "summarize_faults", "fault_gamma_prime"]
+
+
+class FaultState(NamedTuple):
+    """Per-cell fault counters (int32 scalars) riding the scan carry."""
+
+    injected: jnp.ndarray            # corrupt codes seen (payload poisoned)
+    dropped: jnp.ndarray             # drop codes seen (update lost)
+    duplicated: jnp.ndarray          # dup codes applied (2*gamma steps)
+    rejected_nonfinite: jnp.ndarray  # guard: non-finite payload skipped
+    rejected_stale: jnp.ndarray      # guard: tau > staleness_cutoff skipped
+    degraded: jnp.ndarray            # guard: worst-case-bound gamma fallback
+
+
+def init_faults() -> FaultState:
+    z = jnp.zeros((), jnp.int32)
+    return FaultState(z, z, z, z, z, z)
+
+
+def payload_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every leaf of the update payload is finite."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    ok = jnp.ones((), jnp.bool_)
+    for leaf in leaves:
+        ok = ok & jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def guard_event(spec: FaultSpec, code, tau, finite, fs: FaultState
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, FaultState]:
+    """Acceptance decision for one event.
+
+    Returns ``(accept, mult, fs)``: ``accept`` scalar bool (apply a server
+    write at all), ``mult`` float32 in {0, 1, 2} (step multiplier), and
+    the advanced counters.  ``finite`` is the payload finiteness AFTER
+    corruption injection; with ``guard_nonfinite`` off, non-finite
+    payloads pass through (documented chaos mode -- NaN then propagates,
+    which is the failure the guard exists to prevent).
+    """
+    code = jnp.asarray(code, jnp.int32)
+    is_drop = code == CODE_DROP
+    is_dup = code == CODE_DUP
+    is_corrupt = code == CODE_CORRUPT
+
+    finite_ok = finite | (not spec.guard_nonfinite)
+    if spec.staleness_cutoff is not None:
+        fresh = jnp.asarray(tau, jnp.int32) <= jnp.int32(spec.staleness_cutoff)
+    else:
+        fresh = jnp.ones((), jnp.bool_)
+
+    accept = (~is_drop) & finite_ok & fresh
+    mult = jnp.where(accept, jnp.where(is_dup, 2.0, 1.0), 0.0
+                     ).astype(jnp.float32)
+
+    one = jnp.int32(1)
+    zero = jnp.int32(0)
+    fs = FaultState(
+        injected=fs.injected + jnp.where(is_corrupt, one, zero),
+        dropped=fs.dropped + jnp.where(is_drop, one, zero),
+        duplicated=fs.duplicated + jnp.where(is_dup & accept, one, zero),
+        rejected_nonfinite=fs.rejected_nonfinite
+        + jnp.where((~is_drop) & ~finite_ok, one, zero),
+        rejected_stale=fs.rejected_stale
+        + jnp.where((~is_drop) & finite_ok & ~fresh, one, zero),
+        degraded=fs.degraded,
+    )
+    return accept, mult, fs
+
+
+def fault_gamma_prime(policy) -> jnp.ndarray:
+    """The policy's gamma' as a traceable float32 -- static float on the
+    concrete dataclasses, the traced params field on ``ParamPolicy``."""
+    params = getattr(policy, "params", None)
+    if params is not None:
+        return jnp.asarray(params.gamma_prime, jnp.float32)
+    return jnp.asarray(np.float32(policy.gamma_prime))
+
+
+def guarded_gamma(policy, ss, tau, mult, spec: FaultSpec, fs: FaultState
+                  ) -> Tuple[jnp.ndarray, Any, FaultState]:
+    """Gamma with guards, pushed once.
+
+    Splits the policy step via ``_gamma`` (every sweep-able policy has
+    one; ``AdaptiveLipschitz`` does not and is rejected at dispatch), then:
+
+    * horizon overflow (``was_clipped``): with ``degrade_on_clip``, fall
+      back to the worst-case-bound step ``gamma' / (tau + 1)`` -- the
+      FixedStepSize rule evaluated at the OBSERVED delay -- instead of the
+      window-based gamma whose sum was silently truncated;
+    * scale by ``mult`` (0 skip / 1 normal / 2 duplicate) -- the scaled
+      gamma is what enters the cumulative window buffer, so future window
+      sums reflect the progress actually applied.
+
+    Returns ``(gamma_eff, new_ss, fs)``.
+    """
+    # deferred: repro.core imports this module (scan cores use the guards),
+    # so a top-level stepsize import would be circular for `import repro.faults`
+    from repro.core.stepsize import _push
+
+    gamma_fn = getattr(policy, "_gamma", None)
+    if gamma_fn is None:
+        raise TypeError(
+            f"{type(policy).__name__} exposes no _gamma split; fault guards "
+            "cannot intercept its step (use a window/fixed-family policy, "
+            "or run without faults)")
+    gamma, was_clipped = gamma_fn(ss, tau)
+    gamma = jnp.asarray(gamma, jnp.float32)
+    if spec.degrade_on_clip:
+        clipped_b = jnp.asarray(was_clipped, jnp.int32) > 0
+        fallback = fault_gamma_prime(policy) \
+            / (jnp.asarray(tau, jnp.float32) + 1.0)
+        gamma = jnp.where(clipped_b, fallback, gamma)
+        fs = fs._replace(degraded=fs.degraded
+                         + jnp.where(clipped_b, jnp.int32(1), jnp.int32(0)))
+    gamma_eff = gamma * jnp.asarray(mult, jnp.float32)
+    return gamma_eff, _push(ss, gamma_eff, was_clipped), fs
+
+
+def summarize_faults(fs) -> dict:
+    """Host-side dict of totals (summed over any leading cell axes)."""
+    if fs is None:
+        return {}
+    return {name: int(np.asarray(getattr(fs, name)).sum())
+            for name in FaultState._fields}

@@ -1,0 +1,112 @@
+"""Deterministic, jittable fault-process injection.
+
+Two entry points, both pure functions of ``(spec, cell_seed)``:
+
+* :func:`inject_service_times` transforms a pre-sampled service-time
+  matrix BEFORE ``core.engine.trace_scan`` consumes it -- per-worker
+  crash/rejoin Markov chains (the in-flight task of a "down" worker is
+  stretched by ``crash_scale``, so its next completion lands with a huge
+  measured staleness: the rejoin spike) and heavy-tail Pareto straggler
+  spikes.  The same transform applies to federated round durations
+  (:func:`inject_client_rounds`).
+* :func:`update_fault_codes` draws the per-event drop/dup/corrupt codes
+  the solver scans consume as an extra event column.
+
+Randomness is ``jax.random`` keyed by ``fold_in(PRNGKey(spec.seed),
+cell_seed)`` with a static stream tag per draw site -- ``cell_seed`` may be
+a traced scalar, so the SAME key arithmetic runs inside a vmapped batched
+cell and in a solo per-cell call, making the three backends bitwise equal
+under faults.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.faults.spec import (CODE_CORRUPT, CODE_DROP, CODE_DUP, FaultSpec)
+
+__all__ = ["inject_service_times", "inject_client_rounds",
+           "update_fault_codes", "corrupt_value"]
+
+# Static stream tags keeping the three draw sites independent.
+_STREAM_CRASH = 0x5EED0001
+_STREAM_SPIKE = 0x5EED0002
+_STREAM_CODES = 0x5EED0003
+
+
+def _key(spec: FaultSpec, cell_seed, stream: int):
+    k = jax.random.fold_in(jax.random.PRNGKey(spec.seed),
+                           jnp.asarray(cell_seed, jnp.uint32))
+    return jax.random.fold_in(k, stream)
+
+
+def _down_mask(spec: FaultSpec, key, shape):
+    """(n, T) float32 {0,1} per-worker down-state Markov chain over tasks.
+
+    up -> down w.p. ``p_crash``; down -> up w.p. ``p_rejoin``.  Workers
+    start up.  One uniform per (worker, task)."""
+    u = jax.random.uniform(key, shape, jnp.float32)
+
+    def step(down, u_t):
+        # down: (n,) bool state BEFORE task t; u_t: (n,) uniforms
+        new_down = jnp.where(down, u_t >= spec.p_rejoin, u_t < spec.p_crash)
+        return new_down, new_down
+
+    down0 = jnp.zeros(shape[:1], jnp.bool_)
+    _, down = lax.scan(step, down0, jnp.swapaxes(u, 0, 1))
+    return jnp.swapaxes(down, 0, 1).astype(jnp.float32)
+
+
+def inject_service_times(T, spec: FaultSpec, cell_seed):
+    """Transform an ``(n_workers, n_tasks)`` service-time matrix.
+
+    Applied before ``trace_scan``/``generate_trace``; the event *selection*
+    stays the untouched lexicographic argmin, only durations change.
+    Returns float32 of the same shape.  With ``spec.injects_traces`` False
+    this still runs (the multipliers are identically 1) -- callers gate on
+    the spec being present, keeping one code path.
+    """
+    T = jnp.asarray(T, jnp.float32)
+    scale = jnp.ones_like(T)
+    if spec.p_crash > 0.0:
+        down = _down_mask(spec, _key(spec, cell_seed, _STREAM_CRASH), T.shape)
+        scale = scale * (1.0 + down * (spec.crash_scale - 1.0))
+    if spec.p_spike > 0.0:
+        k = _key(spec, cell_seed, _STREAM_SPIKE)
+        k_hit, k_mag = jax.random.split(k)
+        hit = jax.random.uniform(k_hit, T.shape, jnp.float32) < spec.p_spike
+        u = jax.random.uniform(k_mag, T.shape, jnp.float32,
+                               minval=1e-6, maxval=1.0)
+        pareto = spec.spike_scale * jnp.power(u, -1.0 / spec.spike_tail)
+        scale = scale * jnp.where(hit, pareto, 1.0)
+    return T * scale
+
+
+def inject_client_rounds(rounds, spec: FaultSpec, cell_seed):
+    """Federated twin: stretch ``ClientRounds.duration`` (n_clients,
+    n_attempts) by the same crash-chain / spike processes; the dropout
+    uniforms (``drop_u``) stay untouched -- client dropout is already a
+    first-class trace knob, faults add *delay* pathology on top."""
+    return rounds._replace(
+        duration=inject_service_times(rounds.duration, spec, cell_seed))
+
+
+def update_fault_codes(spec: FaultSpec, n_events: int, cell_seed):
+    """(n_events,) int32 per-event fault code: 0 ok, 1 drop, 2 dup,
+    3 corrupt.  One uniform per event, thresholded corrupt < drop < dup
+    (precedence fixed so probabilities partition [0, 1))."""
+    u = jax.random.uniform(_key(spec, cell_seed, _STREAM_CODES),
+                           (int(n_events),), jnp.float32)
+    pc, pdr, pdu = spec.p_corrupt, spec.p_drop, spec.p_dup
+    codes = jnp.where(
+        u < pc, CODE_CORRUPT,
+        jnp.where(u < pc + pdr, CODE_DROP,
+                  jnp.where(u < pc + pdr + pdu, CODE_DUP, 0)))
+    return codes.astype(jnp.int32)
+
+
+def corrupt_value(spec: FaultSpec):
+    """The poison payload a corrupt event adds into the update leaves."""
+    return jnp.float32(jnp.nan) if spec.corrupt_mode == "nan" \
+        else jnp.float32(jnp.inf)

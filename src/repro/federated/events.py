@@ -476,6 +476,20 @@ def _fed_scan_jit(rounds, p_dropout, rejoin_after, local_epochs, n_uploads,
                                 n_steps=n_steps)
 
 
+_INJECT_ROUNDS_JIT = {}
+
+
+def _inject_rounds_jit(faults):
+    """Per-FaultSpec jitted round-duration injector (memoized so repeated
+    solo cells reuse the compiled transform)."""
+    fn = _INJECT_ROUNDS_JIT.get(faults)
+    if fn is None:
+        from repro.faults.inject import inject_client_rounds
+        fn = jax.jit(lambda r, s: inject_client_rounds(r, faults, s))
+        _INJECT_ROUNDS_JIT[faults] = fn
+    return fn
+
+
 def generate_federated_trace(
     n_clients: int,
     n_uploads: int,
@@ -484,6 +498,7 @@ def generate_federated_trace(
     seed: int = 0,
     n_steps: Optional[int] = None,
     max_doublings: int = 4,
+    faults=None,
 ) -> FederatedTrace:
     """Host-side wrapper: run ``federated_trace_scan`` jitted and return a
     ``FederatedTrace``.
@@ -495,16 +510,26 @@ def generate_federated_trace(
     steps (or a client runs out of pre-sampled attempts) the budget is
     doubled and the scan re-run; each budget is its own static shape, so
     repeated calls at the same size reuse the compiled program.
+
+    ``faults`` (a ``repro.faults.FaultSpec``) fault-injects the round
+    durations (crash/rejoin slowdowns, straggler spikes) with ``seed`` as
+    the fault cell seed -- the same jitted transform the fused sweep cells
+    apply, so the solo trace stays bitwise the batched cell's row.
     """
     if clients is None:
         clients = heterogeneous_clients(n_clients, seed=seed)
     assert len(clients) == n_clients
+    from repro.faults.spec import normalize_faults
+    faults = normalize_faults(faults)
     p_drop, rejoin, epochs = client_arrays(clients)
     S = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
     for _ in range(max_doublings + 1):
         rounds = sample_client_rounds(clients, S, seed=seed)
+        jr = ClientRounds(*map(jnp.asarray, rounds))
+        if faults is not None:
+            jr = _inject_rounds_jit(faults)(jr, jnp.int32(seed))
         out = jax.device_get(_fed_scan_jit(
-            ClientRounds(*map(jnp.asarray, rounds)), jnp.asarray(p_drop),
+            jr, jnp.asarray(p_drop),
             jnp.asarray(rejoin), jnp.asarray(epochs), n_uploads,
             buffer_size, S))
         if int(out.n_uploads) >= n_uploads and not bool(out.exhausted):

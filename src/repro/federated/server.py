@@ -33,6 +33,10 @@ from repro.core.stepsize import (StepsizePolicy, auto_horizon, clip_delta,
                                  clipped_count)
 from repro.telemetry.accumulators import (TelemetryConfig, init_telemetry,
                                           observe, emit_window, finalize)
+from repro.faults.spec import CODE_CORRUPT, FaultSpec, normalize_faults
+from repro.faults.inject import corrupt_value, update_fault_codes
+from repro.faults.guards import (guard_event, guarded_gamma, init_faults,
+                                 payload_finite)
 
 from .events import FederatedTrace
 
@@ -53,6 +57,7 @@ class FedResult(NamedTuple):
     # ^ final StepsizeState.clipped: uploads whose staleness exceeded the
     #   weight-policy horizon (H - 1 cap); nonzero flags undersized horizons.
     telemetry: Any = None     # DelayTelemetry when telemetry= was passed
+    faults: Any = None        # FaultState counters when faults= was passed
 
 
 def _tmap(fn, *ts):
@@ -105,6 +110,8 @@ def fedasync_scan(
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
     engine: str = "scan",
+    faults: Optional[FaultSpec] = None,
+    fault_codes: Optional[jnp.ndarray] = None,
 ) -> FedResult:
     """The traceable FedAsync core: one ``lax.scan`` over upload events.
 
@@ -116,9 +123,24 @@ def fedasync_scan(
 
     ``engine='fused'`` launches the per-upload weight select + convex mix as
     one Pallas kernel (``kernels.fused_step.fused_policy_mix_step``) --
-    bitwise-equal to ``engine='scan'``; needs a single-1-D-leaf model."""
+    bitwise-equal to ``engine='scan'``; needs a single-1-D-leaf model.
+
+    ``faults``/``fault_codes`` switch in the guarded step (see
+    ``core.piag.piag_scan``): the uploaded client model is the guarded
+    payload -- corrupt events poison ``x_c``, non-finite / over-stale
+    uploads are rejected (no server write) -- and ``faults=None`` is
+    bitwise the pre-fault jaxpr."""
     if engine not in ("scan", "fused"):
         raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    faults = normalize_faults(faults)
+    if faults is not None:
+        if engine == "fused":
+            raise TypeError("engine='fused' does not support fault "
+                            "injection; use engine='scan'")
+        if fault_codes is None:
+            raise ValueError("faults is set but fault_codes is None; build "
+                             "the event codes with "
+                             "repro.faults.update_fault_codes")
     if engine == "fused":
         from repro.kernels.fused_step import (as_policy_params, fused_leaf,
                                               fused_policy_mix_step)
@@ -133,6 +155,9 @@ def fedasync_scan(
     obj = objective if objective is not None else (lambda x: jnp.full((), jnp.nan))
 
     def make_step(emit):
+        if faults is not None:
+            return _make_fault_step(emit)
+
         def step(carry, event):
             x, x_read, ss = carry[:3]
             w, tau, steps, _, ver = event
@@ -161,15 +186,59 @@ def fedasync_scan(
                                               wclip)
         return step
 
+    fi = 4 if telemetry is not None else 3
+
+    def _make_fault_step(emit):
+        poison = corrupt_value(faults)
+
+        def step(carry, event):
+            x, x_read, ss = carry[:3]
+            fs = carry[fi]
+            w, tau, steps, _, ver, code = event
+            xw = _tmap(lambda leaf: leaf[w], x_read)
+            xc = client_update(xw, steps, *_leaves(data_at(w)))
+            xc = _tmap(lambda a: (a + jnp.where(code == CODE_CORRUPT, poison,
+                                                jnp.float32(0.0))
+                                  ).astype(a.dtype), xc)
+            finite = payload_finite(xc) if faults.guard_nonfinite \
+                else jnp.ones((), jnp.bool_)
+            accept, mult, fs = guard_event(faults, code, tau, finite, fs)
+            ss_old = ss
+            gamma, ss, fs = guarded_gamma(policy, ss, tau, mult, faults, fs)
+            x_cand = _tmap(lambda a, c: a + gamma * (c - a), x, xc)
+            x_new = _tmap(lambda cnd, old: jnp.where(accept, cnd, old),
+                          x_cand, x)
+            x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            tel = None
+            if telemetry is not None:
+                tel = observe(carry[3], tau, gamma, clip_delta(ss_old, ss))
+            extras = ((tel,) if telemetry is not None else ()) + (fs,)
+            if not emit:
+                return (x_new, x_read, ss) + extras, None
+            wtail = ()
+            if telemetry is not None:
+                tel, wclip = emit_window(tel)
+                extras = (tel, fs)
+                wtail = (wclip,)
+            out = (obj(x_new), gamma, tau, ver) + wtail
+            return (x_new, x_read, ss) + extras, out
+        return step
+
+    if faults is not None:
+        events = tuple(events) + (jnp.asarray(fault_codes, jnp.int32),)
     carry0 = (x0, x_read0, policy.init(horizon))
     if telemetry is not None:
         carry0 = carry0 + (init_telemetry(telemetry),)
+    if faults is not None:
+        carry0 = carry0 + (init_faults(),)
     carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
     x_fin, ss_fin = carry_fin[0], carry_fin[2]
     o, g, t, v = outs[:4]
     tel_out = finalize(carry_fin[3], outs[4]) if telemetry is not None else None
+    faults_out = carry_fin[fi] if faults is not None else None
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
-                     clipped=clipped_count(ss_fin), telemetry=tel_out)
+                     clipped=clipped_count(ss_fin), telemetry=tel_out,
+                     faults=faults_out)
 
 
 def run_fedasync(
@@ -183,6 +252,8 @@ def run_fedasync(
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
     engine: str = "scan",
+    faults: Optional[FaultSpec] = None,
+    fault_seed: int = 0,
 ) -> FedResult:
     """FedAsync: staleness-weighted model mixing, one write per upload.
 
@@ -191,15 +262,29 @@ def run_fedasync(
     if horizon == "auto":
         horizon = auto_horizon(int(np.max(np.asarray(trace.tau), initial=0)))
     _, _, events = _prep(x0, client_data, trace)
+    faults = normalize_faults(faults)
+
+    if faults is None:
+        @jax.jit
+        def run(events):
+            return fedasync_scan(client_update, x0, client_data, events,
+                                 policy, objective=objective, horizon=horizon,
+                                 record_every=record_every,
+                                 telemetry=telemetry, engine=engine)
+
+        return run(events)
+
+    n_events = int(events[0].shape[0])
 
     @jax.jit
-    def run(events):
+    def run_faulted(events, fseed):
+        codes = update_fault_codes(faults, n_events, fseed)
         return fedasync_scan(client_update, x0, client_data, events, policy,
                              objective=objective, horizon=horizon,
                              record_every=record_every, telemetry=telemetry,
-                             engine=engine)
+                             engine=engine, faults=faults, fault_codes=codes)
 
-    return run(events)
+    return run_faulted(events, jnp.int32(fault_seed))
 
 
 def fedbuff_scan(
@@ -215,6 +300,8 @@ def fedbuff_scan(
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
     engine: str = "scan",
+    faults: Optional[FaultSpec] = None,
+    fault_codes: Optional[jnp.ndarray] = None,
 ) -> FedResult:
     """The traceable FedBuff core: buffered semi-async aggregation of
     staleness-weighted deltas as one ``lax.scan`` over upload events.
@@ -230,9 +317,24 @@ def fedbuff_scan(
     ``engine='fused'`` launches the per-upload weight select + delta
     accumulate + buffered apply/decay as one Pallas kernel
     (``kernels.fused_step.fused_policy_buff_step``) -- bitwise-equal to
-    ``engine='scan'``; needs a single-1-D-leaf model."""
+    ``engine='scan'``; needs a single-1-D-leaf model.
+
+    ``faults``/``fault_codes`` guard the buffered delta (see
+    ``core.piag.piag_scan``): rejected uploads contribute nothing to the
+    buffer; the trace's aggregation schedule is untouched, so a buffer
+    whose uploads were all rejected applies a zero delta.  ``faults=None``
+    is bitwise the pre-fault jaxpr."""
     if engine not in ("scan", "fused"):
         raise ValueError(f"engine must be 'scan' or 'fused', got {engine!r}")
+    faults = normalize_faults(faults)
+    if faults is not None:
+        if engine == "fused":
+            raise TypeError("engine='fused' does not support fault "
+                            "injection; use engine='scan'")
+        if fault_codes is None:
+            raise ValueError("faults is set but fault_codes is None; build "
+                             "the event codes with "
+                             "repro.faults.update_fault_codes")
     if engine == "fused":
         from repro.kernels.fused_step import (as_policy_params, fused_leaf,
                                               fused_policy_buff_step)
@@ -248,6 +350,9 @@ def fedbuff_scan(
     delta0 = _tmap(jnp.zeros_like, x0)
 
     def make_step(emit):
+        if faults is not None:
+            return _make_fault_step(emit)
+
         def step(carry, event):
             x, x_read, delta, ss = carry[:4]
             w, tau, steps, agg, ver = event
@@ -282,15 +387,63 @@ def fedbuff_scan(
                                                      ver, wclip)
         return step
 
+    fi = 5 if telemetry is not None else 4
+
+    def _make_fault_step(emit):
+        poison = corrupt_value(faults)
+
+        def step(carry, event):
+            x, x_read, delta, ss = carry[:4]
+            fs = carry[fi]
+            w, tau, steps, agg, ver, code = event
+            xw = _tmap(lambda leaf: leaf[w], x_read)
+            xc = client_update(xw, steps, *_leaves(data_at(w)))
+            xc = _tmap(lambda a: (a + jnp.where(code == CODE_CORRUPT, poison,
+                                                jnp.float32(0.0))
+                                  ).astype(a.dtype), xc)
+            finite = payload_finite(xc) if faults.guard_nonfinite \
+                else jnp.ones((), jnp.bool_)
+            accept, mult, fs = guard_event(faults, code, tau, finite, fs)
+            ss_old = ss
+            gamma, ss, fs = guarded_gamma(policy, ss, tau, mult, faults, fs)
+            # rejected uploads add an exact zero to the buffered delta; the
+            # aggregation schedule (agg flags from the trace) is untouched
+            delta = _tmap(lambda d, c, a: d + jnp.where(
+                accept, gamma * (c - a), jnp.float32(0.0)), delta, xc, xw)
+            x_new = _tmap(lambda a, d: a + agg * (eta / buffer_size) * d,
+                          x, delta)
+            delta = _tmap(lambda d: (1.0 - agg) * d, delta)
+            x_read = _tmap(lambda buf, xv: buf.at[w].set(xv), x_read, x_new)
+            tel = None
+            if telemetry is not None:
+                tel = observe(carry[4], tau, gamma, clip_delta(ss_old, ss))
+            extras = ((tel,) if telemetry is not None else ()) + (fs,)
+            if not emit:
+                return (x_new, x_read, delta, ss) + extras, None
+            wtail = ()
+            if telemetry is not None:
+                tel, wclip = emit_window(tel)
+                extras = (tel, fs)
+                wtail = (wclip,)
+            out = (obj(x_new), gamma, tau, ver) + wtail
+            return (x_new, x_read, delta, ss) + extras, out
+        return step
+
+    if faults is not None:
+        events = tuple(events) + (jnp.asarray(fault_codes, jnp.int32),)
     carry0 = (x0, x_read0, delta0, policy.init(horizon))
     if telemetry is not None:
         carry0 = carry0 + (init_telemetry(telemetry),)
+    if faults is not None:
+        carry0 = carry0 + (init_faults(),)
     carry_fin, outs = strided_scan(make_step, carry0, events, record_every)
     x_fin, ss_fin = carry_fin[0], carry_fin[3]
     o, g, t, v = outs[:4]
     tel_out = finalize(carry_fin[4], outs[4]) if telemetry is not None else None
+    faults_out = carry_fin[fi] if faults is not None else None
     return FedResult(x=x_fin, objective=o, weights=g, taus=t, versions=v,
-                     clipped=clipped_count(ss_fin), telemetry=tel_out)
+                     clipped=clipped_count(ss_fin), telemetry=tel_out,
+                     faults=faults_out)
 
 
 def run_fedbuff(
@@ -306,21 +459,38 @@ def run_fedbuff(
     record_every: int = 1,
     telemetry: Optional[TelemetryConfig] = None,
     engine: str = "scan",
+    faults: Optional[FaultSpec] = None,
+    fault_seed: int = 0,
 ) -> FedResult:
     """FedBuff [Nguyen et al. '22] over a simulated trace; one jit."""
     if horizon == "auto":
         horizon = auto_horizon(int(np.max(np.asarray(trace.tau), initial=0)))
     _, _, events = _prep(x0, client_data, trace)
+    faults = normalize_faults(faults)
+
+    if faults is None:
+        @jax.jit
+        def run(events):
+            return fedbuff_scan(client_update, x0, client_data, events,
+                                policy, eta=eta, buffer_size=buffer_size,
+                                objective=objective, horizon=horizon,
+                                record_every=record_every,
+                                telemetry=telemetry, engine=engine)
+
+        return run(events)
+
+    n_events = int(events[0].shape[0])
 
     @jax.jit
-    def run(events):
+    def run_faulted(events, fseed):
+        codes = update_fault_codes(faults, n_events, fseed)
         return fedbuff_scan(client_update, x0, client_data, events, policy,
                             eta=eta, buffer_size=buffer_size,
                             objective=objective, horizon=horizon,
                             record_every=record_every, telemetry=telemetry,
-                            engine=engine)
+                            engine=engine, faults=faults, fault_codes=codes)
 
-    return run(events)
+    return run_faulted(events, jnp.int32(fault_seed))
 
 
 def _problem_pieces(problem, prox: ProxOp, local_lr: Optional[float]):

@@ -35,6 +35,7 @@ from pathlib import Path
 import jax
 
 from repro import analysis, api, telemetry
+from repro.faults import parse_faults
 
 
 def load_spec(path: str) -> api.ExperimentSpec:
@@ -82,7 +83,8 @@ def spec_from_flags(a: argparse.Namespace) -> api.ExperimentSpec:
                                     record_every=a.record_every,
                                     telemetry=a.telemetry,
                                     telemetry_bins=a.telemetry_bins),
-        n_events=a.events)
+        n_events=a.events,
+        faults=parse_faults(a.faults))
 
 
 def print_summary(res: api.Results) -> None:
@@ -147,6 +149,16 @@ def main() -> None:
     ap.add_argument("--ledger", default=None,
                     help="append this run's RunRecord to a JSONL ledger "
                     "file (also honored with --spec; see launch/report.py)")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec: a preset name "
+                    "(crash/straggler/corrupt/chaos) optionally followed by "
+                    "comma-separated key=value overrides, e.g. "
+                    "'chaos,p_crash=0.1,staleness_cutoff=64', or bare "
+                    "key=value pairs (see repro.faults.FaultSpec)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint directory: finished sweep buckets are "
+                    "saved here and loaded (bitwise) on re-run, so a killed "
+                    "sweep resumes instead of recomputing")
     ap.add_argument("--json", default=None, help="write per-cell results here")
     a = ap.parse_args()
     if a.shard:
@@ -156,7 +168,7 @@ def main() -> None:
 
     spec = load_spec(a.spec) if a.spec else spec_from_flags(a)
 
-    res = api.run(spec)
+    res = api.run(spec, resume=a.resume)
     grid, n_dev = res.grid, len(jax.devices())
     policy_names = list(dict.fromkeys(c.policy_name for c in grid.cells))
     widths = sorted({c.n_workers for c in grid.cells})
@@ -178,6 +190,9 @@ def main() -> None:
         print(f"delay profile ({dp['source']}): {dp['count']} events, "
               f"tau in [{dp['tau']['min']}, {dp['tau']['max']}], "
               f"mean {dp['tau']['mean']:.2f} +/- {dp['tau']['std']:.2f}")
+    if rec.faults:
+        print("faults: " + ", ".join(f"{k}={v}"
+                                     for k, v in sorted(rec.faults.items())))
     if a.ledger:
         print(f"appended RunRecord to {a.ledger}")
 
@@ -194,6 +209,7 @@ def main() -> None:
                            "warm_ms": rec.warm_ms, "cache": rec.cache,
                            "delay_hist": rec.delay_hist,
                            "hist_source": rec.hist_source},
+             "faults": rec.faults,
              "cells": res.to_rows()}, indent=2) + "\n")
         print(f"wrote {a.json}")
 

@@ -122,7 +122,11 @@ class ParamPolicy:
     def init(self, horizon: int = 4096):
         return init_state(horizon)
 
-    def step(self, state, tau):
+    def _gamma(self, state, tau):
+        """(gamma, was_clipped) WITHOUT advancing the state -- the same
+        split every concrete ``StepsizePolicy`` exposes.  ``repro.faults``
+        guards hook here: they may override gamma (graceful degradation,
+        rejection) before the single ``_push``."""
         p = self.params
         ws, clip = window_sum(state, tau)
         t = jnp.asarray(tau, jnp.float32)
@@ -149,4 +153,8 @@ class ParamPolicy:
                    sorted(POLICY_IDS.items(), key=lambda kv: kv[1])]
         gamma = jax.lax.switch(p.policy_id, ordered)
         gamma = jnp.asarray(gamma, jnp.float32)
+        return gamma, clip
+
+    def step(self, state, tau):
+        gamma, clip = self._gamma(state, tau)
         return gamma, _push(state, gamma, clip)

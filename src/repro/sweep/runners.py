@@ -45,6 +45,9 @@ from repro.federated.events import (ClientRounds, client_arrays,
                                     default_fed_steps, federated_trace_scan,
                                     sample_client_rounds, simulate_federated)
 from repro.federated.server import (FedResult, fedasync_scan, fedbuff_scan)
+from repro.faults.spec import normalize_faults
+from repro.faults.inject import (inject_client_rounds, inject_service_times,
+                                 update_fault_codes)
 
 from repro.telemetry.timing import timed
 
@@ -115,17 +118,34 @@ def _warn_legacy(name: str) -> None:
 
 
 def run_bucketed(grid: SweepGrid, run_bucket: Callable,
-                 bucket_widths: Optional[Sequence[int]] = None):
+                 bucket_widths: Optional[Sequence[int]] = None,
+                 checkpoint=None):
     """Run ``run_bucket(bucket) -> result (leading B_bucket)`` over every
     bucket of ``grid`` and stitch rows back into grid cell order.  Shared by
-    the single-device runners here and the sharded runners in ``.shard``."""
+    the single-device runners here and the sharded runners in ``.shard``.
+
+    ``checkpoint`` (a ``repro.checkpoint.SweepCheckpoint``) makes the loop
+    resumable at bucket granularity: a bucket already on disk is loaded
+    instead of run, and each freshly-computed bucket is persisted (with a
+    device sync first -- a checkpoint must never record an enqueued-but-
+    unfinished computation) before the next one starts, so a killed
+    mega-grid sweep resumes at its first unfinished bucket."""
     buckets = grid.buckets(bucket_widths)
     parts = []
-    for b in buckets:
+    for i, b in enumerate(buckets):
+        if checkpoint is not None:
+            cached = checkpoint.load_bucket(b.width, i)
+            if cached is not None:
+                parts.append(cached)
+                continue
         # telemetry: per-bucket dispatch wall time (build + trace + enqueue;
         # execution may still be async -- api.run's block covers that)
         with timed("bucket_dispatch", width=b.width, cells=len(b.index)):
-            parts.append(run_bucket(b))
+            part = run_bucket(b)
+        if checkpoint is not None:
+            part = jax.block_until_ready(part)
+            checkpoint.save_bucket(b.width, i, part)
+        parts.append(part)
     if len(parts) == 1:
         return parts[0]
     order = np.concatenate([b.index for b in buckets])
@@ -148,12 +168,36 @@ def _slice_workers(worker_data, width: int):
 
 # ---------------------------------------------------------------- PIAG ----
 
+def _cell_seeds(b: SweepBucket) -> jnp.ndarray:
+    """(B,) per-cell seeds -- the traced argument keying the fault streams
+    (fold_in inside the jit, so solo/batched/sharded rows stay bitwise)."""
+    return jnp.asarray([c.seed for c in b.grid.cells], jnp.int32)
+
+
 def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
                use_tau_max, masked, record_every=1, telemetry=None,
-               engine="scan"):
+               engine="scan", faults=None):
     """The per-cell program (trace generation fused with the solver scan);
     ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
-    the sharded one."""
+    the sharded one.  With ``faults`` the cell signature grows a trailing
+    per-cell ``seed`` (i32 scalar): service times are fault-injected before
+    the trace scan and the per-event codes drawn from the same seed, all
+    inside the one executable."""
+    if faults is not None:
+        def faulted(T, active, pp, seed):
+            T = inject_service_times(T, faults, seed)
+            tr = trace_scan(T, active=active) if active is not None \
+                else trace_scan(T)
+            events = (tr.worker, tr.tau_max if use_tau_max else tr.tau)
+            codes = update_fault_codes(faults, events[0].shape[0], seed)
+            return piag_scan(worker_loss, x0, worker_data, events,
+                             ParamPolicy(pp), prox, objective=objective,
+                             horizon=horizon, active=active,
+                             record_every=record_every, telemetry=telemetry,
+                             engine=engine, faults=faults, fault_codes=codes)
+        if masked:
+            return lambda T, active, pp, seed: faulted(T, active, pp, seed)
+        return lambda T, pp, seed: faulted(T, None, pp, seed)
     if masked:
         def cell(T, active, pp):
             tr = trace_scan(T, active=active)
@@ -178,7 +222,8 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
                     objective: Optional[Callable] = None, horizon: int = 4096,
                     use_tau_max: bool = True, masked: bool = False,
                     record_every: int = 1, donate: bool = False,
-                    telemetry=None, engine: str = "scan") -> Callable:
+                    telemetry=None, engine: str = "scan",
+                    faults=None) -> Callable:
     """Build the batched PIAG program.
 
     Returns jitted ``fn(service_times (B, n, K+1), params (B,)) ->
@@ -191,7 +236,7 @@ def make_sweep_piag(worker_loss: Callable, x0, worker_data, prox: ProxOp,
     """
     return jax.jit(jax.vmap(_piag_cell(
         worker_loss, x0, worker_data, prox, objective, horizon, use_tau_max,
-        masked, record_every, telemetry, engine)),
+        masked, record_every, telemetry, engine, normalize_faults(faults))),
         donate_argnums=(0,) if donate else ())
 
 
@@ -200,7 +245,8 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
                horizon: Horizon = 4096, use_tau_max: bool = True,
                bucket_widths: Optional[Sequence[int]] = None,
                record_every: int = 1, telemetry=None,
-               engine: str = "scan") -> PIAGResult:
+               engine: str = "scan", faults=None,
+               checkpoint=None) -> PIAGResult:
     """Run PIAG on every cell of ``grid`` in one batched program per
     bucket (a homogeneous grid is exactly one program).  ``bucket_widths``
     overrides the ragged grid's padded-width menu (``SweepGrid.buckets``).
@@ -209,26 +255,33 @@ def sweep_piag(worker_loss: Callable, x0, worker_data, grid: SweepGrid,
     configuration and the identity of the captured objects, so repeated
     calls -- and every bucket after the first sweep of a ragged grid --
     skip rebuild+retrace entirely.  ``horizon='auto'`` sizes the window
-    buffer from the grid's measured tau-bar (``resolve_grid_horizon``)."""
+    buffer from the grid's measured tau-bar (``resolve_grid_horizon``).
+    ``faults`` (a ``FaultSpec``) rides the cache key and switches the cell
+    program to the fault-injected form (extra per-cell seed argument);
+    ``checkpoint`` makes the bucket loop resumable (``run_bucketed``)."""
     horizon = resolve_grid_horizon(horizon, grid)
+    faults = normalize_faults(faults)
 
     def run_bucket(b: SweepBucket):
         key = ("piag", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, telemetry, engine, IdKey(worker_loss),
+               record_every, telemetry, engine, faults, IdKey(worker_loss),
                tree_key(x0), tree_key(worker_data), IdKey(prox),
                IdKey(objective))
         fn = cached_program(key, lambda: make_sweep_piag(
             worker_loss, x0, _slice_workers(worker_data, b.width), prox,
             objective=objective, horizon=horizon, use_tau_max=use_tau_max,
             masked=not b.uniform, record_every=record_every,
-            donate=_donate_default(), telemetry=telemetry, engine=engine))
+            donate=_donate_default(), telemetry=telemetry, engine=engine,
+            faults=faults))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
+        tail = (_cell_seeds(b),) if faults is not None else ()
         if b.uniform:
-            return fn(T, pp)
-        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), pp)
+            return fn(T, pp, *tail)
+        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), pp, *tail)
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
@@ -250,7 +303,22 @@ def sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
 # ----------------------------------------------------------- Async-BCD ----
 
 def _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-              record_every=1, telemetry=None, engine="scan"):
+              record_every=1, telemetry=None, engine="scan", faults=None):
+    if faults is not None:
+        def faulted(T, active, blocks, pp, seed):
+            T = inject_service_times(T, faults, seed)
+            tr = trace_scan(T, active=active) if active is not None \
+                else trace_scan(T)
+            events = (tr.worker, tr.tau, blocks)
+            codes = update_fault_codes(faults, events[0].shape[0], seed)
+            return bcd_scan(grad_f, objective, x0, m, n_workers, events,
+                            ParamPolicy(pp), prox, horizon=horizon,
+                            record_every=record_every, telemetry=telemetry,
+                            engine=engine, faults=faults, fault_codes=codes)
+        if masked:
+            return lambda T, active, blocks, pp, seed: \
+                faulted(T, active, blocks, pp, seed)
+        return lambda T, blocks, pp, seed: faulted(T, None, blocks, pp, seed)
     if masked:
         def cell(T, active, blocks, pp):
             tr = trace_scan(T, active=active)
@@ -274,14 +342,15 @@ def make_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                    n_workers: int, prox: ProxOp, horizon: int = 4096,
                    masked: bool = False, record_every: int = 1,
                    donate: bool = False, telemetry=None,
-                   engine: str = "scan") -> Callable:
+                   engine: str = "scan", faults=None) -> Callable:
     """Build the batched Async-BCD program: jitted ``fn(service_times
     (B, n, K+1)[, active (B, n)], blocks (B, K), params (B,)) ->
     BCDResult``.  BCD has no cross-worker reduction, so the mask only
-    guards the trace (see ``core.bcd.bcd_scan``)."""
+    guards the trace (see ``core.bcd.bcd_scan``).  With ``faults`` the
+    signature grows a trailing per-cell ``seeds (B,)`` argument."""
     return jax.jit(jax.vmap(_bcd_cell(
         grad_f, objective, x0, m, n_workers, prox, horizon, masked,
-        record_every, telemetry, engine)),
+        record_every, telemetry, engine, normalize_faults(faults))),
         donate_argnums=(0,) if donate else ())
 
 
@@ -289,31 +358,38 @@ def sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
               grid: SweepGrid, prox: ProxOp, horizon: Horizon = 4096,
               bucket_widths: Optional[Sequence[int]] = None,
               record_every: int = 1, telemetry=None,
-              engine: str = "scan") -> BCDResult:
+              engine: str = "scan", faults=None,
+              checkpoint=None) -> BCDResult:
     """Run Async-BCD on every cell; block choices replay the solo sampling
     (``core.bcd.sample_blocks`` with the cell's seed) so rows match solo
     runs.  Per-bucket executables are cached; ``horizon='auto'`` sizes the
-    window buffer from the grid's measured tau-bar."""
+    window buffer from the grid's measured tau-bar.  ``faults`` /
+    ``checkpoint`` as in ``sweep_piag``."""
     horizon = resolve_grid_horizon(horizon, grid)
+    faults = normalize_faults(faults)
 
     def run_bucket(b: SweepBucket):
         key = ("bcd", b.width, not b.uniform, horizon, m, record_every,
-               telemetry, engine, IdKey(grad_f), IdKey(objective),
+               telemetry, engine, faults, IdKey(grad_f), IdKey(objective),
                tree_key(x0), IdKey(prox))
         fn = cached_program(key, lambda: make_sweep_bcd(
             grad_f, objective, x0, m, b.width, prox, horizon=horizon,
             masked=not b.uniform, record_every=record_every,
-            donate=_donate_default(), telemetry=telemetry, engine=engine))
+            donate=_donate_default(), telemetry=telemetry, engine=engine,
+            faults=faults))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
             sample_blocks(m, grid.n_events, seed=c.seed)
             for c in b.grid.cells]))
         pp = b.grid.policy_params()
+        tail = (_cell_seeds(b),) if faults is not None else ()
         if b.uniform:
-            return fn(T, blocks, pp)
-        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp)
+            return fn(T, blocks, pp, *tail)
+        return fn(T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp,
+                  *tail)
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 def sweep_bcd_logreg(problem, grid: SweepGrid, prox: ProxOp, m: int = 20,
@@ -350,23 +426,33 @@ def _stack_fed_rounds(grid: SweepGrid, width: int, n_steps: int):
     return rounds, cparams, jnp.asarray(grid.active_masks(width))
 
 
-def _fed_cell(server_scan, n_uploads, buffer_size, n_steps):
+def _fed_cell(server_scan, n_uploads, buffer_size, n_steps, faults=None):
     """One federated cell: the jitted trace scan fused with a server scan
-    (``server_scan(events, pp) -> FedResult``), like PIAG/BCD fuse
-    ``trace_scan`` with their solver scans.  Returns the result plus the
-    trace diagnostics the host must check (uploads emitted, attempt
-    exhaustion)."""
+    (``server_scan(events, pp[, fault_codes]) -> FedResult``), like PIAG/BCD
+    fuse ``trace_scan`` with their solver scans.  Returns the result plus
+    the trace diagnostics the host must check (uploads emitted, attempt
+    exhaustion).  With ``faults`` the cell signature grows a trailing
+    per-cell ``seed``: client round durations are fault-injected before the
+    trace scan and the per-upload codes drawn from the same seed."""
 
-    def cell(rounds, cparams, active, pp):
+    def run(rounds, cparams, active, pp, seed=None):
+        if faults is not None:
+            rounds = inject_client_rounds(rounds, faults, seed)
         p_drop, rejoin, epochs = cparams
         ftr = federated_trace_scan(rounds, p_drop, rejoin, epochs, n_uploads,
                                    buffer_size=buffer_size, n_steps=n_steps,
                                    active=active)
         events = (ftr.client, ftr.tau, ftr.local_steps,
                   jnp.asarray(ftr.aggregate, jnp.float32), ftr.version)
+        if faults is not None:
+            codes = update_fault_codes(faults, n_uploads, seed)
+            return server_scan(events, pp, codes), ftr.n_uploads, ftr.exhausted
         return server_scan(events, pp), ftr.n_uploads, ftr.exhausted
 
-    return cell
+    if faults is not None:
+        return lambda rounds, cparams, active, pp, seed: \
+            run(rounds, cparams, active, pp, seed)
+    return lambda rounds, cparams, active, pp: run(rounds, cparams, active, pp)
 
 
 def _check_fed_diag(n_up, exhausted, n_uploads: int, n_steps: int) -> None:
@@ -401,24 +487,27 @@ def make_sweep_fedasync(client_update: Callable, x0, client_data,
 
 
 def _fedasync_scan_adapter(client_update, x0, client_data, objective, horizon,
-                           record_every=1, telemetry=None, engine="scan"):
-    def server_scan(events, pp):
+                           record_every=1, telemetry=None, engine="scan",
+                           faults=None):
+    def server_scan(events, pp, fault_codes=None):
         return fedasync_scan(client_update, x0, client_data, events,
                              ParamPolicy(pp), objective=objective,
                              horizon=horizon, record_every=record_every,
-                             telemetry=telemetry, engine=engine)
+                             telemetry=telemetry, engine=engine,
+                             faults=faults, fault_codes=fault_codes)
     return server_scan
 
 
 def _fedbuff_scan_adapter(client_update, x0, client_data, objective, horizon,
                           eta, buffer_size, record_every=1, telemetry=None,
-                          engine="scan"):
-    def server_scan(events, pp):
+                          engine="scan", faults=None):
+    def server_scan(events, pp, fault_codes=None):
         return fedbuff_scan(client_update, x0, client_data, events,
                             ParamPolicy(pp), eta=eta,
                             buffer_size=buffer_size, objective=objective,
                             horizon=horizon, record_every=record_every,
-                            telemetry=telemetry, engine=engine)
+                            telemetry=telemetry, engine=engine,
+                            faults=faults, fault_codes=fault_codes)
     return server_scan
 
 
@@ -429,17 +518,20 @@ def make_sweep_fedasync_fused(client_update: Callable, x0, client_data,
                               n_steps: Optional[int] = None,
                               record_every: int = 1,
                               donate: bool = False, telemetry=None,
-                              engine: str = "scan") -> Callable:
+                              engine: str = "scan", faults=None) -> Callable:
     """Build the fused batched FedAsync program: jitted ``fn(rounds,
     cparams, active, params) -> (FedResult, n_uploads (B,), exhausted (B,))``
     with trace generation (``federated_trace_scan``) and the server scan in
     ONE executable, like the PIAG/BCD runners.  ``donate=True`` donates the
-    stacked client-rounds tensors (arg 0) -- pass fresh arrays per call."""
+    stacked client-rounds tensors (arg 0) -- pass fresh arrays per call.
+    With ``faults`` the signature grows a trailing ``seeds (B,)``."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
+    faults = normalize_faults(faults)
     return jax.jit(jax.vmap(_fed_cell(
         _fedasync_scan_adapter(client_update, x0, client_data, objective,
-                               horizon, record_every, telemetry, engine),
-        n_uploads, buffer_size, n_steps)),
+                               horizon, record_every, telemetry, engine,
+                               faults),
+        n_uploads, buffer_size, n_steps, faults)),
         donate_argnums=(0,) if donate else ())
 
 
@@ -450,15 +542,16 @@ def make_sweep_fedbuff(client_update: Callable, x0, client_data,
                        n_steps: Optional[int] = None,
                        record_every: int = 1,
                        donate: bool = False, telemetry=None,
-                       engine: str = "scan") -> Callable:
+                       engine: str = "scan", faults=None) -> Callable:
     """Build the fused batched FedBuff program (same shape as
     ``make_sweep_fedasync_fused`` with the buffered-delta server scan)."""
     n_steps = default_fed_steps(n_uploads) if n_steps is None else int(n_steps)
+    faults = normalize_faults(faults)
     return jax.jit(jax.vmap(_fed_cell(
         _fedbuff_scan_adapter(client_update, x0, client_data, objective,
                               horizon, eta, buffer_size, record_every,
-                              telemetry, engine),
-        n_uploads, buffer_size, n_steps)),
+                              telemetry, engine, faults),
+        n_uploads, buffer_size, n_steps, faults)),
         donate_argnums=(0,) if donate else ())
 
 
@@ -514,7 +607,8 @@ def _stack_fed_events(grid: SweepGrid, buffer_size: int,
 def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
                buffer_size: int, reference: bool, n_steps: Optional[int],
                bucket_widths: Optional[Sequence[int]] = None,
-               cache_key: Optional[Tuple] = None) -> FedResult:
+               cache_key: Optional[Tuple] = None, faults=None,
+               checkpoint=None) -> FedResult:
     """Shared driver for ``sweep_fedasync`` / ``sweep_fedbuff``.
 
     ``cache_key`` is the wrapper's static-configuration tuple; per-bucket
@@ -523,6 +617,11 @@ def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
     if reference:
+        if faults is not None:
+            raise TypeError(
+                "reference=True does not support fault injection (the heapq "
+                "reference path has no per-cell seed stream); use the fused "
+                "path")
         fn = jax.jit(jax.vmap(server_adapter))
         return fn(_stack_fed_events(grid, buffer_size, n_steps=S),
                   grid.policy_params())
@@ -533,12 +632,14 @@ def _sweep_fed(server_adapter, make_fused, grid: SweepGrid, client_data,
         fn = build() if cache_key is None else cached_program(
             cache_key + (b.width, S), build)
         rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
+        tail = (_cell_seeds(b),) if faults is not None else ()
         res, n_up, exhausted = fn(rounds, cparams, active,
-                                  b.grid.policy_params())
+                                  b.grid.policy_params(), *tail)
         _check_fed_diag(n_up, exhausted, K, S)
         return res
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
@@ -548,7 +649,8 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                    n_steps: Optional[int] = None,
                    bucket_widths: Optional[Sequence[int]] = None,
                    record_every: int = 1, telemetry=None,
-                   engine: str = "scan") -> FedResult:
+                   engine: str = "scan", faults=None,
+                   checkpoint=None) -> FedResult:
     """Run FedAsync on every cell of a grid whose topologies are
     ``ClientModel`` lists.
 
@@ -563,6 +665,7 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
     """
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
+    faults = normalize_faults(faults)
     adapter = _fedasync_scan_adapter(client_update, x0, client_data,
                                      objective, horizon, record_every,
                                      telemetry, engine)
@@ -573,14 +676,15 @@ def sweep_fedasync(client_update: Callable, x0, client_data, grid: SweepGrid,
                                          objective=objective, horizon=horizon,
                                          n_steps=S, record_every=record_every,
                                          donate=_donate_default(),
-                                         telemetry=telemetry, engine=engine)
+                                         telemetry=telemetry, engine=engine,
+                                         faults=faults)
 
     key = ("fedasync", grid.n_events, buffer_size, horizon, record_every,
-           telemetry, engine, IdKey(client_update), tree_key(x0),
+           telemetry, engine, faults, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,
-                      cache_key=key)
+                      cache_key=key, faults=faults, checkpoint=checkpoint)
 
 
 def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
@@ -591,13 +695,15 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                   n_steps: Optional[int] = None,
                   bucket_widths: Optional[Sequence[int]] = None,
                   record_every: int = 1, telemetry=None,
-                  engine: str = "scan") -> FedResult:
+                  engine: str = "scan", faults=None,
+                  checkpoint=None) -> FedResult:
     """Run FedBuff on every cell: fused jitted trace generation + buffered
     delta aggregation (``federated_trace_scan`` + ``fedbuff_scan``), one
     program per bucket; ``reference=True`` / ``horizon='auto'`` as in
     ``sweep_fedasync``."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
+    faults = normalize_faults(faults)
     adapter = _fedbuff_scan_adapter(client_update, x0, client_data, objective,
                                     horizon, eta, buffer_size, record_every,
                                     telemetry, engine)
@@ -608,14 +714,15 @@ def sweep_fedbuff(client_update: Callable, x0, client_data, grid: SweepGrid,
                                   objective=objective, horizon=horizon,
                                   n_steps=S, record_every=record_every,
                                   donate=_donate_default(),
-                                  telemetry=telemetry, engine=engine)
+                                  telemetry=telemetry, engine=engine,
+                                  faults=faults)
 
     key = ("fedbuff", grid.n_events, eta, buffer_size, horizon, record_every,
-           telemetry, engine, IdKey(client_update), tree_key(x0),
+           telemetry, engine, faults, IdKey(client_update), tree_key(x0),
            tree_key(client_data), IdKey(objective))
     return _sweep_fed(adapter, make_fused, grid, client_data, buffer_size,
                       reference, n_steps, bucket_widths=bucket_widths,
-                      cache_key=key)
+                      cache_key=key, faults=faults, checkpoint=checkpoint)
 
 
 def sweep_fedasync_problem(problem, grid: SweepGrid, prox: ProxOp,

@@ -44,12 +44,14 @@ from repro.federated.server import FedResult
 
 from repro.telemetry.timing import timed
 
+from repro.faults.spec import normalize_faults
+
 from .cache import IdKey, cached_program, tree_key
 from .grid import SweepBucket, SweepGrid
-from .runners import (Horizon, _bcd_cell, _fed_cell, _fedasync_scan_adapter,
-                      _fedbuff_scan_adapter, _piag_cell, _slice_workers,
-                      _stack_fed_rounds, _check_fed_diag,
-                      resolve_grid_horizon, run_bucketed)
+from .runners import (Horizon, _bcd_cell, _cell_seeds, _fed_cell,
+                      _fedasync_scan_adapter, _fedbuff_scan_adapter,
+                      _piag_cell, _slice_workers, _stack_fed_rounds,
+                      _check_fed_diag, resolve_grid_horizon, run_bucketed)
 
 __all__ = ["cell_mesh", "round_robin_pad", "shard_cells",
            "make_sharded_sweep_piag", "sharded_sweep_piag",
@@ -140,14 +142,18 @@ def make_sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                             masked: bool = False,
                             mesh: Optional[Mesh] = None,
                             record_every: int = 1, telemetry=None,
-                            engine: str = "scan") -> Callable:
+                            engine: str = "scan", faults=None) -> Callable:
     """Sharded twin of ``make_sweep_piag``: same signature and row values,
     but the batch axis is partitioned across ``mesh`` (batch size must be a
-    mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated."""
+    mesh-size multiple; see ``round_robin_pad``).  Arg 0 is donated.  With
+    ``faults`` the signature grows a trailing ``seeds (B,)`` argument."""
     mesh = cell_mesh() if mesh is None else mesh
+    faults = normalize_faults(faults)
     cell = _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
-                      use_tau_max, masked, record_every, telemetry, engine)
-    return shard_cells(jax.vmap(cell), mesh, n_args=3 if masked else 2)
+                      use_tau_max, masked, record_every, telemetry, engine,
+                      faults)
+    n_args = (3 if masked else 2) + (1 if faults is not None else 0)
+    return shard_cells(jax.vmap(cell), mesh, n_args=n_args)
 
 
 def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
@@ -157,29 +163,34 @@ def sharded_sweep_piag(worker_loss: Callable, x0, worker_data,
                        mesh: Optional[Mesh] = None,
                        bucket_widths: Optional[Sequence[int]] = None,
                        record_every: int = 1, telemetry=None,
-                       engine: str = "scan") -> PIAGResult:
+                       engine: str = "scan", faults=None,
+                       checkpoint=None) -> PIAGResult:
     """``sweep_piag`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
+    faults = normalize_faults(faults)
 
     def run_bucket(b: SweepBucket):
         key = ("piag/sharded", b.width, not b.uniform, horizon, use_tau_max,
-               record_every, telemetry, engine, mesh, IdKey(worker_loss),
-               tree_key(x0), tree_key(worker_data), IdKey(prox),
-               IdKey(objective))
+               record_every, telemetry, engine, faults, mesh,
+               IdKey(worker_loss), tree_key(x0), tree_key(worker_data),
+               IdKey(prox), IdKey(objective))
         T = jnp.asarray(b.grid.service_times(b.width))
         pp = b.grid.policy_params()
         args = ((T, pp) if b.uniform else
                 (T, jnp.asarray(b.grid.active_masks(b.width)), pp))
+        if faults is not None:
+            args = args + (_cell_seeds(b),)
         return _run_sharded_bucket(
             lambda: _piag_cell(worker_loss, x0,
                                _slice_workers(worker_data, b.width), prox,
                                objective, horizon, use_tau_max,
                                not b.uniform, record_every, telemetry,
-                               engine),
+                               engine, faults),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 def sharded_sweep_piag_logreg(problem, grid: SweepGrid, prox: ProxOp,
@@ -202,12 +213,14 @@ def make_sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                            masked: bool = False,
                            mesh: Optional[Mesh] = None,
                            record_every: int = 1, telemetry=None,
-                           engine: str = "scan") -> Callable:
+                           engine: str = "scan", faults=None) -> Callable:
     """Sharded twin of ``make_sweep_bcd`` (batch must be a mesh multiple)."""
     mesh = cell_mesh() if mesh is None else mesh
+    faults = normalize_faults(faults)
     cell = _bcd_cell(grad_f, objective, x0, m, n_workers, prox, horizon,
-                     masked, record_every, telemetry, engine)
-    return shard_cells(jax.vmap(cell), mesh, n_args=4 if masked else 3)
+                     masked, record_every, telemetry, engine, faults)
+    n_args = (4 if masked else 3) + (1 if faults is not None else 0)
+    return shard_cells(jax.vmap(cell), mesh, n_args=n_args)
 
 
 def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
@@ -215,14 +228,16 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
                       mesh: Optional[Mesh] = None,
                       bucket_widths: Optional[Sequence[int]] = None,
                       record_every: int = 1, telemetry=None,
-                      engine: str = "scan") -> BCDResult:
+                      engine: str = "scan", faults=None,
+                      checkpoint=None) -> BCDResult:
     """``sweep_bcd`` with the cell axis sharded across all devices."""
     mesh = cell_mesh() if mesh is None else mesh
     horizon = resolve_grid_horizon(horizon, grid)
+    faults = normalize_faults(faults)
 
     def run_bucket(b: SweepBucket):
         key = ("bcd/sharded", b.width, not b.uniform, horizon, m,
-               record_every, telemetry, engine, mesh, IdKey(grad_f),
+               record_every, telemetry, engine, faults, mesh, IdKey(grad_f),
                IdKey(objective), tree_key(x0), IdKey(prox))
         T = jnp.asarray(b.grid.service_times(b.width))
         blocks = jnp.asarray(np.stack([
@@ -231,13 +246,16 @@ def sharded_sweep_bcd(grad_f: Callable, objective: Callable, x0, m: int,
         pp = b.grid.policy_params()
         args = ((T, blocks, pp) if b.uniform else
                 (T, jnp.asarray(b.grid.active_masks(b.width)), blocks, pp))
+        if faults is not None:
+            args = args + (_cell_seeds(b),)
         return _run_sharded_bucket(
             lambda: _bcd_cell(grad_f, objective, x0, m, b.width, prox,
                               horizon, not b.uniform, record_every,
-                              telemetry, engine),
+                              telemetry, engine, faults),
             mesh, args, len(b.grid), n_args=len(args), cache_key=key)
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 # ------------------------------------------------- FedAsync / FedBuff ----
@@ -246,7 +264,8 @@ def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
                        buffer_size: int, n_steps: Optional[int],
                        mesh: Optional[Mesh],
                        bucket_widths: Optional[Sequence[int]] = None,
-                       cache_key: Optional[tuple] = None) -> FedResult:
+                       cache_key: Optional[tuple] = None, faults=None,
+                       checkpoint=None) -> FedResult:
     mesh = cell_mesh() if mesh is None else mesh
     K = grid.n_events
     S = default_fed_steps(K) if n_steps is None else int(n_steps)
@@ -255,16 +274,19 @@ def _sharded_sweep_fed(adapter_for, grid: SweepGrid, client_data,
         key = None if cache_key is None else \
             cache_key + (b.width, S, mesh)
         rounds, cparams, active = _stack_fed_rounds(b.grid, b.width, S)
+        args = (rounds, cparams, active, b.grid.policy_params())
+        if faults is not None:
+            args = args + (_cell_seeds(b),)
         res, n_up, exhausted = _run_sharded_bucket(
             lambda: _fed_cell(adapter_for(_slice_workers(client_data,
                                                          b.width)),
-                              K, buffer_size, S),
-            mesh, (rounds, cparams, active, b.grid.policy_params()),
-            len(b.grid), n_args=4, cache_key=key)
+                              K, buffer_size, S, faults),
+            mesh, args, len(b.grid), n_args=len(args), cache_key=key)
         _check_fed_diag(n_up, exhausted, K, S)
         return res
 
-    return run_bucketed(grid, run_bucket, bucket_widths)
+    return run_bucketed(grid, run_bucket, bucket_widths,
+                        checkpoint=checkpoint)
 
 
 def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
@@ -275,22 +297,25 @@ def sharded_sweep_fedasync(client_update: Callable, x0, client_data,
                            mesh: Optional[Mesh] = None,
                            bucket_widths: Optional[Sequence[int]] = None,
                            record_every: int = 1, telemetry=None,
-                           engine: str = "scan") -> FedResult:
+                           engine: str = "scan", faults=None,
+                           checkpoint=None) -> FedResult:
     """``sweep_fedasync`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
+    faults = normalize_faults(faults)
 
     def adapter_for(cd):
         return _fedasync_scan_adapter(client_update, x0, cd, objective,
                                       horizon, record_every, telemetry,
-                                      engine)
+                                      engine, faults)
 
     key = ("fedasync/sharded", grid.n_events, buffer_size, horizon,
-           record_every, telemetry, engine, IdKey(client_update),
+           record_every, telemetry, engine, faults, IdKey(client_update),
            tree_key(x0), tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,
-                              cache_key=key)
+                              cache_key=key, faults=faults,
+                              checkpoint=checkpoint)
 
 
 def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
@@ -302,19 +327,22 @@ def sharded_sweep_fedbuff(client_update: Callable, x0, client_data,
                           mesh: Optional[Mesh] = None,
                           bucket_widths: Optional[Sequence[int]] = None,
                           record_every: int = 1, telemetry=None,
-                          engine: str = "scan") -> FedResult:
+                          engine: str = "scan", faults=None,
+                          checkpoint=None) -> FedResult:
     """``sweep_fedbuff`` (fused path) with the cell axis sharded."""
     horizon = resolve_grid_horizon(horizon, grid, fed=True,
                                    buffer_size=buffer_size, n_steps=n_steps)
+    faults = normalize_faults(faults)
 
     def adapter_for(cd):
         return _fedbuff_scan_adapter(client_update, x0, cd, objective,
                                      horizon, eta, buffer_size, record_every,
-                                     telemetry, engine)
+                                     telemetry, engine, faults)
 
     key = ("fedbuff/sharded", grid.n_events, eta, buffer_size, horizon,
-           record_every, telemetry, engine, IdKey(client_update),
+           record_every, telemetry, engine, faults, IdKey(client_update),
            tree_key(x0), tree_key(client_data), IdKey(objective))
     return _sharded_sweep_fed(adapter_for, grid, client_data, buffer_size,
                               n_steps, mesh, bucket_widths=bucket_widths,
-                              cache_key=key)
+                              cache_key=key, faults=faults,
+                              checkpoint=checkpoint)

@@ -85,6 +85,11 @@ class RunRecord:
     clipped: Dict[str, int]
     policies: List[str]
     timings: List[Dict[str, Any]]
+    # fault-injection counters (summed over cells): injected / dropped /
+    # duplicated / rejected_nonfinite / rejected_stale / degraded.
+    # None when the run had no FaultSpec (faults-off runs ledger
+    # identically to pre-fault records).
+    faults: Optional[Dict[str, int]] = None
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), sort_keys=True)
@@ -124,13 +129,14 @@ def spec_fingerprint(spec: Any, grid: Any = None) -> str:
     specs fingerprint identically, and component/escape-hatch specs fall
     back to the grid's cell labels."""
     try:
+        faults = getattr(spec, "faults", None)
         if spec is not None and getattr(spec.problem, "problem", None) is None:
             desc = repr((spec.problem, spec.solver, spec.topology,
                          spec.policies, spec.delay, spec.execution,
-                         spec.n_events))
+                         spec.n_events, faults))
         elif grid is not None:
             desc = repr((type(spec).__name__ if spec is not None else None,
-                         tuple(grid.labels()), grid.n_events))
+                         tuple(grid.labels()), grid.n_events, faults))
         else:
             desc = repr(spec)
     except Exception:  # never let fingerprinting break a run

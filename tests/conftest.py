@@ -26,6 +26,12 @@ except ImportError:
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    # informational when pytest-timeout is absent (offline container); the
+    # chaos tests ALSO assert wall-clock bounds themselves, and the CI
+    # chaos lane wraps the whole invocation in a shell-level timeout
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test time budget "
+        "(enforced by pytest-timeout when installed)")
 
 
 def pytest_addoption(parser):

@@ -1,0 +1,326 @@
+"""The fault-injection & resilience layer (`repro.faults`).
+
+Load-bearing pins, mirroring the telemetry contract:
+
+* **bitwise-off**: a disabled ``FaultSpec`` normalizes to None and every
+  solver output on every backend is bitwise-equal to never mentioning
+  faults at all -- the fault layer adds zero risk to fault-free runs;
+* **backend equivalence under chaos**: the same ``FaultSpec`` produces
+  bitwise-equal integer outputs (taus) and fault counters on solo,
+  batched and sharded backends (floats to the repo's solo-vs-batched
+  XLA-program envelope), because the fault randomness folds the per-cell
+  seed, not the backend layout;
+* guard semantics at the unit level (drop / dup / corrupt / staleness /
+  degradation);
+* sweep checkpointing: a killed sweep resumes bitwise from saved buckets,
+  and a checkpoint written by a different spec is refused;
+* spec validation: the fused engine and the federated heapq reference
+  twin refuse fault injection loudly instead of ignoring it.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import (Adaptive1, FixedStepSize, L1, make_logreg)
+from repro.core.engine import WorkerModel, heterogeneous_workers
+from repro.core.stepsize import HingeWeight
+from repro.faults import (FAULT_PRESETS, FaultSpec, normalize_faults,
+                          parse_faults)
+from repro.faults.guards import (FaultState, fault_gamma_prime, guard_event,
+                                 guarded_gamma, init_faults, summarize_faults)
+from repro.faults.inject import inject_service_times, update_fault_codes
+from repro.federated.events import heterogeneous_clients
+from repro.sweep import make_grid
+
+N_EVENTS = 100
+N_EVENTS_FED = 80
+
+SOLVER_KW = {"piag": {}, "bcd": {"m": 8}, "fedasync": {},
+             "fedbuff": {"eta": 0.5, "buffer_size": 2}}
+
+# the repo's documented solo-vs-batched float contract: integer outputs
+# are exact, float outputs agree to a few ulps (different XLA programs)
+FLOAT_TOL = dict(rtol=1e-5, atol=1e-6)
+
+CHAOS = FaultSpec(p_crash=0.05, p_rejoin=0.3, crash_scale=20.0,
+                  p_spike=0.05, p_drop=0.05, p_dup=0.05, p_corrupt=0.05,
+                  staleness_cutoff=64, seed=3)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def prox(problem):
+    return L1(lam=problem.lam1)
+
+
+@pytest.fixture(scope="module")
+def worker_grid(problem):
+    gp = 0.99 / problem.L
+    return make_grid(
+        policies={"a1": Adaptive1(gamma_prime=gp),
+                  "fx": FixedStepSize(gamma_prime=gp, tau_bound=40)},
+        seeds=[0, 1],
+        topologies={"uniform": [WorkerModel() for _ in range(4)],
+                    "hetero": heterogeneous_workers(4, seed=1)},
+        n_events=N_EVENTS)
+
+
+@pytest.fixture(scope="module")
+def fed_grid():
+    return make_grid(
+        policies={"hinge": HingeWeight(gamma_prime=0.6)},
+        seeds=[0, 1],
+        topologies={"edge": heterogeneous_clients(4, seed=2)},
+        n_events=N_EVENTS_FED)
+
+
+def _grid_for(solver, worker_grid, fed_grid):
+    return fed_grid if solver in ("fedasync", "fedbuff") else worker_grid
+
+
+def _run(solver, backend, problem, grid, prox, faults, **kw):
+    return api.run_components(solver, backend, problem=problem, grid=grid,
+                              prox=prox, horizon=4096, faults=faults,
+                              **{**SOLVER_KW[solver], **kw})
+
+
+# -------------------------------------------------- bitwise-off contract --
+
+@pytest.mark.parametrize("backend", api.BACKENDS)
+@pytest.mark.parametrize("solver", list(api.SOLVERS))
+def test_faults_off_is_bitwise(solver, backend, problem, worker_grid,
+                               fed_grid, prox):
+    """A disabled FaultSpec must not perturb a single bit of any solver
+    output on any backend: ``normalize_faults`` collapses it to None and
+    every consumer branches on ``faults is None`` only."""
+    grid = _grid_for(solver, worker_grid, fed_grid)
+    off = _run(solver, backend, problem, grid, prox, faults=None)
+    disabled = _run(solver, backend, problem, grid, prox,
+                    faults=FaultSpec(enabled=False, p_drop=0.5, p_crash=0.5,
+                                     p_rejoin=0.5))
+    assert getattr(off.raw, "faults", None) is None
+    assert getattr(disabled.raw, "faults", None) is None
+    for f in off.raw._fields:
+        if f in ("telemetry", "faults"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(off.raw, f)),
+            np.asarray(getattr(disabled.raw, f)),
+            err_msg=f"{solver}/{backend}/{f}")
+
+
+# ---------------------------------------- backend equivalence under chaos --
+
+@pytest.mark.parametrize("solver", list(api.SOLVERS))
+def test_chaos_solo_matches_batched(solver, problem, worker_grid, fed_grid,
+                                    prox):
+    """Same FaultSpec, same cells: solo and batched agree -- taus bitwise,
+    floats within the solo-vs-batched envelope, fault counters exactly."""
+    grid = _grid_for(solver, worker_grid, fed_grid)
+    batched = _run(solver, "batched", problem, grid, prox, faults=CHAOS)
+    solo = _run(solver, "solo", problem, grid, prox, faults=CHAOS)
+    np.testing.assert_array_equal(np.asarray(batched.raw.taus),
+                                  np.asarray(solo.raw.taus))
+    np.testing.assert_allclose(np.asarray(batched.raw.objective),
+                               np.asarray(solo.raw.objective), **FLOAT_TOL)
+    cb = summarize_faults(batched.raw.faults)
+    cs = summarize_faults(solo.raw.faults)
+    assert cb == cs
+    assert cb["injected"] > 0 or cb["dropped"] > 0  # chaos actually bites
+    assert batched.telemetry.faults == cb  # counters ride the ledger record
+
+
+def test_chaos_counters_survive_sharded(problem, worker_grid, prox):
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+    batched = _run("piag", "batched", problem, worker_grid, prox,
+                   faults=CHAOS)
+    sharded = _run("piag", "sharded", problem, worker_grid, prox,
+                   faults=CHAOS)
+    np.testing.assert_array_equal(np.asarray(batched.raw.taus),
+                                  np.asarray(sharded.raw.taus))
+    assert summarize_faults(batched.raw.faults) \
+        == summarize_faults(sharded.raw.faults)
+
+
+def test_corruption_without_guard_poisons_with_guard_rejects(problem,
+                                                             worker_grid,
+                                                             prox):
+    """The non-finite guard is the difference between a poisoned iterate
+    and a counted skip: with p_corrupt > 0 and the guard off the objective
+    goes NaN; with the guard on every output stays finite."""
+    corrupt = FaultSpec(p_corrupt=0.3, seed=1, guard_nonfinite=False)
+    res_bad = _run("piag", "batched", problem, worker_grid, prox,
+                   faults=corrupt)
+    assert not np.all(np.isfinite(np.asarray(res_bad.raw.objective)))
+    res_ok = _run("piag", "batched", problem, worker_grid, prox,
+                  faults=corrupt.replace(guard_nonfinite=True))
+    assert np.all(np.isfinite(np.asarray(res_ok.raw.objective)))
+    counters = summarize_faults(res_ok.raw.faults)
+    assert counters["rejected_nonfinite"] > 0
+    assert counters["rejected_nonfinite"] >= counters["injected"] * 0 + 1
+
+
+# -------------------------------------------------------- guard units ----
+
+def test_guard_event_drop_dup_and_staleness():
+    spec = FaultSpec(staleness_cutoff=8)
+    fs = init_faults()
+    # clean event: accepted, mult 1
+    acc, mult, fs = guard_event(spec, jnp.int32(0), jnp.int32(2),
+                                jnp.bool_(True), fs)
+    assert bool(acc) and int(mult) == 1
+    # drop: rejected, counted
+    acc, mult, fs = guard_event(spec, jnp.int32(1), jnp.int32(2),
+                                jnp.bool_(True), fs)
+    assert not bool(acc) and int(fs.dropped) == 1
+    # dup: accepted at mult 2
+    acc, mult, fs = guard_event(spec, jnp.int32(2), jnp.int32(2),
+                                jnp.bool_(True), fs)
+    assert bool(acc) and int(mult) == 2 and int(fs.duplicated) == 1
+    # non-finite payload: rejected
+    acc, mult, fs = guard_event(spec, jnp.int32(0), jnp.int32(2),
+                                jnp.bool_(False), fs)
+    assert not bool(acc) and int(fs.rejected_nonfinite) == 1
+    # stale beyond cutoff: rejected
+    acc, mult, fs = guard_event(spec, jnp.int32(0), jnp.int32(9),
+                                jnp.bool_(True), fs)
+    assert not bool(acc) and int(fs.rejected_stale) == 1
+
+
+def test_guarded_gamma_degrades_on_clip():
+    """Horizon overflow with degrade_on_clip falls back to the worst-case
+    bound gamma'/(tau+1) instead of trusting a truncated window sum."""
+    from repro.core.stepsize import Adaptive1 as A1
+    policy = A1(gamma_prime=0.5)
+    ss = policy.init(horizon=4)
+    spec = FaultSpec(degrade_on_clip=True)
+    fs = init_faults()
+    tau = jnp.int32(100)  # way past horizon 4 -> clipped
+    gamma, ss2, fs = guarded_gamma(policy, ss, tau, jnp.int32(1), spec, fs)
+    assert int(fs.degraded) == 1
+    np.testing.assert_allclose(float(gamma),
+                               fault_gamma_prime(policy) / (100 + 1),
+                               rtol=1e-6)
+
+
+def test_summarize_faults_none_and_zero():
+    assert summarize_faults(None) == {}
+    z = summarize_faults(init_faults())
+    assert set(z) == set(FaultState._fields) and all(v == 0
+                                                    for v in z.values())
+
+
+# ----------------------------------------------------- injection units ----
+
+def test_update_fault_codes_deterministic_and_bounded():
+    spec = FaultSpec(p_drop=0.2, p_dup=0.2, p_corrupt=0.2, seed=5)
+    c1 = np.asarray(update_fault_codes(spec, 512, jnp.int32(7)))
+    c2 = np.asarray(update_fault_codes(spec, 512, jnp.int32(7)))
+    np.testing.assert_array_equal(c1, c2)  # same cell seed -> same codes
+    assert set(np.unique(c1)) <= {0, 1, 2, 3}
+    assert (c1 > 0).mean() > 0.3  # ~60% of events faulted at these rates
+    c3 = np.asarray(update_fault_codes(spec, 512, jnp.int32(8)))
+    assert not np.array_equal(c1, c3)  # per-cell streams differ
+
+
+def test_inject_service_times_spikes_stretch_time():
+    T = jnp.ones((4, 64), jnp.float32)
+    spec = FaultSpec(p_crash=0.1, p_rejoin=0.3, crash_scale=25.0, seed=0)
+    Tf = np.asarray(inject_service_times(T, spec, jnp.int32(0)))
+    assert Tf.shape == T.shape
+    assert np.all(Tf >= np.asarray(T) - 1e-6)  # faults only slow workers
+    assert Tf.sum() > float(np.asarray(T).sum()) * 1.5  # outages bite
+
+
+# ----------------------------------------------- checkpointing / resume ----
+
+def test_sweep_checkpoint_resume_bitwise(tmp_path, problem, worker_grid,
+                                         prox):
+    ckpt = str(tmp_path / "ck")
+    first = _run("piag", "batched", problem, worker_grid, prox,
+                 faults=CHAOS, resume=ckpt)
+    files = sorted(p.name for p in (tmp_path / "ck").glob("*.npz"))
+    assert files, "no checkpoint buckets written"
+    again = _run("piag", "batched", problem, worker_grid, prox,
+                 faults=CHAOS, resume=ckpt)
+    for f in first.raw._fields:
+        if f in ("telemetry", "faults"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(getattr(first.raw, f)),
+            np.asarray(getattr(again.raw, f)), err_msg=f)
+    assert summarize_faults(first.raw.faults) \
+        == summarize_faults(again.raw.faults)
+
+
+def test_sweep_checkpoint_refuses_other_spec(tmp_path, problem, worker_grid,
+                                             prox):
+    ckpt = str(tmp_path / "ck2")
+    _run("piag", "batched", problem, worker_grid, prox, faults=CHAOS,
+         resume=ckpt)
+    with pytest.raises(ValueError, match="different spec"):
+        _run("piag", "batched", problem, worker_grid, prox,
+             faults=CHAOS.replace(seed=99), resume=ckpt)
+
+
+# ------------------------------------------------------ spec validation ----
+
+def test_fused_engine_refuses_faults(problem, worker_grid, prox):
+    with pytest.raises(ValueError, match="fused"):
+        api.component_spec("piag", "batched", problem=problem,
+                           grid=worker_grid, prox=prox, engine="fused",
+                           faults=FaultSpec(p_drop=0.1))
+
+
+def test_fed_reference_refuses_faults(problem, fed_grid, prox):
+    with pytest.raises(ValueError, match="reference"):
+        api.component_spec("fedasync", "batched", problem=problem,
+                           grid=fed_grid, prox=prox, reference=True,
+                           faults=FaultSpec(p_drop=0.1))
+
+
+def test_parse_faults_grammar():
+    assert parse_faults(None) is None
+    assert parse_faults("") is None
+    f = parse_faults("chaos,staleness_cutoff=64,seed=7")
+    assert f.p_crash == FAULT_PRESETS["chaos"]["p_crash"]
+    assert f.staleness_cutoff == 64 and f.seed == 7
+    assert parse_faults("p_drop=0.1").p_drop == 0.1
+    with pytest.raises(ValueError, match="unknown fault preset"):
+        parse_faults("nonsense")
+    with pytest.raises(ValueError, match="unknown FaultSpec field"):
+        parse_faults("p_typo=0.1")
+
+
+def test_normalize_and_validation():
+    assert normalize_faults(None) is None
+    assert normalize_faults(FaultSpec(enabled=False)) is None
+    assert normalize_faults(CHAOS) is CHAOS
+    with pytest.raises(TypeError):
+        normalize_faults({"p_drop": 0.1})
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(p_drop=1.5)
+    with pytest.raises(ValueError, match="rejoin"):
+        FaultSpec(p_crash=0.1, p_rejoin=0.0)
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultSpec(corrupt_mode="zero")
+
+
+def test_fault_spec_is_hashable_cache_key():
+    """FaultSpec keys the program cache: value-equal specs must hash
+    equal, distinct specs must not collide trivially."""
+    a = FaultSpec(p_drop=0.1, seed=3)
+    b = FaultSpec(p_drop=0.1, seed=3)
+    assert hash(a) == hash(b) and a == b
+    assert dataclasses.replace(a, seed=4) != a

@@ -1,0 +1,149 @@
+"""Chaos tests for the threaded runtimes (`repro.core.runtime`).
+
+The acceptance pin: a worker killed mid-``PIAGServer.run`` must surface
+as an exception on the master within the heartbeat (5s), never a hang --
+the old master blocked forever on ``out_q.get()``.  Plus: crash/respawn
+with DelayTracker re-stamping, join-leak accounting, and
+``SharedMemoryBCD`` worker-exception propagation (the old master spun
+forever on the write counter).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Adaptive1, L1, PIAGServer, SharedMemoryBCD, make_logreg
+from repro.core.runtime import RunLog, WorkerCrash
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg(240, 40, n_workers=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def policy(problem):
+    return Adaptive1(gamma_prime=0.99 / problem.L)
+
+
+@pytest.fixture(scope="module")
+def prox(problem):
+    return L1(lam=problem.lam1)
+
+
+def test_healthy_run_reports_zero_incidents(problem, policy, prox):
+    srv = PIAGServer(problem, policy, prox, n_workers=4, record_every=10)
+    log = srv.run(100)
+    assert len(log.objective) == 10
+    assert log.crashes == 0 and log.respawns == 0 and log.join_failures == 0
+    assert np.all(np.isfinite(np.asarray(log.objective)))
+
+
+@pytest.mark.timeout(30)
+def test_killed_worker_raises_within_heartbeat(problem, policy, prox):
+    """THE hang fix: worker dies mid-run -> WorkerCrash on the master,
+    chained to the worker's own exception, well inside 5s."""
+    calls = {"n": 0}
+
+    def killer(i):
+        calls["n"] += 1
+        if i == 1 and calls["n"] > 6:
+            raise RuntimeError("injected kill")
+        return 0.0
+
+    srv = PIAGServer(problem, policy, prox, n_workers=4,
+                     worker_sleep=killer, heartbeat=5.0)
+    t0 = time.perf_counter()
+    with pytest.raises(WorkerCrash) as ei:
+        srv.run(2000)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 5.0, f"crash took {elapsed:.1f}s to surface"
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert "injected kill" in str(ei.value.__cause__)
+
+
+@pytest.mark.timeout(60)
+def test_all_workers_dead_raises_not_hangs(problem, policy, prox):
+    def kill_all(i):
+        raise RuntimeError("everyone dies")
+
+    srv = PIAGServer(problem, policy, prox, n_workers=4,
+                     worker_sleep=kill_all, heartbeat=5.0)
+    t0 = time.perf_counter()
+    with pytest.raises((WorkerCrash, TimeoutError)):
+        srv.run(100)
+    assert time.perf_counter() - t0 < 10.0
+
+
+@pytest.mark.timeout(60)
+def test_respawn_revives_crashed_worker(problem, policy, prox):
+    """respawn=True: the crashed worker is revived, its DelayTracker entry
+    re-stamped at the current write count, and the run completes with the
+    incident counted."""
+    state = {"killed": False}
+
+    def kill_once(i):
+        if i == 2 and not state["killed"]:
+            state["killed"] = True
+            raise RuntimeError("transient death")
+        return 0.0
+
+    srv = PIAGServer(problem, policy, prox, n_workers=4,
+                     worker_sleep=kill_once, respawn=True)
+    log = srv.run(200, x0=None)
+    assert log.crashes == 1 and log.respawns == 1
+    assert len(log.objective) == 200
+    assert np.all(np.isfinite(np.asarray(log.objective)))
+    # a rejoined worker was re-stamped: delays stay bounded by the run
+    assert max(log.taus) < 200
+
+
+@pytest.mark.timeout(60)
+def test_respawn_budget_exhausts_to_crash(problem, policy, prox):
+    def always_kill(i):
+        if i == 0:
+            raise RuntimeError("persistent death")
+        return 0.0
+
+    srv = PIAGServer(problem, policy, prox, n_workers=4,
+                     worker_sleep=always_kill, respawn=True, max_respawns=2)
+    with pytest.raises(WorkerCrash):
+        srv.run(2000)
+
+
+@pytest.mark.timeout(60)
+def test_bcd_worker_exception_propagates(problem, policy):
+    """The BCD master used to spin forever on the write counter when a
+    worker died; now the boxed exception re-raises chained."""
+    base = L1(lam=problem.lam1)
+
+    class BadProx:
+        calls = 0
+
+        def prox(self, v, gamma):
+            BadProx.calls += 1
+            if BadProx.calls > 10:
+                raise RuntimeError("bcd injected kill")
+            return base.prox(v, gamma)
+
+    bcd = SharedMemoryBCD(problem, policy, BadProx(), n_workers=4, m_blocks=5)
+    t0 = time.perf_counter()
+    with pytest.raises(WorkerCrash) as ei:
+        bcd.run(100000)
+    assert time.perf_counter() - t0 < 10.0
+    assert "bcd injected kill" in str(ei.value.__cause__)
+
+
+def test_bcd_healthy_run_unaffected(problem, policy, prox):
+    bcd = SharedMemoryBCD(problem, policy, prox, n_workers=4, m_blocks=5,
+                          record_every=10)
+    log = bcd.run(100)
+    assert len(log.objective) == 10
+    assert log.crashes == 0 and log.join_failures == 0
+
+
+def test_runlog_incident_fields_default_zero():
+    log = RunLog()
+    assert (log.crashes, log.respawns, log.join_failures) == (0, 0, 0)
+    # as_arrays is unchanged: four columns, incident counters stay scalar
+    assert len(log.as_arrays()) == 4
