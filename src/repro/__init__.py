@@ -29,6 +29,8 @@ Subpackages:
   serving     continuous-batching scheduler
   configs     assigned architectures + input shapes
   launch      mesh / sharding planner / dry-run / roofline / trainers
+  staticcheck jaxpr contract verifier, cache-key completeness checker,
+              trace-safety lint (CI's static-analysis lane)
 """
 import importlib
 
@@ -38,7 +40,7 @@ __version__ = "1.1.0"
 # `import repro` stays light and `from repro import api` works everywhere
 __all__ = ["api", "analysis", "core", "federated", "sweep", "telemetry",
            "models", "optim", "data", "checkpoint", "kernels", "serving",
-           "configs", "launch"]
+           "configs", "launch", "staticcheck"]
 
 
 def __getattr__(name):

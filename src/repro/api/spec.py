@@ -37,7 +37,7 @@ from typing import Any, Mapping, Optional, Tuple, Union
 
 __all__ = ["ProblemSpec", "SolverSpec", "TopologySpec", "DelaySpec",
            "PolicyGridSpec", "ExecutionSpec", "ExperimentSpec",
-           "SOLVERS", "BACKENDS", "FIXED_FAMILY"]
+           "SOLVERS", "BACKENDS", "FIXED_FAMILY", "SPEC_FAMILY"]
 
 SOLVERS = ("piag", "bcd", "fedasync", "fedbuff")
 BACKENDS = ("solo", "batched", "sharded")
@@ -379,3 +379,14 @@ class ExperimentSpec:
 
     def replace(self, **kwargs) -> "ExperimentSpec":
         return dataclasses.replace(self, **kwargs)
+
+
+# The authoritative enumeration of spec dataclasses whose fields are program
+# knobs.  ``repro.staticcheck.cachekey`` walks every field of every class
+# here (plus FaultSpec and TelemetryConfig, which live in their own
+# packages) and refuses to pass until each has a registered perturbation or
+# an explicit skip-with-reason -- so a knob added to any of these classes
+# without cache-key/staticcheck coverage fails CI rather than silently
+# risking stale-executable reuse.
+SPEC_FAMILY = (ExperimentSpec, ProblemSpec, SolverSpec, TopologySpec,
+               DelaySpec, PolicyGridSpec, ExecutionSpec)

@@ -16,6 +16,16 @@ to force interpret mode everywhere (debugging a kernel on an
 accelerator) or ``0``/``false`` to force compilation (surfacing a
 lowering error on an unsupported backend instead of silently
 interpreting).
+
+The env var is resolved ONCE per process, at the first
+:func:`default_interpret` call (i.e. the first kernel trace): every
+program cached downstream -- jit trace caches, ``sweep.cache`` entries --
+baked that value in as a static argument, so flipping the variable
+mid-process would silently apply to *new* traces only while cached
+executables kept the old mode.  ``default_interpret`` therefore records
+the tri-state it first resolved (forced-on / forced-off / unset) and
+raises ``RuntimeError`` if a later call sees the env var changed; set it
+before the first kernel runs, or restart the process.
 """
 from __future__ import annotations
 
@@ -32,13 +42,15 @@ _FALSY = ("0", "false", "no", "off")
 # backends with a real Pallas lowering: Mosaic (tpu) and Triton (gpu)
 COMPILED_BACKENDS = ("tpu", "gpu")
 
+# 1-tuple holding the env tri-state (True/False forced, None unset) seen at
+# the first default resolve; None while unarmed.  A tuple so that an armed
+# "env unset" state is distinguishable from "never resolved".
+_FIRST_RESOLVED: "tuple | None" = None
 
-def default_interpret() -> bool:
-    """Resolve the interpret-mode default for the current backend.
 
-    Honors the ``REPRO_PALLAS_INTERPRET`` environment variable first;
-    otherwise interprets only where no Pallas lowering exists (cpu).
-    """
+def _env_state() -> "bool | None":
+    """Parse ``REPRO_PALLAS_INTERPRET`` to its tri-state: ``True``/``False``
+    when forced, ``None`` when unset/empty; ``ValueError`` on junk."""
     env = os.environ.get(_ENV_VAR, "").strip().lower()
     if env in _TRUTHY:
         return True
@@ -48,6 +60,46 @@ def default_interpret() -> bool:
         raise ValueError(
             f"{_ENV_VAR}={env!r} not understood; use one of "
             f"{_TRUTHY + _FALSY}")
+    return None
+
+
+def _reset_env_guard() -> None:
+    """Forget the recorded first resolution (tests only -- a real process
+    must never re-arm, that is exactly the staleness the guard exists
+    to surface)."""
+    global _FIRST_RESOLVED
+    _FIRST_RESOLVED = None
+
+
+def default_interpret() -> bool:
+    """Resolve the interpret-mode default for the current backend.
+
+    Honors the ``REPRO_PALLAS_INTERPRET`` environment variable first;
+    otherwise interprets only where no Pallas lowering exists (cpu).
+    Raises ``RuntimeError`` if the env var's effective value changed since
+    the first resolution in this process (see module docstring): cached
+    programs already baked the first value in, so honoring the new one
+    would be silently inconsistent.
+    """
+    global _FIRST_RESOLVED
+    state = _env_state()  # parse errors win over the staleness guard
+    if _FIRST_RESOLVED is None:
+        _FIRST_RESOLVED = (state,)
+    elif _FIRST_RESOLVED[0] is not state:
+        first = _FIRST_RESOLVED[0]
+
+        def _show(s):
+            return "unset" if s is None else f"forced {'on' if s else 'off'}"
+
+        raise RuntimeError(
+            f"{_ENV_VAR} changed mid-process: first kernel trace resolved "
+            f"it as {_show(first)}, now it is {_show(state)}.  Programs "
+            "cached since then baked the first value in (jit trace caches, "
+            "sweep.cache executables), so the change cannot take effect "
+            "consistently.  Set the variable before the first kernel runs, "
+            "or restart the process.")
+    if state is not None:
+        return state
     return jax.default_backend() not in COMPILED_BACKENDS
 
 

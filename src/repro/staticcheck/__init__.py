@@ -1,0 +1,28 @@
+"""Static analysis for the async-sweep engine (`repro.staticcheck`).
+
+Three layers, each turning a prose contract from ROADMAP's durable notes
+into a machine check:
+
+* :mod:`repro.staticcheck.jaxpr` -- canonicalize ``ClosedJaxpr``s
+  (alpha-rename, source-info-free, param-sorted) so two traces can be
+  structurally diffed; the substrate for the other layers.
+* :mod:`repro.staticcheck.contracts` -- jaxpr contract verifier: disabled
+  faults are bitwise the ``faults=None`` program, feature knobs actually
+  change the trace when enabled, ``engine='fused'`` and ``'scan'`` agree on
+  input/output avals; across solvers and backends.
+* :mod:`repro.staticcheck.cachekey` -- cache-key completeness: perturb
+  every spec knob one at a time and assert that any perturbation changing
+  the canonical jaxpr also changes the ``sweep.cache`` key (the
+  stale-executable-reuse bug class), plus a retrace-budget gate.
+* :mod:`repro.staticcheck.lint` / ``rules`` -- trace-safety AST lint
+  (``python -m repro.staticcheck.lint src/``) with repo-specific rules
+  distilled from historical bugs, each backed by a known-bad fixture under
+  ``staticcheck/fixtures/``.
+
+``python -m repro.staticcheck`` runs the dynamic layers (contracts +
+completeness + retrace budget); the lint CLI is its own module so it stays
+importable without jax.
+"""
+from __future__ import annotations
+
+__all__ = ["jaxpr", "contracts", "cachekey", "lint", "rules"]

@@ -1,0 +1,43 @@
+"""``python -m repro.staticcheck``: the full static-analysis gate.
+
+Runs, in order: the trace-safety lint over ``src/``, the jaxpr contract
+verifier, and the cache-key completeness + retrace-budget checks -- the
+same three lanes CI's ``static-analysis`` job runs individually.  Exits
+non-zero if ANY layer fails.
+"""
+from __future__ import annotations
+
+import os
+
+from . import cachekey, contracts, lint
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck",
+        description="lint + jaxpr contracts + cache-key completeness")
+    p.add_argument("--quick", action="store_true",
+                   help="contract subset (piag+fedbuff, batched only)")
+    p.add_argument("--verbose", action="store_true")
+    p.add_argument("--src", default=None,
+                   help="tree to lint (default: the repro package itself)")
+    args = p.parse_args(argv)
+
+    src = args.src or os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))
+
+    print(f"== lint {src} ==")
+    rc_lint = lint.main([src])
+    print("== jaxpr contracts ==")
+    rc_contracts = contracts.main(
+        (["--quick"] if args.quick else [])
+        + (["--verbose"] if args.verbose else []))
+    print("== cache-key completeness ==")
+    rc_cachekey = cachekey.main(["--verbose"] if args.verbose else [])
+    return 1 if (rc_lint or rc_contracts or rc_cachekey) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

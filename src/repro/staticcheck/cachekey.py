@@ -1,0 +1,551 @@
+"""Cache-key completeness checking for the sweep-program cache.
+
+The stale-executable-reuse bug class (patched by hand in PRs 5-8): a spec
+knob that changes the traced program but does NOT ride the
+``sweep.cache`` key makes ``cached_program`` serve an executable compiled
+for a different configuration.  This module closes the class mechanically:
+
+* :func:`capture` runs ``api.run(spec)`` with a ``sweep.cache`` capture
+  hook installed -- the hook intercepts the ``cached_program`` dispatch,
+  traces the program with ``jax.make_jaxpr`` (no compile, no execution),
+  and aborts with the ``(cache key, canonical jaxpr, input avals)``
+  triple.
+* :func:`check_completeness` perturbs every registered spec knob one at a
+  time against a tiny base spec and classifies the effect.  The violation
+  predicate is exact: a perturbation is a stale-reuse hazard iff it leaves
+  the cache key AND the input avals unchanged while changing the
+  canonical jaxpr (equal avals matter: jit's own shape-keyed trace cache
+  re-traces on aval changes, so e.g. ``n_events`` is safe without a key
+  entry).
+* the registry is a FORCING FUNCTION: every field of every class in
+  ``api.spec.SPEC_FAMILY`` (plus ``FaultSpec`` and ``TelemetryConfig``)
+  must carry either a perturbation or an explicit skip-with-reason;
+  an unregistered field fails the check, so a knob added by a later PR
+  cannot silently dodge coverage.
+* :func:`check_retrace_budget` captures a representative spec matrix and
+  gates the number of distinct ``cached_program`` builds (and asserts
+  value-equal specs reuse one key -- the resolve-memoization contract).
+
+CLI: ``python -m repro.staticcheck.cachekey`` (CI: static-analysis lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.api.run import run
+from repro.api.spec import (SPEC_FAMILY, DelaySpec, ExecutionSpec,
+                            ExperimentSpec, PolicyGridSpec, ProblemSpec,
+                            SolverSpec, TopologySpec)
+from repro.faults.spec import FaultSpec
+from repro.sweep import cache as _cache
+from repro.telemetry.accumulators import TelemetryConfig
+
+from . import jaxpr as _jaxpr
+
+__all__ = ["ProgramCapture", "Captured", "capture", "BASES", "REGISTRY",
+           "Perturb", "Skip", "Outcome", "check_completeness",
+           "check_retrace_budget", "strip_faults_from_key",
+           "RETRACE_BUDGET", "REPRESENTATIVE", "main"]
+
+
+# ------------------------------------------------------------- capture ----
+
+class ProgramCapture(Exception):
+    """Abort signal carrying one intercepted ``cached_program`` dispatch."""
+
+    def __init__(self, key, closed):
+        self.key = key
+        self.closed = closed
+        super().__init__("cached_program dispatch captured")
+
+
+@dataclasses.dataclass(frozen=True)
+class Captured:
+    """What one dispatch looked like: the cache key, the program's input
+    avals, and the canonical-jaxpr fingerprint (lines kept for diffs)."""
+
+    key: Any
+    in_avals: Tuple[str, ...]
+    out_avals: Tuple[str, ...]
+    fingerprint: str
+    lines: Tuple[str, ...]
+
+    def jaxpr_equal(self, other: "Captured") -> bool:
+        return self.fingerprint == other.fingerprint
+
+
+def capture(spec: ExperimentSpec,
+            key_filter: Optional[Callable[[tuple], tuple]] = None
+            ) -> Optional[Captured]:
+    """Trace the first sweep program ``api.run(spec)`` would dispatch.
+
+    Returns ``None`` when the run never consults ``cached_program``
+    (solo backend, federated ``reference=True``) -- those paths build
+    fresh per call, so they cannot serve a stale executable; the run then
+    executes for real (keep such specs tiny).
+
+    ``key_filter`` post-processes the observed cache key before it is
+    recorded -- the seam the seeded-mutation self-test uses to simulate
+    "someone removed knob X from the key".
+    """
+
+    def hook(key, build):
+        fn = build()
+
+        def tracer(*args, **kwargs):
+            closed = jax.make_jaxpr(fn)(*args, **kwargs)
+            raise ProgramCapture(
+                key if key_filter is None else key_filter(key), closed)
+
+        return tracer
+
+    prev = _cache.set_capture_hook(hook)
+    try:
+        try:
+            run(spec)
+        except ProgramCapture as pc:
+            return Captured(
+                key=pc.key,
+                in_avals=tuple(a.str_short() for a in pc.closed.in_avals),
+                out_avals=tuple(a.str_short() for a in pc.closed.out_avals),
+                fingerprint=_jaxpr.fingerprint(pc.closed),
+                lines=tuple(_jaxpr.canonical_lines(pc.closed)))
+        return None
+    finally:
+        _cache.set_capture_hook(prev)
+
+
+def strip_faults_from_key(key: tuple) -> tuple:
+    """The seeded mutation: drop the ``FaultSpec`` element from a cache
+    key, simulating a runner that forgot to thread ``faults`` through --
+    under this filter :func:`check_completeness` MUST report violations."""
+    return tuple(el for el in key if not isinstance(el, FaultSpec))
+
+
+# ---------------------------------------------------------- base specs ----
+
+_TINY_PROBLEM = dict(n_samples=48, dim=6, seed=0)
+
+
+def base_spec(solver: str = "piag", **over) -> ExperimentSpec:
+    """A deliberately tiny spec: 3 workers, 6 dims, 12 events, horizon 32
+    -- cheap to trace, yet it exercises the same cache-key construction
+    as a production sweep."""
+    fed = solver in ("fedasync", "fedbuff")
+    fields: Dict[str, Any] = dict(
+        problem=ProblemSpec(kind="logreg", params=dict(_TINY_PROBLEM)),
+        solver=SolverSpec(name=solver, horizon=32, m=3),
+        topology=TopologySpec(kind="edge" if fed else "standard",
+                              names=None if fed else ("uniform",),
+                              n_workers=(3,)),
+        policies=PolicyGridSpec(names=("adaptive1",), seeds=(0,)),
+        delay=DelaySpec(measure=False),
+        execution=ExecutionSpec(backend="batched"),
+        n_events=12,
+        validate_horizon=False,
+    )
+    fields.update(over)
+    return ExperimentSpec(**fields)
+
+
+_FAULTED = FaultSpec(p_crash=0.05, p_spike=0.1, p_drop=0.1, p_dup=0.05,
+                     p_corrupt=0.05, seed=0)
+
+# named bases so registry entries (and reports) reference them by string
+BASES: Dict[str, Callable[[], ExperimentSpec]] = {
+    "piag": lambda: base_spec("piag"),
+    "bcd": lambda: base_spec("bcd"),
+    "fedasync": lambda: base_spec("fedasync"),
+    "fedbuff": lambda: base_spec("fedbuff"),
+    "piag/faulted": lambda: base_spec("piag", faults=_FAULTED),
+    "piag/telemetry": lambda: base_spec(
+        "piag", execution=ExecutionSpec(backend="batched", telemetry=True)),
+    "piag/sharded": lambda: base_spec(
+        "piag", execution=ExecutionSpec(backend="sharded")),
+}
+
+
+# ------------------------------------------------------------ registry ----
+
+@dataclasses.dataclass(frozen=True)
+class Perturb:
+    """One knob perturbation: run ``apply(BASES[base]())`` and compare the
+    captured (key, avals, jaxpr) against the base capture."""
+
+    base: str
+    apply: Callable[[ExperimentSpec], ExperimentSpec]
+
+
+@dataclasses.dataclass(frozen=True)
+class Skip:
+    """Explicit opt-out; the reason is part of the report (and the point:
+    a skip must argue why the knob cannot cause stale reuse)."""
+
+    reason: str
+
+
+def _re(spec: ExperimentSpec, **kw) -> ExperimentSpec:
+    return spec.replace(**kw)
+
+
+def _sub(attr: str):
+    def inner(spec: ExperimentSpec, **kw) -> ExperimentSpec:
+        return spec.replace(
+            **{attr: dataclasses.replace(getattr(spec, attr), **kw)})
+    return inner
+
+
+_ex, _sv, _tp, _dl, _pg, _pb = (_sub("execution"), _sub("solver"),
+                                _sub("topology"), _sub("delay"),
+                                _sub("policies"), _sub("problem"))
+
+
+def _fl(spec: ExperimentSpec, **kw) -> ExperimentSpec:
+    return spec.replace(faults=dataclasses.replace(spec.faults, **kw))
+
+
+_COMPOUND = Skip("compound spec object; its fields are enumerated "
+                 "individually below")
+
+REGISTRY: Dict[Tuple[str, str], Any] = {
+    # ExperimentSpec ----------------------------------------------------
+    ("ExperimentSpec", "problem"): _COMPOUND,
+    ("ExperimentSpec", "solver"): _COMPOUND,
+    ("ExperimentSpec", "topology"): _COMPOUND,
+    ("ExperimentSpec", "policies"): _COMPOUND,
+    ("ExperimentSpec", "delay"): _COMPOUND,
+    ("ExperimentSpec", "execution"): _COMPOUND,
+    ("ExperimentSpec", "faults"): Skip(
+        "compound FaultSpec; fields enumerated individually (it rides "
+        "every key by value -- frozen hashable dataclass)"),
+    ("ExperimentSpec", "n_events"): Perturb(
+        "piag", lambda s: _re(s, n_events=24)),
+    ("ExperimentSpec", "grid"): Skip(
+        "prebuilt-SweepGrid escape hatch: its service times / policy "
+        "params are traced program INPUTS, and captured worker data is "
+        "identity-keyed (IdKey) -- a different grid object never aliases "
+        "a cached program's captures"),
+    ("ExperimentSpec", "validate_horizon"): Skip(
+        "resolve-time validation toggle; raises or passes before any "
+        "program is built, never reaches the traced program"),
+    # ProblemSpec -------------------------------------------------------
+    ("ProblemSpec", "kind"): Perturb(
+        "piag", lambda s: _pb(s, kind="lasso")),
+    ("ProblemSpec", "params"): Perturb(
+        "piag", lambda s: _pb(s, params=dict(_TINY_PROBLEM, seed=1))),
+    ("ProblemSpec", "prox"): Perturb(
+        "piag", lambda s: _pb(s, prox="l2", prox_params=dict(lam=0.01))),
+    ("ProblemSpec", "prox_params"): Perturb(
+        "piag", lambda s: _pb(s, prox_params=dict(lam=0.05))),
+    ("ProblemSpec", "problem"): Skip(
+        "prebuilt-object escape hatch; the object itself is captured and "
+        "identity-keyed (IdKey) through the runner pieces"),
+    ("ProblemSpec", "prox_op"): Skip(
+        "prebuilt-object escape hatch; identity-keyed like `problem`"),
+    # SolverSpec --------------------------------------------------------
+    ("SolverSpec", "name"): Perturb(
+        "piag", lambda s: _sv(s, name="bcd")),
+    ("SolverSpec", "horizon"): Perturb(
+        "piag", lambda s: _sv(s, horizon=64)),
+    ("SolverSpec", "m"): Perturb(
+        "bcd", lambda s: _sv(s, m=2)),
+    ("SolverSpec", "eta"): Perturb(
+        "fedbuff", lambda s: _sv(s, eta=0.5)),
+    ("SolverSpec", "buffer_size"): Perturb(
+        "fedbuff", lambda s: _sv(s, buffer_size=2)),
+    ("SolverSpec", "local_lr"): Perturb(
+        "fedbuff", lambda s: _sv(s, local_lr=0.05)),
+    ("SolverSpec", "n_steps"): Perturb(
+        "fedasync", lambda s: _sv(s, n_steps=40)),
+    # TopologySpec ------------------------------------------------------
+    ("TopologySpec", "kind"): Skip(
+        "selects the worker/client factory family; reaches the program "
+        "only through sampled service-time VALUES (traced inputs) and the "
+        "width axis, both covered by `names` / `n_workers`"),
+    ("TopologySpec", "names"): Perturb(
+        "piag", lambda s: _tp(s, names=("hetero2",))),
+    ("TopologySpec", "n_workers"): Perturb(
+        "piag", lambda s: _tp(s, n_workers=(4,))),
+    ("TopologySpec", "seed"): Perturb(
+        "piag", lambda s: _tp(s, seed=1)),
+    ("TopologySpec", "params"): Skip(
+        "forwarded to the topology factory; like `seed`, it only changes "
+        "sampled service-time values (traced inputs), never the program"),
+    ("TopologySpec", "topologies"): Skip(
+        "custom escape hatch (concrete worker lists / factories); "
+        "service-time values only, as above"),
+    # DelaySpec ---------------------------------------------------------
+    ("DelaySpec", "use_tau_max"): Perturb(
+        "piag", lambda s: _dl(s, use_tau_max=False)),
+    ("DelaySpec", "expected_max_delay"): Perturb(
+        "piag", lambda s: _dl(s, expected_max_delay=20)),
+    ("DelaySpec", "measure"): Perturb(
+        "piag", lambda s: _dl(s, measure=True)),
+    ("DelaySpec", "horizon_slack"): Perturb(
+        "piag", lambda s: _dl(s, horizon_slack=2)),
+    # PolicyGridSpec ----------------------------------------------------
+    ("PolicyGridSpec", "names"): Perturb(
+        "piag", lambda s: _pg(s, names=("adaptive2",))),
+    ("PolicyGridSpec", "seeds"): Perturb(
+        "piag", lambda s: _pg(s, seeds=(0, 1))),
+    ("PolicyGridSpec", "gamma_prime"): Perturb(
+        "piag", lambda s: _pg(s, gamma_prime=0.5)),
+    ("PolicyGridSpec", "tau_bound"): Perturb(
+        "piag", lambda s: _pg(s, tau_bound=8)),
+    ("PolicyGridSpec", "policy_kwargs"): Skip(
+        "forwarded to policy constructors; lands in PolicyParams, which "
+        "are traced program inputs (the fused select chain dispatches on "
+        "a traced policy id, not on the program structure)"),
+    ("PolicyGridSpec", "policies"): Skip(
+        "prebuilt-StepsizePolicy escape hatch; params are traced inputs "
+        "as above"),
+    # ExecutionSpec -----------------------------------------------------
+    ("ExecutionSpec", "backend"): Perturb(
+        "piag", lambda s: _ex(s, backend="solo")),
+    ("ExecutionSpec", "devices"): Perturb(
+        "piag/sharded", lambda s: _ex(s, backend="sharded", devices=1)),
+    ("ExecutionSpec", "mesh"): Skip(
+        "prebuilt-Mesh escape hatch; the mesh object rides the sharded "
+        "cache key itself (hashable), so a different mesh keys fresh"),
+    # padding a 3-worker grid to width-4 buckets needs 4 rows of worker
+    # data, so the problem is widened alongside (both changes ride the key)
+    ("ExecutionSpec", "bucket_widths"): Perturb(
+        "piag", lambda s: _ex(
+            _pb(s, params=dict(_TINY_PROBLEM, n_workers=4)),
+            bucket_widths=(4,))),
+    ("ExecutionSpec", "reference"): Perturb(
+        "fedasync", lambda s: _ex(s, reference=True)),
+    ("ExecutionSpec", "record_every"): Perturb(
+        "piag", lambda s: _ex(s, record_every=2)),
+    ("ExecutionSpec", "telemetry"): Perturb(
+        "piag", lambda s: _ex(s, telemetry=True)),
+    ("ExecutionSpec", "telemetry_bins"): Perturb(
+        "piag/telemetry", lambda s: _ex(s, telemetry=True,
+                                        telemetry_bins=8)),
+    ("ExecutionSpec", "engine"): Perturb(
+        "piag", lambda s: _ex(s, engine="fused")),
+    # FaultSpec ---------------------------------------------------------
+    ("FaultSpec", "p_crash"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_crash=0.2)),
+    ("FaultSpec", "p_rejoin"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_rejoin=0.5)),
+    ("FaultSpec", "crash_scale"): Perturb(
+        "piag/faulted", lambda s: _fl(s, crash_scale=10.0)),
+    ("FaultSpec", "p_spike"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_spike=0.3)),
+    ("FaultSpec", "spike_scale"): Perturb(
+        "piag/faulted", lambda s: _fl(s, spike_scale=4.0)),
+    ("FaultSpec", "spike_tail"): Perturb(
+        "piag/faulted", lambda s: _fl(s, spike_tail=2.0)),
+    ("FaultSpec", "p_drop"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_drop=0.3)),
+    ("FaultSpec", "p_dup"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_dup=0.2)),
+    ("FaultSpec", "p_corrupt"): Perturb(
+        "piag/faulted", lambda s: _fl(s, p_corrupt=0.2)),
+    ("FaultSpec", "corrupt_mode"): Perturb(
+        "piag/faulted", lambda s: _fl(s, corrupt_mode="inf")),
+    ("FaultSpec", "guard_nonfinite"): Perturb(
+        "piag/faulted", lambda s: _fl(s, guard_nonfinite=False)),
+    ("FaultSpec", "staleness_cutoff"): Perturb(
+        "piag/faulted", lambda s: _fl(s, staleness_cutoff=8)),
+    ("FaultSpec", "degrade_on_clip"): Perturb(
+        "piag/faulted", lambda s: _fl(s, degrade_on_clip=False)),
+    ("FaultSpec", "seed"): Perturb(
+        "piag/faulted", lambda s: _fl(s, seed=1)),
+    ("FaultSpec", "enabled"): Perturb(
+        "piag/faulted", lambda s: _fl(s, enabled=False)),
+    # TelemetryConfig ---------------------------------------------------
+    ("TelemetryConfig", "delay_bins"): Perturb(
+        "piag/telemetry", lambda s: _ex(s, telemetry=True,
+                                        telemetry_bins=16)),
+}
+
+# the classes whose fields the forcing function enumerates
+_ENUMERATED = tuple(SPEC_FAMILY) + (FaultSpec, TelemetryConfig)
+
+
+def unregistered_fields() -> List[Tuple[str, str]]:
+    """Spec-family fields with neither a perturbation nor a skip -- the
+    forcing function's output; non-empty fails the check."""
+    missing = []
+    for cls in _ENUMERATED:
+        for f in dataclasses.fields(cls):
+            if (cls.__name__, f.name) not in REGISTRY:
+                missing.append((cls.__name__, f.name))
+    return missing
+
+
+# ------------------------------------------------------- completeness ----
+
+@dataclasses.dataclass(frozen=True)
+class Outcome:
+    """The classified effect of one knob perturbation."""
+
+    cls: str
+    field: str
+    base: str
+    status: str  # key-changed | value-only | shape-retrace | uncached |
+    #              skip | VIOLATION
+    detail: str = ""
+
+    @property
+    def violation(self) -> bool:
+        return self.status == "VIOLATION"
+
+
+def _classify(name: Tuple[str, str], base_name: str, a: Optional[Captured],
+              b: Optional[Captured]) -> Outcome:
+    cls, field = name
+    if a is None or b is None:
+        which = [w for w, c in (("base", a), ("perturbed", b)) if c is None]
+        return Outcome(cls, field, base_name, "uncached",
+                       f"{'/'.join(which)} run never consulted "
+                       "cached_program (solo / heapq reference path: "
+                       "built fresh per call, no stale-reuse surface)")
+    key_same = a.key == b.key
+    avals_same = a.in_avals == b.in_avals
+    jaxpr_same = a.jaxpr_equal(b)
+    if jaxpr_same:
+        return Outcome(cls, field, base_name, "value-only",
+                       "program unchanged (knob reaches it as a traced "
+                       "value, or not at all)"
+                       + ("" if key_same else "; key changed anyway"))
+    if not key_same:
+        return Outcome(cls, field, base_name, "key-changed",
+                       "program changed and so did the cache key")
+    if not avals_same:
+        return Outcome(cls, field, base_name, "shape-retrace",
+                       "program changed under the SAME key, but input "
+                       "avals changed too -- jit's shape-keyed trace "
+                       "cache re-traces, no stale reuse")
+    return Outcome(cls, field, base_name, "VIOLATION",
+                   "canonical jaxpr changed while cache key AND input "
+                   "avals stayed equal -- cached_program would serve the "
+                   "stale executable")
+
+
+def check_completeness(
+        key_filter: Optional[Callable[[tuple], tuple]] = None,
+        only: Optional[List[Tuple[str, str]]] = None) -> List[Outcome]:
+    """Run every registered perturbation and classify it; see module
+    docstring for the violation predicate.  ``only`` restricts to a subset
+    of ``(class, field)`` names (tests); ``key_filter`` simulates a key
+    mutation (the self-test seam)."""
+    missing = unregistered_fields()
+    if missing and only is None:
+        raise AssertionError(
+            "spec knobs with no cache-key coverage registered in "
+            f"repro.staticcheck.cachekey.REGISTRY: {missing}.  Register a "
+            "Perturb (or an explicit Skip with a reason) for each.")
+    base_caps: Dict[str, Optional[Captured]] = {}
+    outcomes: List[Outcome] = []
+    for name, entry in REGISTRY.items():
+        if only is not None and name not in only:
+            continue
+        if isinstance(entry, Skip):
+            outcomes.append(Outcome(name[0], name[1], "-", "skip",
+                                    entry.reason))
+            continue
+        if entry.base not in base_caps:
+            base_caps[entry.base] = capture(BASES[entry.base](),
+                                            key_filter=key_filter)
+        a = base_caps[entry.base]
+        b = capture(entry.apply(BASES[entry.base]()), key_filter=key_filter)
+        outcomes.append(_classify(name, entry.base, a, b))
+    return outcomes
+
+
+# ----------------------------------------------------- retrace budget ----
+
+# the representative matrix CI counts distinct cached_program builds over;
+# entries are (label, spec builder) -- note the deliberate duplicate of the
+# plain piag spec, asserting value-equal specs land on ONE key
+REPRESENTATIVE: List[Tuple[str, Callable[[], ExperimentSpec]]] = [
+    ("piag", BASES["piag"]),
+    ("piag (repeat)", BASES["piag"]),
+    ("piag telemetry", BASES["piag/telemetry"]),
+    ("piag record_every=2",
+     lambda: base_spec("piag",
+                       execution=ExecutionSpec(backend="batched",
+                                               record_every=2))),
+    ("bcd", BASES["bcd"]),
+    ("fedasync", BASES["fedasync"]),
+    ("fedbuff", BASES["fedbuff"]),
+]
+
+# exact number of distinct (key, in_avals) programs the matrix may build;
+# raising it needs a deliberate edit here (a retrace regression otherwise)
+RETRACE_BUDGET = 6
+
+
+def check_retrace_budget() -> Tuple[int, List[str]]:
+    """Capture the representative matrix; return (distinct program count,
+    failure messages).  Failures: budget exceeded, or a repeated
+    value-equal spec failing to reuse its key (a resolve-memoization
+    regression -- api.run's memos must hand the cache identical captured
+    objects)."""
+    captures = [(label, capture(build())) for label, build in REPRESENTATIVE]
+    errors: List[str] = []
+    seen: Dict[Any, str] = {}
+    for label, cap in captures:
+        if cap is None:
+            errors.append(f"{label}: unexpectedly uncached")
+            continue
+        seen.setdefault((cap.key, cap.in_avals), label)
+    distinct = len(seen)
+    by_label = dict(captures)
+    a, b = by_label.get("piag"), by_label.get("piag (repeat)")
+    if a is None or b is None or a.key != b.key:
+        errors.append(
+            "value-equal piag specs produced DIFFERENT cache keys -- the "
+            "resolve memoization (api.run _PROBLEM_MEMO/_PIECES_MEMO) is "
+            "no longer handing cached_program identical captured objects")
+    if distinct > RETRACE_BUDGET:
+        errors.append(
+            f"representative matrix built {distinct} distinct programs > "
+            f"budget {RETRACE_BUDGET}; if the growth is intentional, raise "
+            "RETRACE_BUDGET in repro/staticcheck/cachekey.py")
+    return distinct, errors
+
+
+# ----------------------------------------------------------------- CLI ----
+
+def main(argv=None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck.cachekey",
+        description="cache-key completeness + retrace-budget checks")
+    p.add_argument("--verbose", action="store_true",
+                   help="print every outcome, not just failures")
+    args = p.parse_args(argv)
+
+    outcomes = check_completeness()
+    violations = [o for o in outcomes if o.violation]
+    counts: Dict[str, int] = {}
+    for o in outcomes:
+        counts[o.status] = counts.get(o.status, 0) + 1
+    print("cache-key completeness:",
+          ", ".join(f"{v} {k}" for k, v in sorted(counts.items())))
+    for o in outcomes:
+        if args.verbose or o.violation:
+            print(f"  [{o.status}] {o.cls}.{o.field} (base {o.base}): "
+                  f"{o.detail}")
+
+    distinct, errors = check_retrace_budget()
+    print(f"retrace budget: {distinct} distinct programs "
+          f"(budget {RETRACE_BUDGET})")
+    for e in errors:
+        print(f"  [FAIL] {e}")
+
+    ok = not violations and not errors
+    print("cachekey:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,261 @@
+"""Jaxpr contract verifier: the engine's prose invariants as machine checks.
+
+The repo's correctness story rests on a handful of structural contracts
+that were, until now, enforced only by numeric pin tests:
+
+* **off-is-absent** -- ``faults=None`` / a disabled ``FaultSpec`` and
+  ``telemetry=None`` produce EXACTLY the pre-feature jaxpr (the solver
+  scans branch host-side on ``x is None``, never on a traced predicate),
+  and passing the kwargs explicitly as ``None`` is identical to omitting
+  them (default-drift guard);
+* **on-is-live** -- enabling faults / telemetry actually changes the
+  traced program (a dead knob would silently pin nothing);
+* **engine parity** -- ``engine='fused'`` (Pallas) and ``engine='scan'``
+  (pure XLA) agree on input AND output avals: same interface, different
+  body.
+
+Verified at two levels:
+
+* **scan level** (the solo backend's substrate): ``jax.make_jaxpr`` of
+  ``piag_scan`` / ``bcd_scan`` / ``fedasync_scan`` / ``fedbuff_scan``
+  called directly -- this exercises the in-scan ``normalize_faults`` and
+  keyword defaults;
+* **program level** (batched / sharded backends): the exact executables
+  ``api.run`` would cache, intercepted via
+  :func:`repro.staticcheck.cachekey.capture` (traced, never compiled),
+  compared by canonical fingerprint -- and their cache keys must agree or
+  differ in lockstep with the jaxprs.
+
+CLI: ``python -m repro.staticcheck.contracts`` (CI: static-analysis lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import ExecutionSpec
+from repro.core.bcd import bcd_scan
+from repro.core.piag import piag_scan
+from repro.core.problems import make_logreg
+from repro.core.prox import make_prox
+from repro.core.stepsize import make_policy
+from repro.faults.inject import update_fault_codes
+from repro.faults.spec import FaultSpec
+from repro.federated.server import _problem_pieces, fedasync_scan, fedbuff_scan
+from repro.telemetry.accumulators import TelemetryConfig
+
+from . import cachekey as _ck
+from . import jaxpr as _jaxpr
+
+__all__ = ["Check", "verify_scan_level", "verify_program_level", "verify",
+           "SOLVERS", "main"]
+
+SOLVERS = ("piag", "bcd", "fedasync", "fedbuff")
+
+_K = 12  # events in the scan-level traces
+_FAULTED = FaultSpec(p_crash=0.05, p_spike=0.1, p_drop=0.1, p_corrupt=0.05,
+                     seed=0)
+_DISABLED = FaultSpec(p_drop=0.9, p_corrupt=0.9, staleness_cutoff=2,
+                      enabled=False)  # loud knobs that must all be inert
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    name: str
+    ok: bool
+    detail: str = ""
+
+
+# ----------------------------------------------------------- scan level ----
+
+def _pieces():
+    problem = make_logreg(48, 6, n_workers=3, seed=0)
+    prox = make_prox("l1", lam=0.01)
+    policy = make_policy("adaptive1", 0.1)
+    return problem, prox, policy
+
+
+def _scan_caller(solver: str) -> Callable[..., Any]:
+    """A closure ``call(**extra) -> ClosedJaxpr`` tracing the solver's core
+    scan with tiny fixed pieces; ``extra`` kwargs are forwarded verbatim so
+    callers can compare explicit-``None`` against kwarg-omitted traces."""
+    problem, prox, policy = _pieces()
+    H = dict(horizon=32)
+    if solver == "piag":
+        Aw, bw = problem.worker_slices()
+        x0 = jnp.zeros((problem.dim,), jnp.float32)
+        loss = lambda x, A, b: problem.worker_loss(x, A, b)
+
+        def call(**extra):
+            def fn(w, tau):
+                return piag_scan(loss, x0, (Aw, bw), (w, tau), policy, prox,
+                                 objective=problem.P, **H, **extra)
+            return jax.make_jaxpr(fn)(jnp.zeros(_K, jnp.int32),
+                                      jnp.zeros(_K, jnp.int32))
+        return call
+    if solver == "bcd":
+        x0 = jnp.zeros((problem.dim,), jnp.float32)
+
+        def call(**extra):
+            def fn(w, tau, blk):
+                return bcd_scan(problem.grad_f, problem.P, x0, 3, 3,
+                                (w, tau, blk), policy, prox, **H, **extra)
+            z = jnp.zeros(_K, jnp.int32)
+            return jax.make_jaxpr(fn)(z, z, z)
+        return call
+    # federated
+    update, x0, data = _problem_pieces(problem, prox, None)
+    scan = fedasync_scan if solver == "fedasync" else fedbuff_scan
+    fed_kw = {} if solver == "fedasync" else dict(eta=1.0, buffer_size=1)
+
+    def call(**extra):
+        def fn(client, tau, steps, agg, version):
+            events = (client, tau, steps, agg, version)
+            return scan(update, x0, data, events, policy,
+                        objective=problem.P, **fed_kw, **H, **extra)
+        z = jnp.zeros(_K, jnp.int32)
+        return jax.make_jaxpr(fn)(z, z, jnp.ones(_K, jnp.int32),
+                                  jnp.ones(_K, jnp.float32), z)
+    return call
+
+
+def verify_scan_level(solvers=SOLVERS) -> List[Check]:
+    checks: List[Check] = []
+    for s in solvers:
+        call = _scan_caller(s)
+        base = call()
+
+        def add(name: str, ok: bool, detail: str = ""):
+            checks.append(Check(f"scan/{s}/{name}", ok, detail))
+
+        explicit = call(faults=None, telemetry=None)
+        add("explicit-none-is-omitted",
+            _jaxpr.fingerprint(explicit) == _jaxpr.fingerprint(base),
+            _jaxpr.diff(base, explicit, "omitted", "explicit None"))
+
+        disabled = call(faults=_DISABLED)
+        add("disabled-faults-are-none",
+            _jaxpr.fingerprint(disabled) == _jaxpr.fingerprint(base),
+            _jaxpr.diff(base, disabled, "faults=None", "disabled FaultSpec"))
+
+        codes = update_fault_codes(_FAULTED, _K, 0)
+        faulted = call(faults=_FAULTED, fault_codes=codes)
+        add("faults-live",
+            _jaxpr.fingerprint(faulted) != _jaxpr.fingerprint(base),
+            "enabling faults did not change the traced program (dead knob)")
+
+        telem = call(telemetry=TelemetryConfig())
+        add("telemetry-live",
+            _jaxpr.fingerprint(telem) != _jaxpr.fingerprint(base),
+            "enabling telemetry did not change the traced program")
+
+        fused = call(engine="fused")
+        add("fused-scan-io-parity",
+            _jaxpr.io_avals(fused) == _jaxpr.io_avals(base),
+            f"fused {_jaxpr.io_avals(fused)} != scan {_jaxpr.io_avals(base)}")
+        add("fused-is-a-different-body",
+            _jaxpr.fingerprint(fused) != _jaxpr.fingerprint(base),
+            "engine='fused' traced identically to 'scan'")
+    return checks
+
+
+# -------------------------------------------------------- program level ----
+
+def _spec(solver: str, backend: str, **over):
+    return _ck.base_spec(
+        solver,
+        execution=ExecutionSpec(backend=backend,
+                                **over.pop("execution_kw", {})),
+        **over)
+
+
+def verify_program_level(solvers=SOLVERS,
+                         backends=("batched", "sharded")) -> List[Check]:
+    checks: List[Check] = []
+    for s in solvers:
+        for b in backends:
+            base = _ck.capture(_spec(s, b))
+
+            def add(name: str, ok: bool, detail: str = ""):
+                checks.append(Check(f"{b}/{s}/{name}", ok, detail))
+
+            if base is None:
+                add("captured", False,
+                    f"backend {b} unexpectedly bypassed cached_program")
+                continue
+
+            disabled = _ck.capture(_spec(s, b, faults=_DISABLED))
+            add("disabled-faults-are-none",
+                disabled is not None
+                and disabled.fingerprint == base.fingerprint
+                and disabled.key == base.key,
+                "disabled FaultSpec must reuse the faults=None program AND "
+                "its cache key (normalize_faults chain)")
+
+            faulted = _ck.capture(_spec(s, b, faults=_FAULTED))
+            add("faults-live",
+                faulted is not None
+                and faulted.fingerprint != base.fingerprint
+                and faulted.key != base.key,
+                "enabling faults must change program and key")
+
+            telem = _ck.capture(
+                _spec(s, b, execution_kw=dict(telemetry=True)))
+            add("telemetry-live",
+                telem is not None and telem.fingerprint != base.fingerprint
+                and telem.key != base.key,
+                "enabling telemetry must change program and key")
+
+            if b == "batched":
+                fused = _ck.capture(
+                    _spec(s, b, execution_kw=dict(engine="fused")))
+                add("fused-scan-io-parity",
+                    fused is not None
+                    and fused.in_avals == base.in_avals
+                    and fused.out_avals == base.out_avals
+                    and fused.fingerprint != base.fingerprint,
+                    "fused and scan programs must agree on input/output "
+                    "avals while differing in body")
+    return checks
+
+
+def verify(quick: bool = False) -> List[Check]:
+    """The full contract matrix; ``quick=True`` restricts to PIAG +
+    FedBuff and the batched backend (the test-suite subset)."""
+    solvers = ("piag", "fedbuff") if quick else SOLVERS
+    backends = ("batched",) if quick else ("batched", "sharded")
+    return verify_scan_level(solvers) + verify_program_level(solvers,
+                                                             backends)
+
+
+# ----------------------------------------------------------------- CLI ----
+
+def main(argv=None) -> int:
+    import argparse
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck.contracts",
+        description="jaxpr contract verifier (solvers x backends)")
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--verbose", action="store_true")
+    args = p.parse_args(argv)
+
+    checks = verify(quick=args.quick)
+    failed = [c for c in checks if not c.ok]
+    for c in checks:
+        if args.verbose or not c.ok:
+            status = "ok" if c.ok else "FAIL"
+            print(f"[{status}] {c.name}")
+            if not c.ok and c.detail:
+                head = "\n".join(c.detail.splitlines()[:40])
+                print(f"       {head}")
+    print(f"contracts: {len(checks) - len(failed)}/{len(checks)} ok")
+    return 0 if not failed else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""Known-bad fixture for JIT001: host entropy inside traced code.
+
+Never imported or executed.  Covers both traced-scope origins: a
+jit-decorated function and a ``lax.scan`` body.
+"""
+import random
+import time
+
+import jax
+from jax import lax
+
+
+@jax.jit
+def noisy_step(x):
+    jitter = random.random()  # BAD: frozen at trace time
+    time.sleep(0.001)  # BAD: runs once, at trace time only
+    return x * (1.0 + jitter)
+
+
+def _body(carry, x):
+    now = time.time()  # BAD: the scan bakes in one timestamp forever
+    return carry + x * now, x
+
+
+def run(xs):
+    return lax.scan(_body, 0.0, xs)

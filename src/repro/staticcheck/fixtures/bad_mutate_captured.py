@@ -1,0 +1,21 @@
+"""Known-bad fixture for CACHE001: in-place mutation of an array after it
+was captured by ``IdKey`` / ``tree_key`` for a ``cached_program`` key.
+
+Never imported or executed.  Both function-local and module-level capture
+scopes are exercised.
+"""
+import numpy as np
+
+from repro.sweep.cache import IdKey, cached_program, tree_key
+
+_DATA = np.ones(4)
+_KEY = ("fixture", IdKey(_DATA))
+_DATA[:] = 0.0  # BAD: the key above now points at different contents
+
+
+def build_and_mutate(data, x0):
+    key = ("fixture", IdKey(data), tree_key(x0))
+    prog = cached_program(key, lambda: None)
+    data[0] = 0.0  # BAD: mutates a captured array after keying
+    data.fill(1.0)  # BAD: ditto, via a mutating ndarray method
+    return prog

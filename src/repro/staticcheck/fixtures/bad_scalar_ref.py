@@ -1,0 +1,25 @@
+"""Known-bad fixture for PAL002: 0-d ``ShapeDtypeStruct(())`` in Pallas
+scope.
+
+Never imported or executed.  The call site is otherwise routed correctly
+so that ONLY PAL002 triggers here.
+"""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_interpret
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].sum()
+
+
+def run(x, interpret=None):
+    # BAD: a 0-d out-shape traces in interpret mode but the ref fails to
+    # lower; scalars must ride shape (1,) refs.
+    return pl.pallas_call(
+        _sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(x)

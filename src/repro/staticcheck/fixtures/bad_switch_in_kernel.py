@@ -1,0 +1,35 @@
+"""Known-bad fixture for PAL001: ``lax.switch`` inside a Pallas kernel.
+
+This file is NEVER imported or executed -- it exists so the lint's test
+suite can prove the rule fires.  The pallas_call itself is routed
+correctly (non-literal interpret via dispatch) so that ONLY PAL001
+triggers here.
+"""
+import jax
+import jax.experimental.pallas as pl
+from jax import lax
+
+from repro.kernels.dispatch import resolve_interpret
+
+
+def _branch_a(x):
+    return x + 1.0
+
+
+def _branch_b(x):
+    return x - 1.0
+
+
+def _kernel(idx_ref, x_ref, o_ref):
+    x = x_ref[...]
+    # BAD: switch has no lowering inside compiled Pallas kernels; it only
+    # appears to work because interpret mode traces it.
+    o_ref[...] = lax.switch(idx_ref[0], [_branch_a, _branch_b], x)
+
+
+def run(idx, x, interpret=None):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=resolve_interpret(interpret),
+    )(idx, x)

@@ -1,0 +1,44 @@
+"""Known-bad fixture for JIT002: host ``if``/``while`` on a traced value
+inside a scan/while body.
+
+Never imported or executed.  The ``faults is None`` idiom the engine
+actually uses is exempt (structure test) -- included below to prove the
+exemption holds.
+"""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _body(carry, x):
+    if x > 0:  # BAD: python branch on a tracer
+        carry = carry + x
+    return carry, carry
+
+
+def run(xs):
+    return lax.scan(_body, jnp.float32(0.0), xs)
+
+
+def _cond(val):
+    return val < 10.0
+
+
+def _loop_body(val):
+    total = val
+    while total < 10.0:  # BAD: python loop on a tracer (via assignment)
+        total = total + 1.0
+    return total
+
+
+def run_while(x0):
+    return lax.while_loop(_cond, _loop_body, x0)
+
+
+def _ok_body(carry, x):
+    if x is not None:  # OK: `is` tests are trace-time structure checks
+        return carry + x, x
+    return carry, x
+
+
+def run_ok(xs):
+    return lax.scan(_ok_body, jnp.float32(0.0), xs)

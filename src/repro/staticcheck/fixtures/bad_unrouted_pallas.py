@@ -1,0 +1,41 @@
+"""Known-bad fixture for PAL003: ``pallas_call`` not routed through
+``kernels.dispatch``.
+
+Never imported or executed.  Three distinct failure shapes, all PAL003:
+no ``interpret=`` at all, a hard-coded literal, and a pass-through
+variable in a module that never touches dispatch.
+"""
+import jax
+import jax.experimental.pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run_missing(x):
+    # BAD: no interpret kwarg -- jax's default, not the backend-aware one.
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def run_literal(x):
+    # BAD: hard-coded interpret flag.
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def run_unrouted(x, interpret):
+    # BAD: non-literal, but this module never references
+    # default_interpret/resolve_interpret, so the default can't be the
+    # dispatch one.
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

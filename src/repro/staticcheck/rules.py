@@ -1,0 +1,489 @@
+"""The trace-safety lint rules (`repro.staticcheck.rules`).
+
+Each rule is distilled from a bug this repo actually shipped (or nearly
+shipped) and carries a known-bad fixture under ``staticcheck/fixtures/``:
+
+* ``PAL001`` -- ``lax.switch`` inside a Pallas kernel body.  ``switch``
+  has no lowering inside compiled Pallas kernels (PR 2's wrap bug hid
+  behind exactly this; ``fused_step.select_gamma`` exists because the
+  switch had to become a nested ``where`` chain).
+* ``PAL002`` -- 0-d ``ShapeDtypeStruct(())`` in Pallas scope.  Pallas
+  refs must carry scalars as shape ``(1,)``; a 0-d ref traces in
+  interpret mode and dies in the Mosaic/Triton lowering (the fused-step
+  carry layout note in ROADMAP).
+* ``PAL003`` -- a ``pl.pallas_call`` not routed through
+  ``kernels.dispatch``: missing ``interpret=`` kwarg, a hard-coded
+  literal, or a module that never touches ``default_interpret`` /
+  ``resolve_interpret``.  PR 7 fixed a wrong backend default precisely
+  because call sites resolved interpret ad hoc.
+* ``JIT001`` -- Python ``random`` / ``time`` / ``datetime`` (or
+  ``numpy.random``) called inside jit-decorated functions or
+  scan/while/cond bodies: traced once, frozen forever -- the value the
+  program bakes in is whatever the clock/RNG said at TRACE time.
+* ``JIT002`` -- host-side ``if``/``while`` on a traced value inside a
+  scan/while/cond body (a ``TracerBoolConversionError`` at best, silent
+  python-level specialization at worst).  ``x is None`` / ``isinstance``
+  tests are exempt: those branch on trace-time structure, the engine's
+  sanctioned pattern (``faults is None`` IS the faults-off contract).
+* ``CACHE001`` -- in-place mutation of an array after it was captured by
+  ``IdKey`` / ``tree_key`` for a ``cached_program`` key: identity keying
+  treats captures as frozen; mutating one serves stale executables
+  (see ``sweep.cache`` docs and ``REPRO_CACHE_CHECK``).
+
+Rules are pure AST analysis -- no imports of the linted code, so the lint
+runs without jax and in a fraction of a second.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "ModuleInfo", "Rule", "ALL_RULES", "RULE_DOCS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+# ------------------------------------------------------------- helpers ----
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _call_name(call: ast.Call) -> str:
+    return _dotted(call.func) or ""
+
+
+def _last(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _walk_calls(node: ast.AST) -> Iterable[ast.Call]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def _own_body(func: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function's (or module's) body EXCLUDING nested function defs
+    -- their statements belong to the nested scope.  Pre-order, source
+    order: taint propagation in JIT002 depends on seeing assignments
+    before the branches that use them."""
+    def rec(nodes):
+        for n in nodes:
+            if isinstance(n, _FUNC_NODES):
+                continue  # nested scope: analyzed separately
+            yield n
+            yield from rec(ast.iter_child_nodes(n))
+    yield from rec(getattr(func, "body", []))
+
+
+def _first_pos_func_name(call: ast.Call, index: int = 0) -> Optional[str]:
+    """Function name passed at positional ``index``: a bare Name, or the
+    first argument of a ``functools.partial(...)`` wrapper."""
+    if len(call.args) <= index:
+        return None
+    arg = call.args[index]
+    if isinstance(arg, ast.Name):
+        return arg.id
+    if isinstance(arg, ast.Call) and _last(_call_name(arg)) == "partial" \
+            and arg.args and isinstance(arg.args[0], ast.Name):
+        return arg.args[0].id
+    return None
+
+
+# traced-body positions of the jax control-flow primitives
+_BODY_POSITIONS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+}
+
+
+def _is_lax_flow(name: str, seg: str) -> bool:
+    """True for ``lax.scan`` / ``jax.lax.scan`` style spellings (and the
+    bare name when imported from lax -- accepted; the repo idiom is the
+    qualified form)."""
+    return _last(name) == seg and (name == seg or ".lax." in f".{name}"
+                                   or name.startswith("lax."))
+
+
+class ModuleInfo:
+    """Shared per-module analysis consumed by every rule."""
+
+    def __init__(self, tree: ast.Module, path: str):
+        self.tree = tree
+        self.path = path
+        # every named function in the module (any nesting), by bare name
+        self.funcs: Dict[str, List[ast.AST]] = {}
+        for n in ast.walk(tree):
+            if isinstance(n, _FUNC_NODES):
+                self.funcs.setdefault(n.name, []).append(n)
+        self.pallas_calls: List[ast.Call] = [
+            c for c in _walk_calls(tree)
+            if _last(_call_name(c)) == "pallas_call"]
+        self.references_dispatch = any(
+            _last(_dotted(n) or "") in ("default_interpret",
+                                        "resolve_interpret")
+            for n in ast.walk(tree)
+            if isinstance(n, (ast.Name, ast.Attribute)))
+        self._kernel_funcs: Optional[Set[ast.AST]] = None
+        self._pallas_scope: Optional[Set[ast.AST]] = None
+        self._traced_scopes: Optional[List[Tuple[ast.AST, str]]] = None
+
+    # -- call-graph closures (same-module, by bare name) ----------------
+    def _closure(self, roots: Set[ast.AST]) -> Set[ast.AST]:
+        seen = set(roots)
+        frontier = list(roots)
+        while frontier:
+            f = frontier.pop()
+            for call in _walk_calls(f):
+                callee = _last(_call_name(call))
+                for g in self.funcs.get(callee, []):
+                    if g not in seen:
+                        seen.add(g)
+                        frontier.append(g)
+        return seen
+
+    @property
+    def kernel_funcs(self) -> Set[ast.AST]:
+        """Functions that run INSIDE a Pallas kernel: the first positional
+        argument of each ``pallas_call`` plus same-module transitive
+        callees."""
+        if self._kernel_funcs is None:
+            roots: Set[ast.AST] = set()
+            for call in self.pallas_calls:
+                name = _first_pos_func_name(call)
+                if name:
+                    roots.update(self.funcs.get(name, []))
+            self._kernel_funcs = self._closure(roots)
+        return self._kernel_funcs
+
+    @property
+    def pallas_scope(self) -> Set[ast.AST]:
+        """Functions involved in LAUNCHING Pallas kernels: any function
+        containing a ``pallas_call`` plus same-module transitive callees
+        (out-shape builders and the like) plus the kernel bodies."""
+        if self._pallas_scope is None:
+            launchers = {
+                f for fs in self.funcs.values() for f in fs
+                if any(_last(_call_name(c)) == "pallas_call"
+                       for c in _walk_calls(f))}
+            self._pallas_scope = self._closure(launchers) | self.kernel_funcs
+        return self._pallas_scope
+
+    @property
+    def traced_scopes(self) -> List[Tuple[ast.AST, str]]:
+        """(function, origin) pairs whose bodies execute under a trace:
+        jit-decorated functions (origin ``'jit'``) and functions passed as
+        scan/while/fori/cond bodies (origin = the primitive name), plus
+        functions nested inside either (origin ``'<outer origin>+nested'``)."""
+        if self._traced_scopes is None:
+            scopes: Dict[ast.AST, str] = {}
+            for fs in self.funcs.values():
+                for f in fs:
+                    for dec in getattr(f, "decorator_list", []):
+                        target = dec.func if isinstance(dec, ast.Call) else dec
+                        name = _dotted(target) or ""
+                        if _last(name) == "jit":
+                            scopes[f] = "jit"
+                        elif isinstance(dec, ast.Call) \
+                                and _last(name) == "partial" \
+                                and dec.args \
+                                and _last(_dotted(dec.args[0]) or "") == "jit":
+                            scopes[f] = "jit"
+            for call in _walk_calls(self.tree):
+                name = _call_name(call)
+                for seg, positions in _BODY_POSITIONS.items():
+                    if not _is_lax_flow(name, seg):
+                        continue
+                    for pos in positions:
+                        fname = _first_pos_func_name(call, pos)
+                        for f in self.funcs.get(fname or "", []):
+                            scopes.setdefault(f, seg)
+                # switch: every element of the branch list is a body
+                if _is_lax_flow(name, "switch") and len(call.args) > 1 \
+                        and isinstance(call.args[1], (ast.List, ast.Tuple)):
+                    for el in call.args[1].elts:
+                        if isinstance(el, ast.Name):
+                            for f in self.funcs.get(el.id, []):
+                                scopes.setdefault(f, "switch")
+            for f, origin in list(scopes.items()):
+                for n in ast.walk(f):
+                    if isinstance(n, _FUNC_NODES) and n is not f \
+                            and n not in scopes:
+                        scopes[n] = f"{origin}+nested"
+            self._traced_scopes = list(scopes.items())
+        return self._traced_scopes
+
+
+class Rule:
+    name = ""
+    doc = ""
+
+    def check(self, info: ModuleInfo) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, info: ModuleInfo, node: ast.AST, msg: str) -> Finding:
+        return Finding(info.path, getattr(node, "lineno", 0),
+                       getattr(node, "col_offset", 0), self.name, msg)
+
+
+# --------------------------------------------------------------- rules ----
+
+class SwitchInKernel(Rule):
+    name = "PAL001"
+    doc = ("lax.switch inside a Pallas kernel body (no lowering in "
+           "compiled kernels; use a nested `where` chain like "
+           "fused_step.select_gamma)")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        for f in info.kernel_funcs:
+            for call in _walk_calls(f):
+                if _is_lax_flow(_call_name(call), "switch"):
+                    out.append(self.finding(
+                        info, call,
+                        f"lax.switch inside Pallas kernel body "
+                        f"{getattr(f, 'name', '?')!r}: switch does not "
+                        "lower in compiled kernels (interpret mode hides "
+                        "it); use a nested jnp.where chain"))
+        return out
+
+
+class ScalarRefShape(Rule):
+    name = "PAL002"
+    doc = ("0-d ShapeDtypeStruct(()) in Pallas scope; kernel refs must "
+           "carry scalars as shape (1,)")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        for f in info.pallas_scope:
+            for call in _walk_calls(f):
+                if _last(_call_name(call)) != "ShapeDtypeStruct":
+                    continue
+                if call.args and isinstance(call.args[0], ast.Tuple) \
+                        and not call.args[0].elts:
+                    out.append(self.finding(
+                        info, call,
+                        "0-d ShapeDtypeStruct(()) in Pallas scope: kernel "
+                        "refs must carry scalars as shape (1,) (0-d refs "
+                        "trace in interpret mode but fail to lower)"))
+        return out
+
+
+class UnroutedPallasCall(Rule):
+    name = "PAL003"
+    doc = ("pallas_call not routed through kernels.dispatch: interpret= "
+           "must be present, non-literal, and resolved via "
+           "default_interpret/resolve_interpret")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        for call in info.pallas_calls:
+            kw = next((k for k in call.keywords if k.arg == "interpret"),
+                      None)
+            if kw is None:
+                out.append(self.finding(
+                    info, call,
+                    "pallas_call without interpret=...: the backend "
+                    "default must come from kernels.dispatch "
+                    "(default_interpret/resolve_interpret), not jax's"))
+                continue
+            if isinstance(kw.value, ast.Constant):
+                out.append(self.finding(
+                    info, kw.value,
+                    f"pallas_call with hard-coded interpret="
+                    f"{kw.value.value!r}: pass the caller's interpret "
+                    "through kernels.dispatch.resolve_interpret instead"))
+            elif not info.references_dispatch:
+                out.append(self.finding(
+                    info, call,
+                    "pallas_call in a module that never references "
+                    "kernels.dispatch (default_interpret/"
+                    "resolve_interpret): new Pallas entry points must "
+                    "route their interpret default through dispatch"))
+        return out
+
+
+_ENTROPY_PREFIXES = ("random.", "time.", "datetime.", "np.random.",
+                     "numpy.random.")
+
+
+class HostEntropyInTrace(Rule):
+    name = "JIT001"
+    doc = ("python random/time/datetime inside jitted or scanned code "
+           "(traced once, frozen into the executable)")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        for f, origin in info.traced_scopes:
+            for call in _own_body_calls(f):
+                name = _call_name(call)
+                if any(name == p[:-1] or name.startswith(p)
+                       for p in _ENTROPY_PREFIXES):
+                    out.append(self.finding(
+                        info, call,
+                        f"{name}() inside traced code ({origin} scope "
+                        f"{getattr(f, 'name', '?')!r}): evaluated once at "
+                        "trace time and baked into every later execution; "
+                        "thread PRNG keys / host timestamps in as "
+                        "arguments instead"))
+        return out
+
+
+def _own_body_calls(func: ast.AST) -> Iterable[ast.Call]:
+    for n in _own_body(func):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+class TracedBranch(Rule):
+    name = "JIT002"
+    doc = ("host-side if/while on a traced value inside a scan/while/cond "
+           "body (`is None` / isinstance structure tests are exempt)")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        for f, origin in info.traced_scopes:
+            if origin == "jit":
+                continue  # jit statics are legitimate host branches
+            tainted = {a.arg for a in _all_args(f)} - {"self"}
+            for stmt in _stmts_in_order(f):
+                if isinstance(stmt, ast.Assign):
+                    if any(isinstance(n, ast.Name) and n.id in tainted
+                           for n in ast.walk(stmt.value)):
+                        for t in stmt.targets:
+                            for n in ast.walk(t):
+                                if isinstance(n, ast.Name):
+                                    tainted.add(n.id)
+                if isinstance(stmt, (ast.If, ast.While)) \
+                        and not _branch_exempt(stmt.test, tainted):
+                    names = sorted({n.id for n in ast.walk(stmt.test)
+                                    if isinstance(n, ast.Name)
+                                    and n.id in tainted})
+                    out.append(self.finding(
+                        info, stmt,
+                        f"host `{type(stmt).__name__.lower()}` on traced "
+                        f"value(s) {names} inside {origin} body "
+                        f"{getattr(f, 'name', '?')!r}: python control flow "
+                        "cannot branch on tracers; use jnp.where / "
+                        "lax.cond (or restructure so the branch is on a "
+                        "host static)"))
+        return out
+
+
+def _all_args(func: ast.AST) -> List[ast.arg]:
+    a = getattr(func, "args", None)
+    if a is None:
+        return []
+    return list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs) + \
+        ([a.vararg] if a.vararg else []) + ([a.kwarg] if a.kwarg else [])
+
+
+def _stmts_in_order(func: ast.AST) -> Iterable[ast.stmt]:
+    for n in _own_body(func):
+        if isinstance(n, ast.stmt):
+            yield n
+
+
+def _branch_exempt(test: ast.expr, tainted: Set[str]) -> bool:
+    """True when the test cannot be a tracer-boolean: no tainted names, or
+    every tainted reference sits under an `is [not] None` / isinstance
+    structure check (trace-time constants)."""
+    if not any(isinstance(n, ast.Name) and n.id in tainted
+               for n in ast.walk(test)):
+        return True
+    if isinstance(test, ast.Compare) \
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.Call) \
+            and _last(_call_name(test)) in ("isinstance", "callable",
+                                            "hasattr", "len"):
+        return _last(_call_name(test)) != "len"
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _branch_exempt(test.operand, tainted)
+    if isinstance(test, ast.BoolOp):
+        return all(_branch_exempt(v, tainted) for v in test.values)
+    return False
+
+
+_MUTATING_METHODS = ("fill", "sort", "put", "resize", "itemset", "setfield",
+                     "partition", "setflags")
+
+
+class MutateCaptured(Rule):
+    name = "CACHE001"
+    doc = ("in-place mutation of an array after capture by IdKey/tree_key "
+           "(cached_program treats captures as frozen)")
+
+    def check(self, info: ModuleInfo) -> List[Finding]:
+        out = []
+        scopes: List[ast.AST] = [info.tree]
+        scopes += [f for fs in info.funcs.values() for f in fs]
+        for scope in scopes:
+            nodes = list(_own_body(scope))
+            captured = {
+                c.args[0].id
+                for c in nodes if isinstance(c, ast.Call)
+                and _last(_call_name(c)) in ("IdKey", "tree_key")
+                and c.args and isinstance(c.args[0], ast.Name)}
+            if not captured:
+                continue
+            for n in nodes:
+                target = None
+                if isinstance(n, ast.Assign):
+                    for t in n.targets:
+                        if isinstance(t, ast.Subscript) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id in captured:
+                            target = t.value.id
+                elif isinstance(n, ast.AugAssign) \
+                        and isinstance(n.target, ast.Subscript) \
+                        and isinstance(n.target.value, ast.Name) \
+                        and n.target.value.id in captured:
+                    target = n.target.value.id
+                elif isinstance(n, ast.Call) \
+                        and isinstance(n.func, ast.Attribute) \
+                        and n.func.attr in _MUTATING_METHODS \
+                        and isinstance(n.func.value, ast.Name) \
+                        and n.func.value.id in captured:
+                    target = n.func.value.id
+                if target is not None:
+                    out.append(self.finding(
+                        info, n,
+                        f"in-place mutation of {target!r} after it was "
+                        "captured by IdKey/tree_key for a cached_program "
+                        "key: identity-keyed captures are frozen -- the "
+                        "cache would keep serving the executable compiled "
+                        "against the old contents (REPRO_CACHE_CHECK=1 "
+                        "catches this at runtime; build a new array "
+                        "instead)"))
+        return out
+
+
+ALL_RULES: Sequence[Rule] = (SwitchInKernel(), ScalarRefShape(),
+                             UnroutedPallasCall(), HostEntropyInTrace(),
+                             TracedBranch(), MutateCaptured())
+
+RULE_DOCS = {r.name: r.doc for r in ALL_RULES}

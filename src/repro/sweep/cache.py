@@ -25,20 +25,33 @@ serving the executable compiled against the old contents (the same is true
 of any jit-captured constant, but before this cache each call re-traced and
 re-read).  Treat sweep inputs as immutable, or build new arrays; after an
 in-place mutation, call ``clear_program_cache()``.
+
+``REPRO_CACHE_CHECK=1`` turns that contract into a runtime assertion:
+array-valued captures are fingerprinted (shape/dtype + content hash) when
+their entry is built and re-verified on every cache hit, so an in-place
+mutation raises instead of silently serving the stale executable.
+
+``set_capture_hook`` lets ``repro.staticcheck`` intercept ``cached_program``
+dispatches -- the hook sees ``(key, build)`` and substitutes its own
+callable, bypassing the cache entirely -- to record cache keys and traced
+jaxprs without compiling or executing anything.
 """
 from __future__ import annotations
 
+import hashlib
+import os
 import time
 from collections import OrderedDict
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.telemetry.timing import record_timing
 
 __all__ = ["IdKey", "LRU", "tree_key", "cached_program",
            "clear_program_cache", "program_cache_stats",
-           "PROGRAM_CACHE_MAXSIZE"]
+           "set_capture_hook", "PROGRAM_CACHE_MAXSIZE"]
 
 PROGRAM_CACHE_MAXSIZE = 128
 
@@ -73,12 +86,14 @@ class LRU:
     """Tiny LRU keyed on hashable tuples; also reused by ``repro.api`` to
     memoize resolve-time artifacts (problems, prox ops, runner pieces)."""
 
-    def __init__(self, maxsize: int):
+    def __init__(self, maxsize: int,
+                 on_evict: Optional[Callable[[Any], None]] = None):
         self.maxsize = maxsize
         self.data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.on_evict = on_evict
 
     def get(self, key, build: Callable[[], Any]):
         try:
@@ -88,20 +103,98 @@ class LRU:
             val = build()
             self.data[key] = val
             while len(self.data) > self.maxsize:
-                self.data.popitem(last=False)
+                evicted, _ = self.data.popitem(last=False)
                 self.evictions += 1
+                if self.on_evict is not None:
+                    self.on_evict(evicted)
             return val
         self.hits += 1
         self.data.move_to_end(key)
         return val
 
 
-_PROGRAMS = LRU(PROGRAM_CACHE_MAXSIZE)
+_PROGRAMS = LRU(PROGRAM_CACHE_MAXSIZE,
+                on_evict=lambda key: _FINGERPRINTS.pop(key, None))
 
 # bumped by clear_program_cache(); snapshot consumers (api.run's per-call
 # cache deltas) compare generations to detect that the absolute counters
 # were reset between their snapshots
 _GENERATION = 0
+
+# REPRO_CACHE_CHECK fingerprints, keyed like _PROGRAMS (pruned on eviction)
+_FINGERPRINTS: dict = {}
+
+# staticcheck's dispatch interceptor; None in normal operation
+_CAPTURE_HOOK: Optional[Callable[[Tuple, Callable[[], Any]], Any]] = None
+
+
+def set_capture_hook(hook):
+    """Install ``hook(key, build)`` to intercept every ``cached_program``
+    dispatch (pass ``None`` to uninstall); returns the previous hook.  While
+    installed, the cache is bypassed entirely: the hook's return value is
+    handed back to the runner in place of the cached executable.  This is
+    the seam ``repro.staticcheck.cachekey`` uses to observe cache keys and
+    capture traced jaxprs without compiling."""
+    global _CAPTURE_HOOK
+    prev = _CAPTURE_HOOK
+    _CAPTURE_HOOK = hook
+    return prev
+
+
+def _cache_check_enabled() -> bool:
+    return (os.environ.get("REPRO_CACHE_CHECK", "").strip().lower()
+            in ("1", "true", "yes", "on"))
+
+
+def _captured_arrays(key: Any, path: str = "key"):
+    """Yield ``(path, IdKey)`` for every identity-keyed array inside a
+    (possibly nested) key tuple -- numpy buffers and jax Arrays both; other
+    captures (closures, prox ops, meshes) have no mutable numeric payload
+    worth hashing."""
+    if isinstance(key, tuple):
+        for i, el in enumerate(key):
+            yield from _captured_arrays(el, f"{path}[{i}]")
+    elif isinstance(key, IdKey) and isinstance(key.obj, (np.ndarray, jax.Array)):
+        yield path, key
+
+
+def _array_fingerprint(obj: Any) -> str:
+    try:
+        arr = np.asarray(obj)
+    except Exception as exc:  # deleted buffer (e.g. donated jax Array)
+        return f"<unreadable:{type(exc).__name__}>"
+    h = hashlib.sha1()
+    h.update(str(arr.shape).encode())
+    h.update(str(arr.dtype).encode())
+    flat = np.ascontiguousarray(arr).reshape(-1)
+    if flat.size > 65536:  # cheap strided sample for big buffers
+        flat = np.ascontiguousarray(flat[:: flat.size // 65536 + 1])
+    h.update(flat.tobytes())
+    return h.hexdigest()
+
+
+def _key_fingerprints(key: Tuple) -> Tuple:
+    return tuple((path, _array_fingerprint(ik.obj))
+                 for path, ik in _captured_arrays(key))
+
+
+def _verify_fingerprints(key: Tuple) -> None:
+    fresh = _key_fingerprints(key)
+    prior = _FINGERPRINTS.get(key)
+    if prior is None:
+        _FINGERPRINTS[key] = fresh
+        return
+    if prior == fresh:
+        return
+    changed = [p for (p, a), (_, b) in zip(prior, fresh) if a != b]
+    raise RuntimeError(
+        "REPRO_CACHE_CHECK: captured array(s) mutated in place after "
+        f"capture by cached_program (key tag {key[0]!r}, changed: "
+        f"{', '.join(changed)}).  Identity-keyed captures are FROZEN by "
+        "contract -- the cache would have kept serving the executable "
+        "compiled against the old contents.  Build new arrays instead of "
+        "mutating, or call clear_program_cache() after an intentional "
+        "mutation.")
 
 
 class _TimedFirstCall:
@@ -136,6 +229,10 @@ def cached_program(key: Tuple, build: Callable[[], Any]):
     Misses are instrumented: ``build()`` wall time lands in the telemetry
     timing buffer as ``program_build``, and callable programs come back
     wrapped so their first dispatch records ``program_first_call``."""
+    if _CAPTURE_HOOK is not None:
+        return _CAPTURE_HOOK(key, build)
+    if _cache_check_enabled():
+        _verify_fingerprints(key)
 
     def timed_build():
         tag = str(key[0]) if key else "?"
@@ -154,6 +251,7 @@ def clear_program_cache() -> None:
     global _GENERATION
     _PROGRAMS.data.clear()
     _PROGRAMS.hits = _PROGRAMS.misses = _PROGRAMS.evictions = 0
+    _FINGERPRINTS.clear()
     _GENERATION += 1
 
 

@@ -1,0 +1,66 @@
+"""Tests for REPRO_CACHE_CHECK: runtime fingerprinting of identity-keyed
+captured arrays in sweep.cache."""
+import numpy as np
+import pytest
+
+from repro.sweep import cache
+
+
+@pytest.fixture
+def clean_cache():
+    cache.clear_program_cache()
+    yield
+    cache.clear_program_cache()
+
+
+def _program(key):
+    return cache.cached_program(key, lambda: "program")
+
+
+def test_mutated_capture_raises_on_hit(clean_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_CHECK", "1")
+    data = np.ones(16)
+    key = ("tag", 3, cache.IdKey(data))
+    assert _program(key) == "program"
+    assert _program(key) == "program"  # unchanged: hit verifies silently
+    data[0] = 42.0  # in-place mutation after capture
+    with pytest.raises(RuntimeError, match="REPRO_CACHE_CHECK"):
+        _program(key)
+
+
+def test_tree_key_captures_are_fingerprinted(clean_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_CHECK", "1")
+    x = np.zeros((4, 2))
+    key = ("tag",) + cache.tree_key({"x": x})
+    _program(key)
+    x.fill(7.0)
+    with pytest.raises(RuntimeError, match="mutated in place"):
+        _program(key)
+
+
+def test_disabled_by_default_is_silent(clean_cache, monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_CHECK", raising=False)
+    data = np.ones(8)
+    key = ("tag", cache.IdKey(data))
+    _program(key)
+    data[0] = 5.0
+    assert _program(key) == "program"  # documented stale-reuse contract
+
+
+def test_clear_program_cache_resets_fingerprints(clean_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_CHECK", "1")
+    data = np.ones(8)
+    key = ("tag", cache.IdKey(data))
+    _program(key)
+    data[0] = 5.0
+    cache.clear_program_cache()  # the sanctioned intentional-mutation path
+    assert _program(key) == "program"
+
+
+def test_eviction_prunes_fingerprints():
+    evicted = []
+    lru = cache.LRU(1, on_evict=evicted.append)
+    lru.get("a", lambda: 1)
+    lru.get("b", lambda: 2)
+    assert evicted == ["a"]
+    assert list(lru.data) == ["b"]

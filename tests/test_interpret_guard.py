@@ -1,0 +1,58 @@
+"""Tests for the REPRO_PALLAS_INTERPRET mid-process staleness guard in
+repro.kernels.dispatch."""
+import pytest
+
+from repro.kernels import dispatch
+
+_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+@pytest.fixture
+def fresh_guard(monkeypatch):
+    monkeypatch.delenv(_VAR, raising=False)
+    dispatch._reset_env_guard()
+    yield monkeypatch
+    dispatch._reset_env_guard()
+
+
+def test_setting_env_after_first_resolve_raises(fresh_guard):
+    assert dispatch.default_interpret() is True  # cpu: no Pallas lowering
+    fresh_guard.setenv(_VAR, "1")
+    with pytest.raises(RuntimeError, match="changed mid-process"):
+        dispatch.default_interpret()
+
+
+def test_unsetting_env_after_first_resolve_raises(fresh_guard):
+    fresh_guard.setenv(_VAR, "0")
+    assert dispatch.default_interpret() is False
+    fresh_guard.delenv(_VAR)
+    with pytest.raises(RuntimeError, match="forced off, now it is unset"):
+        dispatch.default_interpret()
+
+
+def test_equivalent_spellings_do_not_trip_the_guard(fresh_guard):
+    fresh_guard.setenv(_VAR, "1")
+    assert dispatch.default_interpret() is True
+    for spelling in ("true", "YES", " on "):
+        fresh_guard.setenv(_VAR, spelling)
+        assert dispatch.default_interpret() is True  # same tri-state
+
+
+def test_stable_env_never_raises(fresh_guard):
+    fresh_guard.setenv(_VAR, "0")
+    for _ in range(3):
+        assert dispatch.default_interpret() is False
+
+
+def test_parse_error_wins_over_guard(fresh_guard):
+    assert dispatch.default_interpret() is True
+    fresh_guard.setenv(_VAR, "maybe")
+    with pytest.raises(ValueError, match="not understood"):
+        dispatch.default_interpret()
+
+
+def test_resolve_interpret_explicit_bypasses_resolution(fresh_guard):
+    # an explicit flag never consults (or arms) the env guard
+    assert dispatch.resolve_interpret(True) is True
+    assert dispatch.resolve_interpret(False) is False
+    assert dispatch._FIRST_RESOLVED is None

@@ -192,23 +192,35 @@ def test_default_interpret_backend_aware(monkeypatch):
         assert dispatch.default_interpret() is want
 
 
+@pytest.fixture
+def _fresh_interpret_guard():
+    """Flipping REPRO_PALLAS_INTERPRET between default_interpret() calls is
+    a guarded error in a real process; these parse tests legitimately vary
+    it, so scrub the first-resolution record around each."""
+    from repro.kernels import dispatch
+    dispatch._reset_env_guard()
+    yield
+    dispatch._reset_env_guard()
+
+
 @pytest.mark.parametrize("value,want", [("1", True), ("true", True),
                                         ("ON", True), ("0", False),
                                         ("no", False), ("False", False)])
-def test_default_interpret_env_override(monkeypatch, value, want):
+def test_default_interpret_env_override(monkeypatch, _fresh_interpret_guard,
+                                        value, want):
     from repro.kernels import dispatch
     monkeypatch.setenv(dispatch._ENV_VAR, value)
     assert dispatch.default_interpret() is want
 
 
-def test_default_interpret_env_invalid(monkeypatch):
+def test_default_interpret_env_invalid(monkeypatch, _fresh_interpret_guard):
     from repro.kernels import dispatch
     monkeypatch.setenv(dispatch._ENV_VAR, "maybe")
     with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
         dispatch.default_interpret()
 
 
-def test_resolve_interpret_explicit_wins(monkeypatch):
+def test_resolve_interpret_explicit_wins(monkeypatch, _fresh_interpret_guard):
     from repro.kernels import dispatch
     monkeypatch.setenv(dispatch._ENV_VAR, "0")
     assert dispatch.resolve_interpret(True) is True

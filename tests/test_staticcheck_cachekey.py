@@ -1,0 +1,79 @@
+"""Tests for repro.staticcheck.cachekey: capture, the completeness
+predicate, the seeded-mutation self-test, and the retrace budget.
+
+Full-registry sweeps run in CI via ``python -m repro.staticcheck.cachekey``;
+these tests keep to small ``only=`` subsets so tier-1 stays fast.
+"""
+import pytest
+
+from repro.api.spec import ExecutionSpec
+from repro.staticcheck import cachekey as ck
+
+
+def test_capture_returns_key_and_jaxpr():
+    cap = ck.capture(ck.BASES["piag"]())
+    assert cap is not None
+    assert cap.key[0] == "piag"
+    assert cap.fingerprint and cap.in_avals and cap.lines
+
+
+def test_value_equal_specs_reuse_one_key():
+    a = ck.capture(ck.BASES["piag"]())
+    b = ck.capture(ck.BASES["piag"]())
+    assert a is not None and b is not None
+    assert a.key == b.key
+    assert a.jaxpr_equal(b)
+
+
+def test_solo_backend_is_uncached():
+    spec = ck.base_spec("piag", execution=ExecutionSpec(backend="solo"))
+    assert ck.capture(spec) is None  # builds fresh per call, no cache surface
+
+
+def test_completeness_subset_classifications():
+    subset = [("ExecutionSpec", "record_every"),
+              ("SolverSpec", "horizon"),
+              ("ExperimentSpec", "n_events")]
+    outcomes = {(o.cls, o.field): o
+                for o in ck.check_completeness(only=subset)}
+    assert not any(o.violation for o in outcomes.values())
+    assert outcomes[("ExecutionSpec", "record_every")].status == "key-changed"
+    assert outcomes[("SolverSpec", "horizon")].status == "key-changed"
+    # n_events changes event-array shapes: jit's shape-keyed trace cache
+    # re-traces, so it is safe without a key entry
+    assert outcomes[("ExperimentSpec", "n_events")].status == "shape-retrace"
+
+
+def test_seeded_key_mutation_is_caught():
+    """The self-test the checker's value rests on: simulate 'someone
+    dropped faults from the key' and the completeness check MUST flag it."""
+    subset = [("FaultSpec", "p_drop")]
+    clean = ck.check_completeness(only=subset)
+    assert all(not o.violation for o in clean)
+    mutated = ck.check_completeness(key_filter=ck.strip_faults_from_key,
+                                    only=subset)
+    assert any(o.violation for o in mutated), \
+        "stripping FaultSpec from the cache key must surface a VIOLATION"
+
+
+def test_forcing_function_covers_every_field():
+    assert ck.unregistered_fields() == []
+
+
+def test_forcing_function_flags_missing_entry(monkeypatch):
+    pruned = {k: v for k, v in ck.REGISTRY.items()
+              if k != ("FaultSpec", "p_drop")}
+    monkeypatch.setattr(ck, "REGISTRY", pruned)
+    assert ("FaultSpec", "p_drop") in ck.unregistered_fields()
+    with pytest.raises(AssertionError, match="no cache-key coverage"):
+        ck.check_completeness()
+
+
+def test_retrace_budget_subset():
+    # two budget properties cheap enough for tier-1: value-equal reuse and
+    # a knob keying fresh; the full REPRESENTATIVE matrix gate runs in CI
+    a = ck.capture(ck.BASES["piag"]())
+    b = ck.capture(ck.BASES["piag"]())
+    c = ck.capture(ck.BASES["piag/telemetry"]())
+    assert a.key == b.key
+    assert c.key != a.key

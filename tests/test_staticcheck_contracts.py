@@ -1,0 +1,20 @@
+"""Tests for repro.staticcheck.contracts (fast subset; the full solver x
+backend matrix runs in CI's static-analysis lane via the CLI)."""
+from repro.staticcheck import contracts
+
+
+def test_scan_level_piag_contracts_hold():
+    checks = contracts.verify_scan_level(("piag",))
+    failed = [c for c in checks if not c.ok]
+    assert not failed, "\n".join(f"{c.name}: {c.detail}" for c in failed)
+    names = {c.name.rsplit("/", 1)[-1] for c in checks}
+    assert names == {"explicit-none-is-omitted", "disabled-faults-are-none",
+                     "faults-live", "telemetry-live", "fused-scan-io-parity",
+                     "fused-is-a-different-body"}
+
+
+def test_program_level_piag_batched_contracts_hold():
+    checks = contracts.verify_program_level(("piag",), ("batched",))
+    failed = [c for c in checks if not c.ok]
+    assert not failed, "\n".join(f"{c.name}: {c.detail}" for c in failed)
+    assert len(checks) == 4

@@ -1,0 +1,86 @@
+"""Tests for repro.staticcheck.jaxpr: the canonical-jaxpr comparator."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.staticcheck import jaxpr as sj
+
+
+def _trace(fn, *args):
+    return jax.make_jaxpr(fn)(*args)
+
+
+def test_fingerprint_stable_across_traces():
+    def fn(x, y):
+        return jnp.dot(x, y) + 1.0
+
+    x = jnp.ones((3, 4))
+    y = jnp.ones((4,))
+    assert sj.fingerprint(_trace(fn, x, y)) == sj.fingerprint(_trace(fn, x, y))
+
+
+def test_alpha_rename_invariance():
+    # same program, different python variable/argument names
+    def a(x, y):
+        z = x * y
+        return z + x
+
+    def b(p, q):
+        r = p * q
+        return r + p
+
+    v = jnp.ones((5,))
+    assert sj.fingerprint(_trace(a, v, v)) == sj.fingerprint(_trace(b, v, v))
+
+
+def test_detects_structural_change():
+    v = jnp.ones((5,))
+    add = _trace(lambda x, y: x + y, v, v)
+    sub = _trace(lambda x, y: x - y, v, v)
+    assert sj.fingerprint(add) != sj.fingerprint(sub)
+    d = sj.diff(add, sub, "add", "sub")
+    assert "add" in d and "sub" in d and d  # non-empty unified diff
+
+
+def test_detects_nested_scan_body_change():
+    xs = jnp.arange(8.0)
+
+    def outer(body):
+        def fn(xs):
+            return lax.scan(body, 0.0, xs)
+        return _trace(fn, xs)
+
+    plus = outer(lambda c, x: (c + x, x))
+    times = outer(lambda c, x: (c * x, x))
+    assert sj.fingerprint(plus) != sj.fingerprint(times)
+
+
+def test_diff_empty_and_assert_identical():
+    v = jnp.ones((3,))
+    a = _trace(lambda x: x * 2.0, v)
+    b = _trace(lambda x: x * 2.0, v)
+    assert sj.diff(a, b) == ""
+    sj.assert_identical(a, b)
+    c = _trace(lambda x: x * 3.0, v)
+    with pytest.raises(AssertionError, match="canonical jaxprs differ"):
+        sj.assert_identical(a, c)
+
+
+def test_io_avals():
+    a = _trace(lambda x, y: (x + y, x.sum()), jnp.ones((2, 3)), jnp.ones((2, 3)))
+    ins, outs = sj.io_avals(a)
+    assert len(ins) == 2 and len(outs) == 2
+    assert all("2,3" in s for s in ins)
+
+
+def test_literal_and_const_rendering_deterministic():
+    big = jnp.arange(12.0).reshape(3, 4)
+
+    def fn(x):
+        return x @ big  # captures `big` as a const
+
+    t1, t2 = _trace(fn, jnp.ones((2, 3))), _trace(fn, jnp.ones((2, 3)))
+    text = sj.canonical_text(t1)
+    assert sj.fingerprint(t1) == sj.fingerprint(t2)
+    assert "0x" not in text.replace("0x~", "")  # no raw addresses leak

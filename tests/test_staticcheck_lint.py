@@ -1,0 +1,66 @@
+"""Tests for the trace-safety lint: every rule catches its known-bad
+fixture, and the current tree lints clean."""
+import os
+
+import pytest
+
+import repro.staticcheck as sc_pkg
+from repro.staticcheck.lint import iter_py, lint_file, lint_paths
+from repro.staticcheck.rules import ALL_RULES, RULE_DOCS
+
+_PKG_DIR = os.path.dirname(os.path.abspath(sc_pkg.__file__))
+_FIXTURES = os.path.join(_PKG_DIR, "fixtures")
+_SRC_REPRO = os.path.dirname(_PKG_DIR)  # .../src/repro
+
+EXPECTED = {
+    "bad_switch_in_kernel.py": "PAL001",
+    "bad_scalar_ref.py": "PAL002",
+    "bad_unrouted_pallas.py": "PAL003",
+    "bad_host_entropy.py": "JIT001",
+    "bad_traced_branch.py": "JIT002",
+    "bad_mutate_captured.py": "CACHE001",
+}
+
+
+@pytest.mark.parametrize("fixture,rule", sorted(EXPECTED.items()))
+def test_each_rule_catches_its_fixture(fixture, rule):
+    findings = lint_file(os.path.join(_FIXTURES, fixture))
+    assert findings, f"{fixture} produced no findings"
+    assert {f.rule for f in findings} == {rule}, \
+        f"{fixture} must trigger ONLY {rule}: {[str(f) for f in findings]}"
+
+
+def test_rule_catalogue_matches_fixture_corpus():
+    assert {r.name for r in ALL_RULES} == set(EXPECTED.values())
+    assert set(RULE_DOCS) == set(EXPECTED.values())
+    present = {f for f in os.listdir(_FIXTURES) if f.endswith(".py")}
+    assert present == set(EXPECTED), \
+        "fixture corpus and EXPECTED map drifted apart"
+
+
+def test_current_tree_lints_clean():
+    findings = lint_paths([_SRC_REPRO])
+    assert not findings, "\n".join(str(f) for f in findings)
+
+
+def test_fixtures_excluded_by_default():
+    default = set(iter_py([_SRC_REPRO]))
+    included = set(iter_py([_SRC_REPRO], include_fixtures=True))
+    assert not any("fixtures" in p for p in default)
+    assert included - default == {
+        os.path.join(_FIXTURES, f) for f in EXPECTED}
+
+
+def test_select_restricts_rules():
+    path = os.path.join(_FIXTURES, "bad_unrouted_pallas.py")
+    assert lint_file(path, select=["PAL003"])
+    assert lint_file(path, select=["JIT001"]) == []
+    with pytest.raises(SystemExit, match="unknown rule"):
+        lint_file(path, select=["NOPE999"])
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings = lint_file(str(bad))
+    assert len(findings) == 1 and findings[0].rule == "PARSE"
