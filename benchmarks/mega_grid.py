@@ -54,19 +54,33 @@ import jax.numpy as jnp
 from repro.analysis import clipped_summary
 from repro.core import (Adaptive1, Adaptive2, FixedStepSize, L1,
                         SunDengFixed, make_logreg)
-from repro.core.engine import trace_scan, sample_service_times
+from repro.core.engine import WorkerModel, trace_scan, sample_service_times
 from repro.core.piag import piag_scan
 from repro.core.stepsize import auto_horizon
+from repro.mesh import cell_axis_size, grid_mesh
 from repro.sweep import (cell_mesh, make_grid, make_sharded_sweep_piag,
                          make_sweep_piag, measure_tau_bar, round_robin_pad,
-                         run_bucketed, standard_topology_factories)
+                         run_bucketed, sharded_sweep_piag,
+                         standard_topology_factories)
 from repro.sweep.runners import _slice_workers
+from repro.sweep.shard import _settle_replicas
 
 from .common import emit
 
 # 64-cell warm-time regression gate: refreshed / prior must stay below this
 # (loose on purpose: shared CI runners jitter wall-clock by tens of percent)
 GRID64_REGRESSION_TOLERANCE = 1.5
+
+
+def _host_cores() -> int:
+    """Physical parallelism actually granted to this process.  Forced host
+    DEVICES are XLA-level threads: on a 1-core container they multiplex a
+    single core and no sharded layout can beat a narrower one, so the
+    speedup gates (never the bitwise-equivalence gates) key on this."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux
+        return os.cpu_count() or 1
 
 
 def build_mega_grid(widths, n_seeds, n_events, gp):
@@ -114,7 +128,9 @@ class BucketedRunner:
                                              objective=problem.P,
                                              masked=masked, mesh=mesh,
                                              horizon=horizon)
-                idx = round_robin_pad(len(b.grid), mesh.devices.size)
+                # pad to the CELLS-axis size, not the device count: on a
+                # 2-D (cells, data) mesh the data axis replicates the batch
+                idx = round_robin_pad(len(b.grid), cell_axis_size(mesh))
             T = b.grid.service_times(b.width)
             act = b.grid.active_masks(b.width)
             pp = b.grid.policy_params()
@@ -131,7 +147,8 @@ class BucketedRunner:
                     for a in args)
             out = fn(*args)
             if idx is not None:
-                out = jax.tree_util.tree_map(lambda x: x[:len(b.grid)], out)
+                out = jax.tree_util.tree_map(
+                    lambda x: x[:len(b.grid)], _settle_replicas(out, self.mesh))
             return out
 
         return jax.block_until_ready(
@@ -146,6 +163,79 @@ def _time(runner):
     res = runner()
     warm = time.perf_counter() - t0
     return cold, warm, res
+
+
+def run_2d(n_events: int = 120, n_cells: int = 4, samples_per_worker: int = 2048,
+           dim: int = 384, data_shards: int = 2) -> dict:
+    """1-D vs 2-D mesh on a transformer-preset per-cell workload.
+
+    Few big cells (``dim`` matches the 25m launch preset's d_model=384;
+    thousands of samples per worker) -- the regime where the per-event
+    worker gradient dominates and extra devices on a second ``data`` axis
+    pay for themselves.  Both paths use the SAME ``n_cells``-wide cells
+    axis; the 2-D mesh adds ``data_shards`` devices per cell shard for
+    data-parallel gradients (``pmean_grad``).  Rows must stay bitwise on
+    taus/gammas; the gate (>= 8 devices) requires the 2-D warm time to
+    beat 1-D."""
+    n_dev = len(jax.devices())
+    if n_dev < n_cells * data_shards:
+        return {"skipped": f"needs {n_cells * data_shards} devices, "
+                           f"have {n_dev}"}
+    n_workers = 8
+    prob = make_logreg(n_workers * samples_per_worker, dim,
+                       n_workers=n_workers, seed=0)
+    gp = 0.99 / prob.L
+    prox = L1(lam=prob.lam1)
+    grid = make_grid(
+        policies={"adaptive1": Adaptive1(gamma_prime=gp, alpha=0.9)},
+        seeds=list(range(n_cells)),
+        topologies={"uniform": [WorkerModel() for _ in range(n_workers)]},
+        n_events=n_events)
+    loss = lambda x, A, b: prob.worker_loss(x, A, b)
+    obj = prob.P
+    x0 = jnp.zeros((prob.dim,), jnp.float32)
+    wd = prob.worker_slices()
+    mesh_1d = grid_mesh((n_cells,))
+    mesh_2d = grid_mesh((n_cells, data_shards))
+    emit("mega_grid/2d_config", 0.0,
+         f"cells={len(grid)};events={n_events};dim={dim};"
+         f"samples_per_worker={samples_per_worker};"
+         f"mesh_1d=({n_cells},);mesh_2d=({n_cells},{data_shards})")
+
+    def runner(mesh):
+        return lambda: jax.block_until_ready(sharded_sweep_piag(
+            loss, x0, wd, grid, prox, objective=obj, mesh=mesh))
+
+    cold_1d, warm_1d, res_1d = _time(runner(mesh_1d))
+    emit("mega_grid/2d_mesh1d", cold_1d * 1e6, f"warm_us={warm_1d * 1e6:.1f}")
+    cold_2d, warm_2d, res_2d = _time(runner(mesh_2d))
+    emit("mega_grid/2d_mesh2d", cold_2d * 1e6, f"warm_us={warm_2d * 1e6:.1f}")
+    speedup_warm = warm_1d / warm_2d
+    emit("mega_grid/2d_speedup", 0.0,
+         f"warm={speedup_warm:.2f}x;cold={cold_1d / cold_2d:.2f}x")
+
+    taus_equal = bool(np.array_equal(np.asarray(res_1d.taus),
+                                     np.asarray(res_2d.taus)))
+    gammas_equal = bool(np.array_equal(np.asarray(res_1d.gammas),
+                                       np.asarray(res_2d.gammas)))
+    obj_diff = float(np.max(np.abs(np.asarray(res_1d.objective)
+                                   - np.asarray(res_2d.objective))))
+    ok = taus_equal and gammas_equal and obj_diff <= 1e-4
+    emit("mega_grid/2d_equivalence", 0.0,
+         f"taus_bitwise={taus_equal};gammas_bitwise={gammas_equal};"
+         f"max_objective_diff={obj_diff:.2e};ok={ok}")
+    return {
+        "cells": len(grid), "n_events": n_events, "dim": dim,
+        "samples_per_worker": samples_per_worker,
+        "host_cores": _host_cores(),
+        "mesh_1d": [n_cells], "mesh_2d": [n_cells, data_shards],
+        "seconds_cold_1d": cold_1d, "seconds_warm_1d": warm_1d,
+        "seconds_cold_2d": cold_2d, "seconds_warm_2d": warm_2d,
+        "speedup_2d_vs_1d_warm": speedup_warm,
+        "equivalence": {"taus_bitwise_equal": taus_equal,
+                        "gammas_bitwise_equal": gammas_equal,
+                        "max_objective_diff": obj_diff, "ok": ok},
+    }
 
 
 def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
@@ -214,6 +304,9 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
     n_clipped = clipped_summary(res_shard.clipped)["cells_clipped"]
     emit("mega_grid/clipped_cells", 0.0, f"cells_with_clipping={n_clipped}")
 
+    # ---- 2-D (cells, data) mesh on a transformer-sized workload ----------
+    two_d = run_2d()
+
     # ---- PR 2 compat: the 64-cell grid must not have regressed -----------
     # re-run benchmarks/sweep_grid.py (the SAME bench that produced the
     # prior BENCH_sweep_grid.json) in a clean single-device subprocess --
@@ -252,6 +345,7 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
     payload = {
         "bench": "mega_grid",
         "devices": n_dev,
+        "host_cores": _host_cores(),
         "cells": B,
         "n_events": n_events,
         "widths": list(widths),
@@ -274,6 +368,7 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
                         "solo_rows_checked": int(loop_cells),
                         "solo_rows_max_objective_diff": solo_diff,
                         "ok": rows_ok},
+        "two_d": two_d,
         "grid64_compat": compat,
     }
     Path(out).write_text(json.dumps(payload, indent=2) + "\n")
@@ -281,6 +376,25 @@ def run(n_events: int = 300, n_seeds: int = 16, widths=(4, 8),
           f"cold {speedup_cold:.2f}x / warm {speedup_warm:.2f}x, "
           f"equivalence ok={rows_ok}")
     return payload
+
+
+def _gate_2d(two_d: dict, n_dev: int) -> None:
+    """CI gate for the 2-D section: bitwise rows always; measured warm
+    speedup over the 1-D mesh when the full 8-device mesh ran AND the host
+    has cores beyond the cells axis for the data axis to use."""
+    if "skipped" in two_d:
+        print(f"2-D mesh section skipped: {two_d['skipped']}")
+        return
+    if not two_d["equivalence"]["ok"]:
+        raise SystemExit("2-D mesh equivalence failed: "
+                         f"{two_d['equivalence']}")
+    cores = _host_cores()
+    if (n_dev >= 8 and cores > two_d["mesh_1d"][0]
+            and two_d["speedup_2d_vs_1d_warm"] <= 1.0):
+        raise SystemExit(
+            f"2-D (cells, data) mesh failed to beat the 1-D mesh on a "
+            f"{cores}-core host: warm {two_d['seconds_warm_2d']:.2f}s vs "
+            f"{two_d['seconds_warm_1d']:.2f}s")
 
 
 def main() -> None:
@@ -291,15 +405,30 @@ def main() -> None:
                     help="comma-separated worker counts (the ragged axis)")
     ap.add_argument("--loop-cells", type=int, default=6,
                     help="solo spot-check rows")
+    ap.add_argument("--only-2d", action="store_true",
+                    help="run just the 2-D (cells, data) mesh comparison "
+                         "and its gate (CI multi-device lane); writes no "
+                         "artifact")
     ap.add_argument("--out", default="BENCH_mega_grid.json")
     a = ap.parse_args()
+    if a.only_2d:
+        two_d = run_2d()
+        _gate_2d(two_d, len(jax.devices()))
+        if "skipped" not in two_d:
+            print(f"2-D mesh: warm {two_d['seconds_warm_2d']:.2f}s vs 1-D "
+                  f"{two_d['seconds_warm_1d']:.2f}s "
+                  f"({two_d['speedup_2d_vs_1d_warm']:.2f}x), "
+                  f"equivalence ok={two_d['equivalence']['ok']}")
+        return
     widths = tuple(int(w) for w in a.widths.split(","))
     payload = run(n_events=a.events, n_seeds=a.seeds, widths=widths,
                   loop_cells=a.loop_cells, out=a.out)
     if not payload["equivalence"]["ok"]:
         raise SystemExit("equivalence spot-check failed")
-    if payload["devices"] > 1 and payload["speedup_sharded_vs_single_warm"] <= 1.0:
+    if (payload["devices"] > 1 and _host_cores() > 1
+            and payload["speedup_sharded_vs_single_warm"] <= 1.0):
         raise SystemExit("sharded path failed to beat single-device")
+    _gate_2d(payload["two_d"], payload["devices"])
     compat = payload["grid64_compat"]
     if "error" in compat:
         raise SystemExit(f"64-cell compat re-run failed: {compat['error']}")

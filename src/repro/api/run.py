@@ -52,6 +52,8 @@ from repro.telemetry.ledger import (RunRecord, append_record, cache_delta,
 from repro.telemetry.timing import COMPILE_EVENT_NAMES, drain_timings
 from repro.sweep.runners import (resolve_grid_horizon, sweep_bcd,
                                  sweep_fedasync, sweep_fedbuff, sweep_piag)
+from repro.mesh import (DATA_AXIS, data_axis_size, grid_mesh,
+                        maybe_init_distributed, pmean_grad)
 from repro.sweep.shard import (cell_mesh, sharded_sweep_bcd,
                                sharded_sweep_fedasync,
                                sharded_sweep_fedbuff, sharded_sweep_piag)
@@ -268,8 +270,15 @@ def _stack_results(rows):
 
 def _mesh_for(spec: ExperimentSpec):
     ex = spec.execution
+    # multi-host bootstrap must precede the first jax.devices() call so the
+    # mesh spans every process; no-op unless ex.coordinator is set
+    maybe_init_distributed(ex)
     if ex.mesh is not None:
         return ex.mesh
+    if ex.mesh_shape is not None:
+        return grid_mesh(ex.mesh_shape,
+                         jax.devices()[:int(ex.devices)]
+                         if ex.devices is not None else None)
     if ex.devices is not None:
         return cell_mesh(jax.devices()[:int(ex.devices)])
     return cell_mesh()
@@ -297,13 +306,41 @@ def _bcd_pieces(problem):
     return _PIECES_MEMO.get(("bcd", IdKey(problem)), build)
 
 
-def _fed_pieces(problem, prox, local_lr):
+def _bcd_dp_grad(problem, size: int):
+    """Data-parallel full gradient for sharded BCD on a (cells, data) mesh.
+
+    BCD's ``grad_f`` is an opaque closure, so the data-parallel variant is
+    rebuilt from ``problem.worker_loss`` on the problem's FULL data (for
+    both built-in problem classes ``worker_loss(x, A_full, b_full) == f(x)``
+    exactly) with ``pmean_grad`` psumming partial gradients over "data".
+    Returns None -- replicated-compute fallback, the sharded runner warns --
+    for custom problems without ``worker_loss`` + ``A``/``b``(``y``)."""
     def build():
-        update, x0, data = _problem_pieces(problem, prox, local_lr)
+        A = getattr(problem, "A", None)
+        b = getattr(problem, "b", getattr(problem, "y", None))
+        if A is None or b is None or not hasattr(problem, "worker_loss"):
+            return None
+        g = pmean_grad(lambda x, A_, b_: problem.worker_loss(x, A_, b_),
+                       DATA_AXIS, size)
+        return lambda x: g(x, A, b)
+
+    return _PIECES_MEMO.get(("bcd/dp", IdKey(problem), size), build)
+
+
+def _fed_pieces(problem, prox, local_lr, dp_size: int = 1):
+    def build():
+        grad_fn = None
+        if dp_size > 1:
+            # 2-D mesh: client gradients psum over the mesh's data axis
+            grad_fn = pmean_grad(
+                lambda x, A, b: problem.worker_loss(x, A, b),
+                DATA_AXIS, dp_size)
+        update, x0, data = _problem_pieces(problem, prox, local_lr,
+                                           grad_fn=grad_fn)
         return update, x0, data, problem.P
 
-    return _PIECES_MEMO.get(("fed", IdKey(problem), IdKey(prox), local_lr),
-                            build)
+    return _PIECES_MEMO.get(("fed", IdKey(problem), IdKey(prox), local_lr,
+                             dp_size), build)
 
 
 def _telemetry_cfg(spec: ExperimentSpec) -> Optional[TelemetryConfig]:
@@ -399,11 +436,14 @@ def _run_bcd(r: Resolved, ckpt=None):
                          telemetry=tel, engine=eng, faults=fl,
                          checkpoint=ckpt)
     if backend == "sharded":
+        mesh = _mesh_for(spec)
+        dp_grad_f = (_bcd_dp_grad(problem, data_axis_size(mesh))
+                     if data_axis_size(mesh) > 1 else None)
         return sharded_sweep_bcd(grad_f, objective, x0, m, r.grid,
-                                 r.prox, horizon=h, mesh=_mesh_for(spec),
+                                 r.prox, horizon=h, mesh=mesh,
                                  bucket_widths=bw, record_every=s,
                                  telemetry=tel, engine=eng, faults=fl,
-                                 checkpoint=ckpt)
+                                 checkpoint=ckpt, dp_grad_f=dp_grad_f)
 
     def run_cell(i, c):
         T = sample_service_times(c.workers, r.grid.n_events + 1, seed=c.seed)
@@ -422,7 +462,11 @@ def _run_bcd(r: Resolved, ckpt=None):
 def _run_fed(r: Resolved, ckpt=None):
     spec = r.spec
     sv = spec.solver
-    update, x0, data, objective = _fed_pieces(r.problem, r.prox, sv.local_lr)
+    backend = spec.execution.backend
+    mesh = _mesh_for(spec) if backend == "sharded" else None
+    dpn = data_axis_size(mesh) if mesh is not None else 1
+    update, x0, data, objective = _fed_pieces(r.problem, r.prox, sv.local_lr,
+                                              dp_size=dpn)
     h, n_steps = r.horizon, sv.n_steps
     bs = sv.buffer_size if sv.name == "fedbuff" else 1
     bw = spec.execution.bucket_widths
@@ -430,7 +474,6 @@ def _run_fed(r: Resolved, ckpt=None):
     tel = _telemetry_cfg(spec)
     eng = spec.execution.engine
     fl = spec.faults
-    backend = spec.execution.backend
     if backend == "batched":
         if sv.name == "fedasync":
             return sweep_fedasync(update, x0, data, r.grid,
@@ -446,7 +489,6 @@ def _run_fed(r: Resolved, ckpt=None):
                              record_every=s, telemetry=tel, engine=eng,
                              faults=fl, checkpoint=ckpt)
     if backend == "sharded":
-        mesh = _mesh_for(spec)
         if sv.name == "fedasync":
             return sharded_sweep_fedasync(update, x0, data, r.grid,
                                           objective=objective,
@@ -597,7 +639,7 @@ def run(spec: ExperimentSpec, resume=None) -> Results:
 # -------------------------------------------------- component escape ----
 
 def component_spec(solver: str, backend: str, *, problem, grid, prox,
-                   mesh=None, reference: bool = False,
+                   mesh=None, mesh_shape=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
                    telemetry_bins: int = 64, engine: str = "scan",
                    faults=None, **solver_kwargs) -> ExperimentSpec:
@@ -611,6 +653,7 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
         problem=ProblemSpec(kind="custom", problem=problem, prox_op=prox),
         solver=SolverSpec(name=solver, **solver_kwargs),
         execution=ExecutionSpec(backend=backend, mesh=mesh,
+                                mesh_shape=mesh_shape,
                                 reference=reference,
                                 record_every=record_every,
                                 telemetry=telemetry,
@@ -625,13 +668,14 @@ def component_spec(solver: str, backend: str, *, problem, grid, prox,
 
 
 def run_components(solver: str, backend: str, *, problem, grid, prox,
-                   mesh=None, reference: bool = False,
+                   mesh=None, mesh_shape=None, reference: bool = False,
                    record_every: int = 1, telemetry: bool = False,
                    telemetry_bins: int = 64, engine: str = "scan",
                    faults=None, resume=None, **solver_kwargs) -> Results:
     """``run`` over prebuilt components (see ``component_spec``)."""
     return run(component_spec(solver, backend, problem=problem, grid=grid,
-                              prox=prox, mesh=mesh, reference=reference,
+                              prox=prox, mesh=mesh, mesh_shape=mesh_shape,
+                              reference=reference,
                               record_every=record_every, telemetry=telemetry,
                               telemetry_bins=telemetry_bins, engine=engine,
                               faults=faults, **solver_kwargs),

@@ -262,6 +262,21 @@ class ExecutionSpec:
                  partitioned across a device mesh (``repro.sweep.shard``).
     ``devices``: use the first N devices for the sharded mesh (None = all).
     ``mesh``:    a prebuilt ``jax.sharding.Mesh`` (overrides ``devices``).
+    ``mesh_shape``: build a ``(cells,)`` or 2-D ``(cells, data)`` mesh over
+                 the first ``prod(mesh_shape)`` devices
+                 (``repro.mesh.grid_mesh``).  A data axis > 1 computes each
+                 cell's per-worker gradients data-parallel (``pmean_grad``
+                 psums partial gradients over "data"); rows stay
+                 bitwise-equal on integer leaves to the 1-D and solo paths.
+                 Requires the per-worker sample count to divide by the data
+                 axis size.  Mutually exclusive with ``mesh``.
+    ``coordinator`` / ``num_processes`` / ``process_id``: multi-host
+                 bootstrap -- when ``coordinator`` ("host:port") is set the
+                 sharded backend calls ``jax.distributed.initialize`` once
+                 before building the mesh, so ``jax.devices()`` (and hence
+                 ``mesh_shape``) spans every process.  The knobs never reach
+                 a traced program; their only cache-key footprint is the
+                 process count inside ``repro.mesh.mesh_topology``.
     ``bucket_widths``: explicit ragged-bucket width menu (None = pow-2).
     ``reference``: federated sweeps only -- route trace generation through
                  the Python heapq reference twin instead of the fused scan.
@@ -290,6 +305,10 @@ class ExecutionSpec:
     backend: str = "batched"
     devices: Optional[int] = None
     mesh: Any = None
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    coordinator: Optional[str] = None
+    num_processes: int = 1
+    process_id: int = 0
     bucket_widths: Optional[Tuple[int, ...]] = None
     reference: bool = False
     record_every: int = 1
@@ -310,6 +329,31 @@ class ExecutionSpec:
         if self.telemetry_bins < 2:
             raise ValueError(
                 f"telemetry_bins must be >= 2, got {self.telemetry_bins}")
+        if self.mesh_shape is not None:
+            if self.mesh is not None:
+                raise ValueError(
+                    "mesh and mesh_shape are mutually exclusive: a prebuilt "
+                    "mesh already fixes the topology")
+            shape = tuple(int(s) for s in self.mesh_shape)
+            if not 1 <= len(shape) <= 2 or any(s < 1 for s in shape):
+                raise ValueError(
+                    f"mesh_shape must be (cells,) or (cells, data) with "
+                    f"positive entries, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", shape)
+            if self.backend != "sharded":
+                raise ValueError(
+                    f"mesh_shape requires backend='sharded', got "
+                    f"{self.backend!r}")
+        if self.num_processes < 1:
+            raise ValueError(
+                f"num_processes must be >= 1, got {self.num_processes}")
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(
+                f"process_id must be in [0, num_processes), got "
+                f"{self.process_id} with num_processes={self.num_processes}")
+        if self.coordinator is not None and self.backend != "sharded":
+            raise ValueError(
+                "coordinator (multi-host init) requires backend='sharded'")
         object.__setattr__(self, "bucket_widths", _freeze(self.bucket_widths))
 
 

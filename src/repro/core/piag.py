@@ -72,6 +72,7 @@ def piag_scan(
     engine: str = "scan",
     faults: FaultSpec | None = None,
     fault_codes: jnp.ndarray | None = None,
+    grad_fn: Callable | None = None,  # (x, *worker_data_slice) -> grad pytree
 ) -> PIAGResult:
     """The traceable PIAG core: Algorithm 1 as a pure ``lax.scan``.
 
@@ -139,7 +140,11 @@ def piag_scan(
         fparams = as_policy_params(policy)
         _, x_treedef = fused_leaf(x0, "PIAG iterate")
     n = jax.tree_util.tree_leaves(worker_data)[0].shape[0]
-    grad_i = jax.grad(worker_loss)
+    # grad_fn is the data-parallel seam: the 2-D sharded backend injects
+    # repro.mesh.pmean_grad(worker_loss, "data", D) so each mesh data shard
+    # differentiates its slice of the samples and psums back the full
+    # gradient.  grad_fn=None is bitwise the old jaxpr (off-is-absent).
+    grad_i = jax.grad(worker_loss) if grad_fn is None else grad_fn
 
     if active is None:
         def aggregate(buf):

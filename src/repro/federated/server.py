@@ -68,14 +68,20 @@ def _leaves(t):
     return jax.tree_util.tree_leaves(t)
 
 
-def local_prox_sgd(worker_loss: Callable, prox: ProxOp, lr: float) -> Callable:
+def local_prox_sgd(worker_loss: Callable, prox: ProxOp, lr: float,
+                   grad_fn: Callable | None = None) -> Callable:
     """Client update: ``n_steps`` local epochs of proximal gradient descent.
 
     ``worker_loss(x, *data)`` is the client's local objective f_i; the
     returned callable has the server's client-update signature
     ``update(x, n_steps, *data) -> x_c`` with a traced step count (clients
-    may run different numbers of local epochs per round)."""
-    grad = jax.grad(worker_loss)
+    may run different numbers of local epochs per round).
+
+    ``grad_fn`` is the data-parallel seam: the 2-D sharded backend injects
+    ``repro.mesh.pmean_grad(worker_loss, "data", D)`` so each mesh data
+    shard differentiates its slice of the client samples and psums back the
+    full gradient.  ``grad_fn=None`` is bitwise the old jaxpr."""
+    grad = jax.grad(worker_loss) if grad_fn is None else grad_fn
 
     def update(x, n_steps, *data):
         def body(_, xs):
@@ -493,11 +499,13 @@ def run_fedbuff(
     return run_faulted(events, jnp.int32(fault_seed))
 
 
-def _problem_pieces(problem, prox: ProxOp, local_lr: Optional[float]):
+def _problem_pieces(problem, prox: ProxOp, local_lr: Optional[float],
+                    grad_fn: Callable | None = None):
     Aw, bw = problem.worker_slices()
     lr = (0.9 / problem.L) if local_lr is None else local_lr
     update = local_prox_sgd(
-        lambda x, A, b: problem.worker_loss(x, A, b), prox, lr)
+        lambda x, A, b: problem.worker_loss(x, A, b), prox, lr,
+        grad_fn=grad_fn)
     x0 = jnp.zeros((problem.dim,), jnp.float32)
     return update, x0, (Aw, bw)
 

@@ -26,9 +26,9 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, input_specs  # noqa: E402
 from repro.configs.shapes import cache_len, decode_window, uses_ring  # noqa: E402
-from repro.launch.mesh import dp_size, make_mesh, make_production_mesh  # noqa: E402
+from repro.mesh import dp_size, make_mesh, make_production_mesh  # noqa: E402
 from repro.launch.roofline import (model_flops, parse_collective_bytes)  # noqa: E402
-from repro.launch.sharding import (batch_shardings, cache_shardings,  # noqa: E402
+from repro.mesh import (batch_shardings, cache_shardings,  # noqa: E402
                                    param_shardings)
 from repro.launch.steps import make_prefill_step, make_serve_step, make_trainer  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
@@ -48,7 +48,7 @@ def build_lowered(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
 
     The keyword knobs are the §Perf beyond-paper optimizations; all default
     OFF so the recorded baseline stays the paper-faithful configuration."""
-    from repro.launch.mesh import dp_axes
+    from repro.mesh import dp_axes
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, why = applicable(cfg, shape)

@@ -1,44 +1,19 @@
-"""Production mesh builders.
+"""Re-export shim: the production mesh builders moved to ``repro.mesh``.
 
-Single pod: 16 x 16 = 256 chips, axes ("data", "model").
-Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model"); the
-"pod" axis extends data parallelism across the ICI/DCN boundary.
-
-Defined as FUNCTIONS so importing this module never touches jax device
-state (device count is locked at first jax init; the dry-run sets
-XLA_FLAGS before importing anything else).
+The 2-D sweep-mesh work consolidated every mesh concern (sweep cell/grid
+meshes, topology cache keys, jax.distributed bootstrap, and these
+production builders) into the single :mod:`repro.mesh` module.  This shim
+keeps the historical ``repro.launch.mesh`` import path working.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from repro.mesh import (  # noqa: F401
+    dp_axes,
+    dp_size,
+    make_mesh,
+    make_production_mesh,
+    model_size,
+)
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
-    """Arbitrary mesh (used by reduced-size tests, e.g. (2, 4))."""
-    if axes is None:
-        axes = ("pod", "data", "model")[-len(shape):]
-    return jax.make_mesh(shape, axes)
-
-
-def dp_axes(mesh) -> Tuple[str, ...]:
-    """Axes that carry data parallelism (pod folds into data)."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-
-
-def dp_size(mesh) -> int:
-    s = 1
-    for a in dp_axes(mesh):
-        s *= mesh.shape[a]
-    return s
-
-
-def model_size(mesh) -> int:
-    return mesh.shape.get("model", 1)
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "dp_size",
+           "model_size"]

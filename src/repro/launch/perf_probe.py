@@ -13,7 +13,7 @@ import argparse  # noqa: E402
 from repro.configs import ARCH_IDS, SHAPES  # noqa: E402
 from repro.launch.dryrun import build_lowered  # noqa: E402
 from repro.launch.hlo_cost import analyze_hlo, top_contributors  # noqa: E402
-from repro.launch.mesh import make_mesh, make_production_mesh  # noqa: E402
+from repro.mesh import make_mesh, make_production_mesh  # noqa: E402
 
 
 def main() -> None:
@@ -41,7 +41,7 @@ def main() -> None:
 
     if args.describe:
         from repro.configs import get_config
-        from repro.launch.sharding import describe_shardings, param_shardings
+        from repro.mesh import describe_shardings, param_shardings
         from repro.models import param_specs
         cfg = get_config(args.arch)
         specs = param_specs(cfg)

@@ -19,8 +19,8 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.data import EmbedStream, TokenStream  # noqa: E402
-from repro.launch.mesh import dp_size, make_mesh  # noqa: E402
-from repro.launch.sharding import batch_shardings, param_shardings  # noqa: E402
+from repro.mesh import dp_size, make_mesh  # noqa: E402
+from repro.mesh import batch_shardings, param_shardings  # noqa: E402
 from repro.launch.steps import make_trainer  # noqa: E402
 from repro.launch.train import PRESETS  # noqa: E402
 

@@ -1,198 +1,22 @@
-"""Sharding planner: maps every parameter / optimizer / activation / cache
-leaf to a PartitionSpec on the production mesh.
+"""Re-export shim: the sharding planner moved to ``repro.mesh``.
 
-Rules (divisibility-checked -- any dim not divisible by its axis size is
-left replicated rather than unevenly sharded):
-
-* parameters: the largest divisible feature dim goes to "model" (ties break
-  toward the *later* dim, i.e. column-parallel for up-projections and
-  row-parallel for down-projections); a second divisible dim goes to the
-  data axes (FSDP/ZeRO-3) so the 236B config fits 16 GB/chip.  The leading
-  stacked-layers axis is never sharded (it is scanned over).
-* MoE expert tensors: the expert dim goes to "model" when divisible
-  (expert parallelism, e.g. deepseek's 160 experts on 16-way model axis);
-  otherwise falls back to the feature rule (qwen2-moe's 60 experts).
-* batches: the global-batch dim is sharded over ("pod","data"); everything
-  else replicated.  long_500k (batch=1) shards the cache sequence dim over
-  the data axes instead (context parallelism).
-* optimizer state: same rule as its parameter (identical shapes).
+The 2-D sweep-mesh work consolidated every mesh concern (sweep cell/grid
+meshes, topology cache keys, jax.distributed bootstrap, and this
+parameter/batch/cache planner) into the single :mod:`repro.mesh` module.
+This shim keeps the historical ``repro.launch.sharding`` import path
+working.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from repro.mesh import (  # noqa: F401
+    _key_names,
+    _param_spec,
+    batch_shardings,
+    cache_shardings,
+    describe_shardings,
+    param_shardings,
+    replicated,
+)
 
-import jax
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from .mesh import dp_axes, dp_size, model_size
-
-
-def _key_names(path) -> Tuple[str, ...]:
-    names = []
-    for k in path:
-        if hasattr(k, "key"):
-            names.append(str(k.key))
-        elif hasattr(k, "name"):
-            names.append(str(k.name))
-        elif hasattr(k, "idx"):
-            names.append(f"#{k.idx}")
-    return tuple(names)
-
-
-def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...], mesh,
-                fsdp: bool = True, small_out_threshold: int = 0) -> P:
-    md = model_size(mesh)
-    dps = dp_axes(mesh)
-    dsz = dp_size(mesh)
-    ndim = len(shape)
-    spec: list = [None] * ndim
-
-    # leading stacked-layers axis (params under "layers"/"shared" groups are
-    # stacked (L, ...) or (G, ...)): never sharded
-    start = 1 if ("layers" in names and ndim >= 2) else 0
-    cand = list(range(start, ndim))
-
-    # expert parallelism: 4-D (L, E, D, F) expert tensors
-    model_dim: Optional[int] = None
-    if any("w" in n for n in names) and "moe" in names and ndim >= 4:
-        e_dim = start
-        if shape[e_dim] % md == 0:
-            model_dim = e_dim
-    if model_dim is None:
-        best = -1
-        for i in cand:
-            if md > 1 and shape[i] % md == 0 and shape[i] >= md:
-                if shape[i] >= best:
-                    best = shape[i]
-                    model_dim = i
-    # §Perf H2: row-parallel sharding of a projection with a SMALL output
-    # (e.g. MLA's w_dkv: 5120 -> 576) forces a per-token all-reduce of the
-    # partial sums that dwarfs the weight itself -- replicate over "model"
-    # (FSDP still shards it over data) instead.
-    if (small_out_threshold and model_dim is not None and ndim >= 2 and
-            model_dim == ndim - 2 and shape[-1] <= small_out_threshold):
-        model_dim = None
-    if model_dim is not None and md > 1:
-        spec[model_dim] = "model"
-
-    if fsdp and dps:
-        best = -1
-        fsdp_dim = None
-        for i in cand:
-            if i == model_dim:
-                continue
-            if shape[i] % dsz == 0 and shape[i] >= dsz:
-                if shape[i] > best:
-                    best = shape[i]
-                    fsdp_dim = i
-        if fsdp_dim is not None:
-            spec[fsdp_dim] = dps if len(dps) > 1 else dps[0]
-    return P(*spec)
-
-
-def param_shardings(tree: Any, mesh, fsdp: bool = True,
-                    small_out_threshold: int = 0):
-    """NamedShardings for a parameter-shaped pytree (params or opt state)."""
-    def one(path, leaf):
-        shape = tuple(leaf.shape)
-        if len(shape) == 0:
-            return NamedSharding(mesh, P())
-        return NamedSharding(mesh, _param_spec(
-            _key_names(path), shape, mesh, fsdp=fsdp,
-            small_out_threshold=small_out_threshold))
-    return jax.tree_util.tree_map_with_path(one, tree)
-
-
-def batch_shardings(tree: Any, mesh, global_batch: int):
-    """Shard the global-batch dim over ("pod","data")."""
-    dps = dp_axes(mesh)
-    dsz = dp_size(mesh)
-    dp = dps if len(dps) > 1 else (dps[0] if dps else None)
-
-    def one(path, leaf):
-        shape = tuple(leaf.shape)
-        spec: list = [None] * len(shape)
-        if global_batch % max(dsz, 1) == 0 and dsz > 1:
-            for i, s in enumerate(shape):
-                if s == global_batch:
-                    spec[i] = dp
-                    break
-        return NamedSharding(mesh, P(*spec))
-    return jax.tree_util.tree_map_with_path(one, tree)
-
-
-def cache_shardings(tree: Any, mesh, global_batch: int, seq_len: int,
-                    context_parallel: bool = False):
-    """Decode-cache sharding.
-
-    Baseline: batch dim -> data axes; a KV/feature dim -> "model" when
-    divisible; batch=1 -> cache sequence dim -> data axes.
-
-    ``context_parallel=True`` (§Perf H3): the cache *sequence* dim is sharded
-    over "model" instead of the feature dim, so the per-token attention
-    gathers only O(B*H*S) f32 score statistics instead of the whole
-    O(B*S*r) latent / O(B*S*KV*hd) KV cache every step."""
-    dps = dp_axes(mesh)
-    dsz = dp_size(mesh)
-    md = model_size(mesh)
-    dp = dps if len(dps) > 1 else (dps[0] if dps else None)
-
-    def one(path, leaf):
-        shape = tuple(leaf.shape)
-        ndim = len(shape)
-        spec: list = [None] * ndim
-        if ndim <= 1:
-            return NamedSharding(mesh, P(*spec))
-        dp_dim = None
-        if dsz > 1 and global_batch % dsz == 0 and global_batch > 1:
-            for i in range(1, ndim):
-                if shape[i] == global_batch:
-                    dp_dim = i
-                    spec[i] = dp
-                    break
-        elif dsz > 1:
-            # batch too small: context-parallel the sequence dim over data
-            for i in range(1, ndim):
-                if shape[i] == seq_len and seq_len % dsz == 0:
-                    dp_dim = i
-                    spec[i] = dp
-                    break
-        if md > 1:
-            mdim = None
-            if context_parallel:
-                for i in range(1, ndim):
-                    if i != dp_dim and shape[i] == seq_len and \
-                            seq_len % md == 0:
-                        mdim = i
-                        break
-            if mdim is None and not context_parallel:
-                best = -1
-                for i in range(1, ndim):
-                    if i == dp_dim or shape[i] == seq_len:
-                        continue
-                    if shape[i] % md == 0 and shape[i] >= md and shape[i] > best:
-                        best = shape[i]
-                        mdim = i
-            if mdim is not None:
-                spec[mdim] = "model"
-        return NamedSharding(mesh, P(*spec))
-    return jax.tree_util.tree_map_with_path(one, tree)
-
-
-def replicated(tree: Any, mesh):
-    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
-
-
-def describe_shardings(tree, shardings, max_rows: int = 0):
-    """Human-readable (path, shape, spec) table for DESIGN/EXPERIMENTS."""
-    rows = []
-    flat_t = jax.tree_util.tree_flatten_with_path(tree)[0]
-    flat_s = jax.tree_util.tree_leaves(
-        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
-    for (path, leaf), sh in zip(flat_t, flat_s):
-        rows.append(("/".join(_key_names(path)), tuple(leaf.shape),
-                     str(sh.spec)))
-    if max_rows:
-        rows = rows[:max_rows]
-    return rows
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "replicated", "describe_shardings"]

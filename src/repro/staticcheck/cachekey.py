@@ -308,8 +308,30 @@ REGISTRY: Dict[Tuple[str, str], Any] = {
     ("ExecutionSpec", "devices"): Perturb(
         "piag/sharded", lambda s: _ex(s, backend="sharded", devices=1)),
     ("ExecutionSpec", "mesh"): Skip(
-        "prebuilt-Mesh escape hatch; the mesh object rides the sharded "
-        "cache key itself (hashable), so a different mesh keys fresh"),
+        "prebuilt-Mesh escape hatch; meshes ride the sharded cache keys by "
+        "TOPOLOGY (repro.mesh.mesh_topology: axis names + shape + device "
+        "kind + process count), so any mesh with a different topology keys "
+        "fresh while same-topology meshes deliberately share the executable "
+        "(cells are placement-agnostic)"),
+    # a (1, 1) grid mesh works on the single-device static-analysis lane:
+    # the psum over a size-1 "data" axis is still a distinct jaxpr AND a
+    # distinct mesh_topology (axes/shape change), so the key must move
+    ("ExecutionSpec", "mesh_shape"): Perturb(
+        "piag/sharded", lambda s: _ex(s, backend="sharded",
+                                      mesh_shape=(1, 1))),
+    ("ExecutionSpec", "coordinator"): Skip(
+        "multi-host bootstrap address, consumed ONCE by "
+        "jax.distributed.initialize before the mesh is built; it never "
+        "reaches a traced program, and the resulting process count rides "
+        "every sharded cache key via mesh_topology"),
+    ("ExecutionSpec", "num_processes"): Skip(
+        "multi-host process-grid size, consumed by "
+        "jax.distributed.initialize only; the live process count is keyed "
+        "via mesh_topology, so a different world size keys fresh"),
+    ("ExecutionSpec", "process_id"): Skip(
+        "selects THIS host's slot in the process grid at initialize time; "
+        "never reaches a traced program and must NOT key programs (every "
+        "process must build the same executable for the same spec)"),
     # padding a 3-worker grid to width-4 buckets needs 4 rows of worker
     # data, so the problem is widened alongside (both changes ride the key)
     ("ExecutionSpec", "bucket_widths"): Perturb(
@@ -475,11 +497,20 @@ REPRESENTATIVE: List[Tuple[str, Callable[[], ExperimentSpec]]] = [
     ("bcd", BASES["bcd"]),
     ("fedasync", BASES["fedasync"]),
     ("fedbuff", BASES["fedbuff"]),
+    # 2-D mesh representative: (1, 1) builds on one device; the psum'd
+    # gradient and the reshaped mesh_topology make this a distinct program
+    # from the plain sharded base by design
+    ("piag sharded 2-D mesh",
+     lambda: base_spec("piag",
+                       execution=ExecutionSpec(backend="sharded",
+                                               mesh_shape=(1, 1)))),
 ]
 
 # exact number of distinct (key, in_avals) programs the matrix may build;
 # raising it needs a deliberate edit here (a retrace regression otherwise)
-RETRACE_BUDGET = 6
+# 6 -> 7: the 2-D (cells, data) mesh representative compiles its own
+# program (pmean_grad psum + distinct mesh_topology key) -- intentional
+RETRACE_BUDGET = 7
 
 
 def check_retrace_budget() -> Tuple[int, List[str]]:

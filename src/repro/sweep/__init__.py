@@ -21,9 +21,10 @@ package turns a whole grid into ONE compiled XLA program per bucket, and
   server scan under the same jit (``reference=True`` falls back to the
   heapq twin).
 * ``shard``     -- ``sharded_sweep_*``: the same cell programs with the cell
-  axis partitioned across a 1-D device mesh via ``shard_map`` (donated
-  input buffers, round-robin batch padding) -- mega-grids at device-count
-  scaling.
+  axis partitioned across a ``("cells",)`` or 2-D ``("cells", "data")``
+  device mesh via ``shard_map`` (donated input buffers, round-robin batch
+  padding; 2-D meshes additionally psum per-worker gradients over the data
+  axis -- see ``repro.mesh``) -- mega-grids at device-count scaling.
 
 Quick taste::
 
@@ -53,9 +54,9 @@ from .runners import (make_sweep_bcd, make_sweep_fedasync,
                       sweep_bcd_logreg, sweep_fedasync,
                       sweep_fedasync_problem, sweep_fedbuff,
                       sweep_fedbuff_problem, sweep_piag, sweep_piag_logreg)
-from .shard import (cell_mesh, make_sharded_sweep_bcd,
-                    make_sharded_sweep_piag, round_robin_pad, shard_cells,
-                    sharded_sweep_bcd, sharded_sweep_fedasync,
+from .shard import (cell_mesh, grid_mesh, make_sharded_sweep_bcd,
+                    make_sharded_sweep_piag, mesh_topology, round_robin_pad,
+                    shard_cells, sharded_sweep_bcd, sharded_sweep_fedasync,
                     sharded_sweep_fedbuff, sharded_sweep_piag,
                     sharded_sweep_piag_logreg)
 
@@ -70,7 +71,8 @@ __all__ = [
     "run_bucketed", "sweep_bcd", "sweep_bcd_logreg", "sweep_fedasync",
     "sweep_fedasync_problem", "sweep_fedbuff", "sweep_fedbuff_problem",
     "sweep_piag", "sweep_piag_logreg",
-    "cell_mesh", "make_sharded_sweep_bcd", "make_sharded_sweep_piag",
+    "cell_mesh", "grid_mesh", "mesh_topology",
+    "make_sharded_sweep_bcd", "make_sharded_sweep_piag",
     "round_robin_pad", "shard_cells", "sharded_sweep_bcd",
     "sharded_sweep_fedasync", "sharded_sweep_fedbuff", "sharded_sweep_piag",
     "sharded_sweep_piag_logreg",

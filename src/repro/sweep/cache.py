@@ -9,7 +9,10 @@ object*; the missing piece is keeping the function objects alive and keyed.
 ``cached_program(key, build)`` is that piece: an LRU keyed on the program's
 static configuration -- ``(solver tag, bucket width, masked?, horizon,
 record_every, ... , captured objects)``.  Captured objects (loss closures,
-data pytrees, prox ops, meshes) are keyed by IDENTITY via ``IdKey``; the
+data pytrees, prox ops) are keyed by IDENTITY via ``IdKey``; meshes ride
+keys as ``repro.mesh.mesh_topology`` tuples -- TOPOLOGY, not identity, so a
+reshaped or rebuilt mesh with the same axes/shape/device-kind/process-count
+reuses the executable while a 1-D vs 2-D reshape keys fresh.  The
 cache holds a strong reference through the key, so an id can never be
 recycled while its entry lives.  Two calls that pass the *same* objects and
 static knobs therefore reuse the same jitted callable -- and jax's own
@@ -50,7 +53,7 @@ import numpy as np
 from repro.telemetry.timing import record_timing
 
 __all__ = ["IdKey", "LRU", "tree_key", "cached_program",
-           "clear_program_cache", "program_cache_stats",
+           "clear_program_cache", "mesh_fingerprint", "program_cache_stats",
            "set_capture_hook", "PROGRAM_CACHE_MAXSIZE"]
 
 PROGRAM_CACHE_MAXSIZE = 128
@@ -149,13 +152,38 @@ def _cache_check_enabled() -> bool:
 def _captured_arrays(key: Any, path: str = "key"):
     """Yield ``(path, IdKey)`` for every identity-keyed array inside a
     (possibly nested) key tuple -- numpy buffers and jax Arrays both; other
-    captures (closures, prox ops, meshes) have no mutable numeric payload
-    worth hashing."""
+    captures (closures, prox ops) have no mutable numeric payload worth
+    hashing.  Meshes are fingerprinted separately (``_captured_meshes``)."""
     if isinstance(key, tuple):
         for i, el in enumerate(key):
             yield from _captured_arrays(el, f"{path}[{i}]")
     elif isinstance(key, IdKey) and isinstance(key.obj, (np.ndarray, jax.Array)):
         yield path, key
+
+
+def _captured_meshes(key: Any, path: str = "key"):
+    """Yield ``(path, Mesh)`` for every ``jax.sharding.Mesh`` inside a key,
+    raw or ``IdKey``-wrapped.  The sharded runners key by
+    ``repro.mesh.mesh_topology`` tuples (plain hashables, nothing to
+    fingerprint), but external/legacy keys may still carry Mesh objects --
+    those fingerprint by TOPOLOGY (axis names, shape, device kind, process
+    count), not value identity, matching the runner contract that
+    same-topology meshes share executables."""
+    if isinstance(key, tuple):
+        for i, el in enumerate(key):
+            yield from _captured_meshes(el, f"{path}[{i}]")
+    elif isinstance(key, jax.sharding.Mesh):
+        yield path, key
+    elif isinstance(key, IdKey) and isinstance(key.obj, jax.sharding.Mesh):
+        yield path, key.obj
+
+
+def mesh_fingerprint(mesh) -> str:
+    """Topology fingerprint of a mesh: stringified
+    ``repro.mesh.mesh_topology`` (axis names + shape + device kind +
+    process count)."""
+    from repro.mesh import mesh_topology
+    return str(mesh_topology(mesh))
 
 
 def _array_fingerprint(obj: Any) -> str:
@@ -174,8 +202,10 @@ def _array_fingerprint(obj: Any) -> str:
 
 
 def _key_fingerprints(key: Tuple) -> Tuple:
-    return tuple((path, _array_fingerprint(ik.obj))
-                 for path, ik in _captured_arrays(key))
+    return (tuple((path, _array_fingerprint(ik.obj))
+                  for path, ik in _captured_arrays(key)) +
+            tuple((path, mesh_fingerprint(m))
+                  for path, m in _captured_meshes(key)))
 
 
 def _verify_fingerprints(key: Tuple) -> None:

@@ -176,13 +176,15 @@ def _cell_seeds(b: SweepBucket) -> jnp.ndarray:
 
 def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
                use_tau_max, masked, record_every=1, telemetry=None,
-               engine="scan", faults=None):
+               engine="scan", faults=None, grad_fn=None):
     """The per-cell program (trace generation fused with the solver scan);
     ``jax.vmap`` of this is the batched program, ``shard_map(vmap(...))``
     the sharded one.  With ``faults`` the cell signature grows a trailing
     per-cell ``seed`` (i32 scalar): service times are fault-injected before
     the trace scan and the per-event codes drawn from the same seed, all
-    inside the one executable."""
+    inside the one executable.  ``grad_fn`` is the 2-D mesh seam: the
+    sharded runner injects ``pmean_grad`` so worker gradients psum over the
+    mesh's data axis (None everywhere else -- off-is-absent)."""
     if faults is not None:
         def faulted(T, active, pp, seed):
             T = inject_service_times(T, faults, seed)
@@ -194,7 +196,8 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, active=active,
                              record_every=record_every, telemetry=telemetry,
-                             engine=engine, faults=faults, fault_codes=codes)
+                             engine=engine, faults=faults, fault_codes=codes,
+                             grad_fn=grad_fn)
         if masked:
             return lambda T, active, pp, seed: faulted(T, active, pp, seed)
         return lambda T, pp, seed: faulted(T, None, pp, seed)
@@ -206,7 +209,7 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, active=active,
                              record_every=record_every, telemetry=telemetry,
-                             engine=engine)
+                             engine=engine, grad_fn=grad_fn)
     else:
         def cell(T, pp):
             tr = trace_scan(T)
@@ -214,7 +217,8 @@ def _piag_cell(worker_loss, x0, worker_data, prox, objective, horizon,
             return piag_scan(worker_loss, x0, worker_data, events,
                              ParamPolicy(pp), prox, objective=objective,
                              horizon=horizon, record_every=record_every,
-                             telemetry=telemetry, engine=engine)
+                             telemetry=telemetry, engine=engine,
+                             grad_fn=grad_fn)
     return cell
 
 
